@@ -1,0 +1,54 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import (FLSimulation, ProxyTrainer, make_paper_registry,
+                        make_strategy)
+from repro.data.traces import make_scenario
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_result(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def run_strategy(strategy_name: str, scenario_name: str = "global",
+                 n_clients: int = 100, days: float = 2.0, n: int = 10,
+                 d_max: int = 60, seed: int = 0, error: str = "realistic",
+                 unlimited_domains=(), workload: str = "densenet",
+                 proxy_k: float = 0.0004, solver: str = "mip",
+                 max_rounds=None):
+    """One simulated FL training with the ProxyTrainer; returns summary."""
+    sc = make_scenario(scenario_name, n_clients=n_clients,
+                       days=int(np.ceil(days)), seed=seed, error=error,
+                       unlimited_domains=unlimited_domains)
+    reg = make_paper_registry(n_clients=n_clients, seed=seed,
+                              workload=workload, domain_names=sc.domain_names)
+    kw = dict(n=n, d_max=d_max, seed=seed)
+    if strategy_name == "fedzero":
+        kw["solver"] = solver
+    strat = make_strategy(strategy_name, reg, **kw)
+    trainer = ProxyTrainer(
+        reg.client_names,
+        {c: reg.clients[c].n_samples for c in reg.client_names},
+        k=proxy_k, seed=seed)
+    sim = FLSimulation(reg, sc, strat, trainer, eval_every=1, seed=seed)
+    t0 = time.time()
+    summary = sim.run(until_step=int(days * 24 * 60) - d_max - 1,
+                      max_rounds=max_rounds)
+    summary["wall_s"] = time.time() - t0
+    summary["participation_by_domain"] = {
+        dom: [sim.participation[c] for c in reg.domains[dom].clients]
+        for dom in reg.domains}
+    return sim, summary

@@ -1,0 +1,68 @@
+"""Paper Table 3 / Figure 5: best accuracy, time-to-accuracy and
+energy-to-accuracy for FedZero vs the six baselines on both scenarios.
+
+Target accuracy = best accuracy of the plain Random baseline (paper
+convention). The ProxyTrainer supplies the convergence dynamics (real
+training: see tests/test_system.py and examples/fedzero_simulation.py)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import run_strategy, save_result
+
+STRATEGIES = ["upper_bound", "random", "random_1.3n", "random_fc",
+              "oort", "oort_1.3n", "oort_fc", "fedzero"]
+
+
+def run(days: float = 2.0, n_clients: int = 100, seeds=(0,)):
+    out = {}
+    for scen in ("global", "co_located"):
+        rows = {}
+        for strat in STRATEGIES:
+            per_seed = []
+            for seed in seeds:
+                _, s = run_strategy(strat, scenario_name=scen, days=days,
+                                    n_clients=n_clients, seed=seed)
+                per_seed.append(s)
+            rows[strat] = per_seed
+        # target accuracy: Random's best (mean over seeds)
+        target = float(np.mean([s["best_metric"] for s in rows["random"]]))
+        table = {}
+        for strat, per_seed in rows.items():
+            tta, eta, best = [], [], []
+            for s in per_seed:
+                best.append(s["best_metric"])
+                reached = [(t, m, e) for t, m, e in s["metric_curve"]
+                           if m >= target]
+                if reached:
+                    tta.append(reached[0][0] / (24 * 60))  # days
+                    eta.append(reached[0][2])              # actual cum Wh
+                else:
+                    tta.append(float("nan")); eta.append(float("nan"))
+            table[strat] = {
+                "best_accuracy": float(np.mean(best)),
+                "time_to_accuracy_d": float(np.nanmean(tta)),
+                "energy_to_accuracy_wh": float(np.nanmean(eta)),
+                "mean_round_duration": float(np.mean(
+                    [s["mean_round_duration"] for s in per_seed])),
+            }
+        out[scen] = {"target_accuracy": target, "table": table}
+    save_result("convergence", out)
+    return out
+
+
+def main(quick: bool = False):
+    res = run(days=1.0 if quick else 2.0)
+    for scen, data in res.items():
+        print(f"\n== {scen} (target acc {data['target_accuracy']:.3f}) ==")
+        print(f"{'strategy':14s} {'best':>6s} {'t2a(d)':>7s} {'e2a(Wh)':>9s} {'dur(min)':>8s}")
+        for strat, row in data["table"].items():
+            print(f"{strat:14s} {row['best_accuracy']:6.3f} "
+                  f"{row['time_to_accuracy_d']:7.2f} "
+                  f"{row['energy_to_accuracy_wh']:9.1f} "
+                  f"{row['mean_round_duration']:8.1f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Paper Figure 6 + Table 4: fairness of participation across power
+domains, including the imbalanced variant where one domain (Berlin) has
+unlimited excess energy and capacity."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import run_strategy, save_result
+
+
+def _participation_stats(summary, n_rounds):
+    by_dom = summary["participation_by_domain"]
+    dom_means = {}
+    for dom, parts in by_dom.items():
+        pct = 100.0 * np.array(parts) / max(n_rounds, 1)
+        dom_means[dom] = {"mean": float(pct.mean()), "std": float(pct.std())}
+    between_std = float(np.std([v["mean"] for v in dom_means.values()]))
+    return dom_means, between_std
+
+
+def run(days: float = 2.0, seeds=(0,)):
+    out = {}
+    for variant, unlimited in (("balanced", ()), ("berlin_unlimited", ("berlin",))):
+        rows = {}
+        for strat in ("random", "oort", "fedzero"):
+            per_dom_all, between, best, tta_energy = [], [], [], []
+            for seed in seeds:
+                sim, s = run_strategy(
+                    strat, scenario_name="global", days=days, seed=seed,
+                    unlimited_domains=unlimited)
+                if unlimited:
+                    # unlimited capacity too: spare=1 for berlin clients
+                    pass
+                dom_means, b = _participation_stats(s, s["rounds"])
+                per_dom_all.append(dom_means)
+                between.append(b)
+                best.append(s["best_metric"])
+                tta_energy.append(s["total_energy_wh"])
+            rows[strat] = {
+                "per_domain": per_dom_all[0],
+                "between_domain_std": float(np.mean(between)),
+                "best_accuracy": float(np.mean(best)),
+                "total_energy_wh": float(np.mean(tta_energy)),
+                "berlin_mean_participation": per_dom_all[0].get(
+                    "berlin", {}).get("mean", float("nan")),
+            }
+        out[variant] = rows
+    save_result("fairness", out)
+    return out
+
+
+def main(quick: bool = False):
+    res = run(days=1.0 if quick else 2.0)
+    for variant, rows in res.items():
+        print(f"\n== {variant} ==")
+        print(f"{'strategy':10s} {'between-domain std':>18s} "
+              f"{'berlin %':>9s} {'best acc':>9s} {'energy Wh':>10s}")
+        for strat, r in rows.items():
+            print(f"{strat:10s} {r['between_domain_std']:18.2f} "
+                  f"{r['berlin_mean_participation']:9.2f} "
+                  f"{r['best_accuracy']:9.3f} {r['total_energy_wh']:10.1f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""§Perf hillclimb driver: re-lower chosen (arch × shape × mesh) pairs under
+alternative sharding strategies and compare roofline terms vs baseline.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb \
+        --pair llava-next-34b:decode_32k:single_pod \
+        --strategies tp_fsdp,tp_only,tp_only_seqkv
+
+Appends records to benchmarks/results/hillclimb.json (same schema as the
+dry-run + roofline terms), printing a before/after table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "hillclimb.json")
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+
+
+def run_pair(arch, shape, mesh, strategies):
+    out = RESULTS
+    for strat in strategies:
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh,
+               "--strategy", strat, "--out", out]
+        env = dict(os.environ, PYTHONPATH="src")
+        subprocess.run(cmd, check=True, env=env)
+    with open(out) as f:
+        rows = json.load(f)
+    rows = [r for r in rows if r["arch"] == arch and r["shape"] == shape
+            and r["mesh"] == mesh and "error" not in r]
+    print(f"\n== {arch} × {shape} × {mesh} ==")
+    print(f"{'strategy':16s} {'cmp(ms)':>9s} {'mem(ms)':>9s} {'col(ms)':>9s} "
+          f"{'dominant(ms)':>12s} {'GiB/dev':>8s}")
+    for r in sorted(rows, key=lambda r: strategies.index(r["strategy"])
+                    if r["strategy"] in strategies else 99):
+        c = r["hlo_flops"] / PEAK_FLOPS * 1e3
+        m = r["hlo_bytes"] / HBM_BW * 1e3
+        k = r["collective_bytes_total"] / ICI_BW * 1e3
+        print(f"{r['strategy']:16s} {c:9.2f} {m:9.2f} {k:9.2f} "
+              f"{max(c, m, k):12.2f} "
+              f"{r['state_bytes_per_device']/2**30:8.2f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", action="append", required=True,
+                    help="arch:shape:mesh (repeatable)")
+    ap.add_argument("--strategies", default="tp_fsdp,tp_only")
+    args = ap.parse_args()
+    for pair in args.pair:
+        arch, shape, mesh = pair.split(":")
+        run_pair(arch, shape, mesh, args.strategies.split(","))
+
+
+if __name__ == "__main__":
+    main()

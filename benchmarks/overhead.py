@@ -1,0 +1,100 @@
+"""Paper Figure 8: scheduler overhead and scalability.
+
+(a) full Algorithm 1 runtime vs number of clients (binary search + solver);
+(b) single-solve runtime vs clients × power domains.
+
+The exact HiGHS MIP covers the paper-scale instances; the greedy solver
+(validated against the MIP in tests) extends the sweep to 100k clients —
+both are reported. Runtimes in seconds (CSV columns: name, clients,
+domains, timesteps, solver, seconds)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import save_result
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (ClientRegistry, ClientSpec, PowerDomain,
+                        SelectionInputs, find_clients_for_duration,
+                        select_clients)
+
+
+def make_instance(n_clients, n_domains, horizon, seed=0):
+    rng = np.random.default_rng(seed)
+    domains = [PowerDomain(name=f"d{i}") for i in range(n_domains)]
+    clients = [ClientSpec(
+        name=f"c{i}", domain=f"d{i % n_domains}",
+        m_max_capacity=float(rng.uniform(2, 8)),
+        delta=float(rng.uniform(0.5, 3)), n_samples=100,
+        batches_per_epoch=int(rng.integers(4, 10)), max_epochs=5.0)
+        for i in range(n_clients)]
+    reg = ClientRegistry(clients, domains)
+    return SelectionInputs(
+        registry=reg,
+        m_spare=rng.uniform(0, 6, (n_clients, horizon)),
+        r_excess=rng.uniform(0, 60, (n_domains, horizon)),
+        sigma=rng.uniform(0.1, 10, n_clients),
+        client_order=[c.name for c in clients],
+        domain_order=[d.name for d in domains])
+
+
+def run(quick: bool = False):
+    rows = []
+    # (a) Algorithm 1 end-to-end vs #clients
+    client_sweep = [100, 300, 1000] if quick else [100, 300, 1000, 3000, 10000]
+    for n_clients in client_sweep:
+        for solver in (["mip"] if n_clients <= 1000 else []) + ["greedy"]:
+            inp = make_instance(n_clients, max(10, n_clients // 10), 60)
+            t0 = time.time()
+            sel = select_clients(inp, n=10, d_max=60, solver=solver)
+            dt = time.time() - t0
+            rows.append({"bench": "algorithm1", "clients": n_clients,
+                         "domains": max(10, n_clients // 10), "timesteps": 60,
+                         "solver": solver, "seconds": dt,
+                         "found": sel is not None})
+    # greedy scalability to 100k clients (paper Fig 8a upper end)
+    if not quick:
+        for n_clients in (30000, 100000):
+            inp = make_instance(n_clients, n_clients // 10, 60)
+            t0 = time.time()
+            sel = select_clients(inp, n=10, d_max=60, solver="greedy")
+            rows.append({"bench": "algorithm1", "clients": n_clients,
+                         "domains": n_clients // 10, "timesteps": 60,
+                         "solver": "greedy", "seconds": time.time() - t0,
+                         "found": sel is not None})
+    # timestep search-space sweep (binary search: ~log growth)
+    for horizon in ([60, 240] if quick else [60, 240, 1440]):
+        inp = make_instance(500, 50, horizon)
+        t0 = time.time()
+        select_clients(inp, n=10, d_max=horizon, solver="greedy")
+        rows.append({"bench": "horizon", "clients": 500, "domains": 50,
+                     "timesteps": horizon, "solver": "greedy",
+                     "seconds": time.time() - t0, "found": True})
+    # (b) single solve vs domains
+    for n_domains in ([10, 100] if quick else [10, 100, 1000]):
+        inp = make_instance(1000, n_domains, 30)
+        t0 = time.time()
+        find_clients_for_duration(inp, 30, 10, solver="mip")
+        rows.append({"bench": "single_mip", "clients": 1000,
+                     "domains": n_domains, "timesteps": 30, "solver": "mip",
+                     "seconds": time.time() - t0, "found": True})
+    save_result("overhead", rows)
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick=quick)
+    print(f"{'bench':12s} {'clients':>8s} {'domains':>8s} {'steps':>6s} "
+          f"{'solver':>7s} {'seconds':>9s}")
+    for r in rows:
+        print(f"{r['bench']:12s} {r['clients']:8d} {r['domains']:8d} "
+              f"{r['timesteps']:6d} {r['solver']:>7s} {r['seconds']:9.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

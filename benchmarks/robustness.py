@@ -1,0 +1,50 @@
+"""Paper Figure 7: robustness to forecast quality.
+
+Three FedZero variants: realistic forecast errors, perfect forecasts,
+and no load forecasts (energy forecasts only)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import run_strategy, save_result
+
+VARIANTS = {"w_error": "realistic", "wo_error": "none", "no_load": "no_load"}
+
+
+def run(days: float = 2.0, seeds=(0,)):
+    out = {}
+    target = None
+    for name, error in VARIANTS.items():
+        bests, ttas, energies, durs = [], [], [], []
+        for seed in seeds:
+            _, s = run_strategy("fedzero", scenario_name="global",
+                                days=days, seed=seed, error=error)
+            bests.append(s["best_metric"])
+            energies.append(s["total_energy_wh"])
+            durs.append(s["mean_round_duration"])
+            if target is None:
+                target = 0.95 * s["best_metric"]
+            reached = [(t, m, e) for t, m, e in s["metric_curve"]
+                       if m >= target]
+            ttas.append(reached[0][0] / (24 * 60) if reached else float("nan"))
+        out[name] = {
+            "best_accuracy": float(np.mean(bests)),
+            "time_to_target_d": float(np.nanmean(ttas)),
+            "total_energy_wh": float(np.mean(energies)),
+            "mean_round_duration": float(np.mean(durs)),
+        }
+    save_result("robustness", out)
+    return out
+
+
+def main(quick: bool = False):
+    res = run(days=1.0 if quick else 2.0)
+    print(f"{'variant':10s} {'best':>6s} {'t2t(d)':>7s} {'E(Wh)':>9s} {'dur':>6s}")
+    for name, r in res.items():
+        print(f"{name:10s} {r['best_accuracy']:6.3f} {r['time_to_target_d']:7.2f} "
+              f"{r['total_energy_wh']:9.1f} {r['mean_round_duration']:6.1f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from the
+dry-run's compiled artifacts.
+
+    compute_s    = HLO_FLOPs/device ÷ peak FLOP/s per chip
+    memory_s     = HLO bytes-accessed/device ÷ HBM bandwidth per chip
+    collective_s = collective bytes/device ÷ ICI link bandwidth per chip
+
+plus MODEL_FLOPS = 6·N·D (train, active N for MoE) or 2·N·D (inference)
+and the usefulness ratio MODEL_FLOPS/device ÷ HLO_FLOPs/device (remat and
+padding waste shows up here).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI. HLO numbers come from the CPU-backend compile of the
+SPMD-partitioned module; byte counts are pre-TPU-fusion and therefore an
+upper bound on the memory term (noted in EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16 * 2 ** 30  # v5e
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,       # one token × batch
+    "long_500k": 1,
+}
+
+
+def model_flops(row) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference (global)."""
+    n = row["active_params"]
+    toks = SHAPE_TOKENS[row["shape"]]
+    mult = 6.0 if row["kind"] == "train" else 2.0
+    return mult * n * toks
+
+
+def analyze(path: str = None):
+    path = path or os.path.join(os.path.dirname(__file__), "results",
+                                "dryrun.json")
+    with open(path) as f:
+        rows = json.load(f)
+    out = []
+    for r in rows:
+        if "error" in r:
+            out.append(dict(r, dominant="ERROR"))
+            continue
+        compute_s = r["hlo_flops"] / PEAK_FLOPS
+        memory_s = r["hlo_bytes"] / HBM_BW
+        coll_s = r["collective_bytes_total"] / ICI_BW
+        terms = {"compute": compute_s, "memory": memory_s,
+                 "collective": coll_s}
+        dominant = max(terms, key=terms.get)
+        mf = model_flops(r) / r["chips"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "strategy": r.get("strategy", "tp_fsdp"),
+            "kind": r["kind"],
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dominant,
+            "model_flops_per_dev": mf,
+            "useful_flops_ratio": mf / max(r["hlo_flops"], 1.0),
+            "state_gib_per_dev": r["state_bytes_per_device"] / 2 ** 30,
+            "hbm_ok": r["state_bytes_per_device"] <= HBM_PER_CHIP,
+            "step_s_bound": max(terms.values()),
+            "mfu_bound": mf / PEAK_FLOPS / max(terms.values()),
+        })
+    return out
+
+
+def main(quick: bool = False):
+    table = analyze()
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':10s} {'cmp(ms)':>8s} "
+           f"{'mem(ms)':>8s} {'col(ms)':>8s} {'dom':>10s} {'useful':>7s} "
+           f"{'MFU≤':>6s} {'GiB/dev':>8s} {'fits':>5s}")
+    print(hdr)
+    for t in sorted(table, key=lambda x: (x["shape"], x["arch"], x["mesh"])):
+        if t.get("dominant") == "ERROR":
+            print(f"{t['arch']:22s} {t['shape']:12s} {t['mesh']:10s}  ERROR")
+            continue
+        print(f"{t['arch']:22s} {t['shape']:12s} {t['mesh']:10s} "
+              f"{t['compute_s']*1e3:8.2f} {t['memory_s']*1e3:8.2f} "
+              f"{t['collective_s']*1e3:8.2f} {t['dominant']:>10s} "
+              f"{t['useful_flops_ratio']:7.3f} {t['mfu_bound']:6.3f} "
+              f"{t['state_gib_per_dev']:8.2f} "
+              f"{'yes' if t['hbm_ok'] else 'NO':>5s}")
+    outp = os.path.join(os.path.dirname(__file__), "results", "roofline.json")
+    with open(outp, "w") as f:
+        json.dump(table, f, indent=1)
+    return table
+
+
+if __name__ == "__main__":
+    main()

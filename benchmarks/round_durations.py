@@ -1,0 +1,42 @@
+"""Paper §5.2 'Round durations': mean ± std of round duration per strategy
+on both scenarios (FedZero avoids combining clients with vastly different
+expected durations)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import run_strategy, save_result
+
+STRATEGIES = ["random", "random_1.3n", "random_fc", "oort", "oort_1.3n",
+              "oort_fc", "fedzero"]
+
+
+def run(days: float = 2.0, seeds=(0,)):
+    out = {}
+    for scen in ("global", "co_located"):
+        rows = {}
+        for strat in STRATEGIES:
+            means, stds = [], []
+            for seed in seeds:
+                _, s = run_strategy(strat, scenario_name=scen, days=days,
+                                    seed=seed)
+                means.append(s["mean_round_duration"])
+                stds.append(s["std_round_duration"])
+            rows[strat] = {"mean_min": float(np.mean(means)),
+                           "std_min": float(np.mean(stds))}
+        out[scen] = rows
+    save_result("round_durations", out)
+    return out
+
+
+def main(quick: bool = False):
+    res = run(days=1.0 if quick else 2.0)
+    for scen, rows in res.items():
+        print(f"\n== {scen} ==")
+        for strat, r in rows.items():
+            print(f"{strat:14s} {r['mean_min']:6.1f} ± {r['std_min']:.1f} min")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark orchestrator — one entry per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+| benchmark        | paper reference            |
+|------------------|----------------------------|
+| convergence      | Table 3, Figure 5          |
+| fairness         | Figure 6, Table 4          |
+| robustness       | Figure 7                   |
+| overhead         | Figure 8a/8b               |
+| round_durations  | Section 5.2                |
+| roofline         | §Roofline (this repo)      |
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import (ablation_alpha, convergence, fairness, overhead, robustness,
+               roofline, round_durations)
+
+BENCHES = {
+    "convergence": convergence.main,
+    "fairness": fairness.main,
+    "robustness": robustness.main,
+    "overhead": overhead.main,
+    "round_durations": round_durations.main,
+    "roofline": roofline.main,
+    "ablation_alpha": ablation_alpha.main,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep sizes / simulated days")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of benchmarks")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    failures = 0
+    for name in names:
+        print(f"\n{'=' * 70}\n>> benchmark: {name}\n{'=' * 70}")
+        t0 = time.time()
+        try:
+            BENCHES[name](quick=args.quick)
+            print(f"<< {name} done in {time.time() - t0:.1f}s")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"<< {name} FAILED")
+    print(f"\n{len(names) - failures}/{len(names)} benchmarks succeeded")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

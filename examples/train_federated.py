@@ -1,0 +1,63 @@
+"""End-to-end driver: REAL federated training of a conv net on synthetic
+non-iid image data (Dirichlet α=0.5), scheduled by FedZero on solar excess
+energy, with FedProx local training — the paper's full loop.
+
+    PYTHONPATH=src python examples/train_federated.py \
+        [--rounds 20] [--clients 20] [--strategy fedzero]
+
+Each round: forecast -> MIP selection -> clients train ≥m_min batches under
+their domain's power budget -> FedAvg aggregation -> Oort-utility +
+blocklist update. Prints accuracy on a held-out test set as it converges.
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import (FLSimulation, JaxTrainer, make_paper_registry,
+                        make_strategy)
+from repro.data.federated import synthetic_classification
+from repro.data.traces import make_scenario
+from repro.models import ConvNet
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--strategy", default="fedzero")
+    ap.add_argument("--n", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    sc = make_scenario("global", n_clients=args.clients, days=7, seed=args.seed)
+    reg = make_paper_registry(n_clients=args.clients, seed=args.seed,
+                              domain_names=sc.domain_names)
+    data = synthetic_classification(
+        args.clients, reg.client_names, n_classes=10, n_samples=4000,
+        hw=12, alpha=0.5, seed=args.seed)
+    for c in reg.client_names:
+        reg.clients[c].n_samples = data.n_samples(c)
+        reg.clients[c].batches_per_epoch = max(1, data.n_samples(c) // 10)
+
+    model = ConvNet(n_classes=10, channels=(16, 32), hw=12)
+    trainer = JaxTrainer(model, data, lr=0.05, prox_mu=0.1, seed=args.seed,
+                         max_steps_per_round=30)
+    strat = make_strategy(args.strategy, reg, n=args.n, d_max=60,
+                          seed=args.seed)
+    sim = FLSimulation(reg, sc, strat, trainer, eval_every=1, seed=args.seed)
+    summary = sim.run(max_rounds=args.rounds, verbose=True)
+
+    print(f"\nfinal accuracy: {summary['best_metric']:.3f} "
+          f"(chance = 0.100)")
+    print(f"energy used:   {summary['total_energy_wh']:.1f} Wh "
+          f"(all renewable excess)")
+    print(f"sim time:      {summary['sim_minutes'] / 60:.1f} h over "
+          f"{summary['rounds']} rounds")
+    part = np.array(list(summary['participation'].values()))
+    print(f"participation: {part.mean():.1f} ± {part.std():.1f} rounds/client")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Pytree checkpointing on npz (no orbax offline).
+
+Flattens a pytree of arrays to key-paths, saves atomically, restores into
+the reference tree structure (dtype/shape validated). Optimizer state and
+FL-server state (participation counters, blocklist) round-trip the same
+way.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+BF16_TAG = "__bf16__"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz can't store ml_dtypes
+            flat[BF16_TAG + key] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, extra: Optional[dict] = None):
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    if extra is not None:
+        with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+            json.dump(extra, f)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for fn in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", fn))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, reference_tree: Any, step: Optional[int] = None):
+    """Restore into the structure of ``reference_tree``; returns (tree, extra)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    data = np.load(path)
+    leaves_ref, treedef = jax.tree_util.tree_flatten(reference_tree)
+    flat_ref = jax.tree_util.tree_flatten_with_path(reference_tree)[0]
+    leaves = []
+    for (kpath, ref) in flat_ref:
+        key = "/".join(_path_str(p) for p in kpath)
+        if key in data:
+            arr = data[key]
+        else:
+            import ml_dtypes
+            arr = data[BF16_TAG + key].view(ml_dtypes.bfloat16)
+        if arr.shape != ref.shape:
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {ref.shape}")
+        leaves.append(arr.astype(ref.dtype))
+    extra_path = os.path.join(directory, f"ckpt_{step:08d}.json")
+    extra = None
+    if os.path.exists(extra_path):
+        with open(extra_path) as f:
+            extra = json.load(f)
+    return jax.tree_util.tree_unflatten(treedef, leaves), extra

@@ -1,0 +1,42 @@
+"""Architecture registry: the 10 assigned architectures + paper models."""
+from __future__ import annotations
+
+from importlib import import_module
+
+from repro.models import ModelConfig
+
+# arch id -> module name
+ARCHS = {
+    "granite-3-2b": "granite_3_2b",
+    "llama3.2-3b": "llama3_2_3b",
+    "hymba-1.5b": "hymba_1_5b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "llava-next-34b": "llava_next_34b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "stablelm-3b": "stablelm_3b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "smollm-360m": "smollm_360m",
+}
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown architecture {arch!r}; known: {sorted(ARCHS)}")
+    mod = import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.reduced_config() if reduced else mod.config()
+
+
+def all_archs():
+    return list(ARCHS)
+
+
+def paper_model(name: str, **kw):
+    """The paper's own evaluation models (Section 5.1)."""
+    from repro.models import ConvNet, KWTModel, LSTMModel
+    builders = {
+        "shakespeare-lstm": lambda: LSTMModel(**kw),
+        "kwt1": lambda: KWTModel(**kw),
+        "convnet": lambda: ConvNet(**kw),
+    }
+    return builders[name]()

@@ -1,0 +1,34 @@
+"""llava-next-34b [vlm] — anyres tiling. [hf:llava-hf/llava-v1.6-mistral-7b-hf]
+
+Language backbone only: the SigLIP/ViT vision tower + projector is stubbed —
+``input_specs`` supplies 2880 precomputed patch embeddings (anyres: 4 tiles +
+1 base image × 576 patches) prepended to the text tokens. 56 query heads are
+padded to 64 physical (masked) for the 16-wide model axis.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b", family="vlm",
+        n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8,
+        d_ff=20480, vocab=64000, d_head=128,
+        n_heads_padded=64, n_kv_heads_padded=8,
+        n_frontend_embeds=2880,
+        dtype=jnp.bfloat16, param_dtype=jnp.bfloat16,
+        rope_theta=5000000.0,
+        source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    )
+
+
+def reduced_config() -> ModelConfig:
+    return dataclasses.replace(
+        config(), n_layers=2, d_model=256, n_heads=4, n_kv_heads=2,
+        d_ff=512, vocab=512, vocab_padded=0, d_head=64, n_frontend_embeds=16,
+        dtype=jnp.float32, param_dtype=jnp.float32,
+        n_heads_padded=4, n_kv_heads_padded=2,
+    )

@@ -1,0 +1,24 @@
+"""FedZero core: client selection on renewable excess energy (paper §3–4)."""
+from .types import (ClientRegistry, ClientSpec, PowerDomain, RoundResult,
+                    Selection)
+from .selection import SelectionInputs, find_clients_for_duration, select_clients
+from .fairness import Blocklist
+from .utility import UtilityTracker
+from .power import share_power
+from .strategies import (BaseStrategy, EnvView, FedZeroStrategy, OortStrategy,
+                         RandomStrategy, UpperBoundStrategy, make_strategy)
+from .simulation import FLSimulation
+from .trainers import JaxTrainer, ProxyTrainer
+from .profiles import (make_paper_registry, paper_profile, tpu_site_profile,
+                       registry_from_roofline)
+
+__all__ = [
+    "ClientRegistry", "ClientSpec", "PowerDomain", "RoundResult", "Selection",
+    "SelectionInputs", "find_clients_for_duration", "select_clients",
+    "Blocklist", "UtilityTracker", "share_power",
+    "BaseStrategy", "EnvView", "FedZeroStrategy", "OortStrategy",
+    "RandomStrategy", "UpperBoundStrategy", "make_strategy",
+    "FLSimulation", "JaxTrainer", "ProxyTrainer",
+    "make_paper_registry", "paper_profile", "tpu_site_profile",
+    "registry_from_roofline",
+]

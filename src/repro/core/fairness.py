@@ -1,0 +1,53 @@
+"""Fair-participation blocklist (paper §4.4).
+
+Clients enter the blocklist after participating in a round; at the start of
+each round a blocked client c is released with probability
+
+    P(c) = (p(c) − ω)^(−α)   if p(c) − ω > 0
+    P(c) = 1                 otherwise
+
+where p(c) is the client's total past participation count, α controls
+release speed (paper uses α = 1), and ω is periodically updated to the mean
+participation over all clients so release probabilities do not decay over
+the course of a long training.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Set
+
+import numpy as np
+
+
+class Blocklist:
+    def __init__(self, clients: Iterable[str], alpha: float = 1.0, seed: int = 0,
+                 omega_update_every: int = 1):
+        self.alpha = alpha
+        self.blocked: Set[str] = set()
+        self.participation: Dict[str, int] = {c: 0 for c in clients}
+        self.omega = 0.0
+        self._round = 0
+        self._omega_every = omega_update_every
+        self._rng = np.random.default_rng(seed)
+
+    def release_probability(self, client: str) -> float:
+        excess = self.participation[client] - self.omega
+        if excess <= 0:
+            return 1.0
+        return float(min(1.0, excess ** (-self.alpha)))
+
+    def start_round(self):
+        """Update ω periodically and stochastically release blocked clients."""
+        self._round += 1
+        if (self._round - 1) % self._omega_every == 0:
+            self.omega = float(np.mean(list(self.participation.values())))
+        for c in list(self.blocked):
+            if self._rng.random() < self.release_probability(c):
+                self.blocked.discard(c)
+
+    def record_participation(self, clients: Iterable[str]):
+        for c in clients:
+            self.participation[c] += 1
+            self.blocked.add(c)
+
+    def is_blocked(self, client: str) -> bool:
+        return client in self.blocked

@@ -1,0 +1,221 @@
+"""FedZero client selection: Algorithm 1 + the per-duration MIP (paper §4.3).
+
+For each candidate round duration ``d`` (binary-searched up to d_max), we
+solve
+
+    max  Σ_c b_c · σ_c · Σ_t m_exp[c,t]
+    s.t. m_min·b_c ≤ Σ_t m_exp[c,t] ≤ m_max·b_c        ∀c      (1)
+         Σ_{c∈C_p} δ_c · m_exp[c,t] ≤ r_{p,t}          ∀p,t    (2)
+         Σ_c b_c = n                                            (3)
+         0 ≤ m_exp[c,t] ≤ m_spare[c,t]
+
+with b_c binary. The paper solves this with Gurobi; we use
+``scipy.optimize.milp`` (HiGHS). For very large instances a greedy
+waterfilling heuristic (``solver='greedy'``) reproduces the selection with
+near-identical quality at O(C·d + C log C) cost — used by the scalability
+benchmark beyond the exact-MIP comfort zone and validated against the MIP
+in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+import scipy.sparse as sp
+from scipy.optimize import Bounds, LinearConstraint, milp
+
+from .types import ClientRegistry, ClientSpec, Selection
+
+
+@dataclasses.dataclass
+class SelectionInputs:
+    """Per-round inputs to the optimizer (forecasts + utility weights)."""
+
+    registry: ClientRegistry
+    m_spare: np.ndarray        # [C, H] forecast spare capacity (batches/step)
+    r_excess: np.ndarray       # [P, H] forecast excess energy (Wmin/step)
+    sigma: np.ndarray          # [C] statistical utility (0 = blocked)
+    client_order: List[str]    # row order of m_spare/sigma
+    domain_order: List[str]    # row order of r_excess
+
+
+def _eligible(inp: SelectionInputs, d: int):
+    """Pre-filters of Algorithm 1 (lines 6, 8, 11)."""
+    reg = inp.registry
+    # line 6: domains with excess energy at every step up to d —
+    # the paper filters domains with no excess at all in [0, d); we use
+    # "any positive step" which matches its implementation intent (a domain
+    # with a single zero step can still power clients in other steps).
+    dom_ok = {p: inp.r_excess[i, :d].sum() > 0 for i, p in enumerate(inp.domain_order)}
+    dom_idx = {p: i for i, p in enumerate(inp.domain_order)}
+    eligible = []
+    for ci, cname in enumerate(inp.client_order):
+        spec = reg.clients[cname]
+        if inp.sigma[ci] <= 0:          # line 8: blocklisted
+            continue
+        if not dom_ok.get(spec.domain, False):
+            continue
+        # line 11: enough capacity+energy to reach m_min within d
+        pi = dom_idx[spec.domain]
+        reachable = np.minimum(inp.m_spare[ci, :d],
+                               inp.r_excess[pi, :d] / spec.delta).sum()
+        if reachable < spec.m_min_batches:
+            continue
+        eligible.append(ci)
+    return eligible, dom_idx
+
+
+def _solve_mip(inp: SelectionInputs, d: int, n: int, eligible: List[int],
+               dom_idx: Dict[str, int], time_limit: float = 60.0):
+    """Exact MIP via HiGHS. Returns (selected client rows, batches [k,d]) or None."""
+    reg = inp.registry
+    k = len(eligible)
+    nv = k + k * d  # b vars then m vars (client-major)
+    c_obj = np.zeros(nv)
+    specs = [reg.clients[inp.client_order[ci]] for ci in eligible]
+    for j, ci in enumerate(eligible):
+        c_obj[k + j * d : k + (j + 1) * d] = -inp.sigma[ci]  # maximize
+
+    rows, cols, vals, lo, hi = [], [], [], [], []
+    r = 0
+    # (1) m_min·b ≤ Σ m  and  Σ m ≤ m_max·b   (two rows per client)
+    for j, spec in enumerate(specs):
+        for t in range(d):
+            rows += [r, r + 1]; cols += [k + j * d + t] * 2; vals += [1.0, 1.0]
+        rows += [r]; cols += [j]; vals += [-spec.m_min_batches]
+        lo.append(0.0); hi.append(np.inf)
+        rows += [r + 1]; cols += [j]; vals += [-spec.m_max_batches]
+        lo.append(-np.inf); hi.append(0.0)
+        r += 2
+    # (2) per-domain per-step energy budget
+    dom_members: Dict[int, List[int]] = {}
+    for j, spec in enumerate(specs):
+        dom_members.setdefault(dom_idx[spec.domain], []).append(j)
+    for pi, members in dom_members.items():
+        for t in range(d):
+            for j in members:
+                rows.append(r); cols.append(k + j * d + t)
+                vals.append(specs[j].delta)
+            lo.append(-np.inf); hi.append(float(inp.r_excess[pi, t]))
+            r += 1
+    # (3) exactly n clients
+    for j in range(k):
+        rows.append(r); cols.append(j); vals.append(1.0)
+    lo.append(float(n)); hi.append(float(n))
+    r += 1
+
+    A = sp.csr_matrix((vals, (rows, cols)), shape=(r, nv))
+    ub = np.ones(nv)
+    for j, ci in enumerate(eligible):
+        ub[k + j * d : k + (j + 1) * d] = np.maximum(inp.m_spare[ci, :d], 0.0)
+    integrality = np.zeros(nv)
+    integrality[:k] = 1
+    res = milp(c=c_obj,
+               constraints=LinearConstraint(A, lo, hi),
+               bounds=Bounds(np.zeros(nv), ub),
+               integrality=integrality,
+               options={"time_limit": time_limit, "presolve": True})
+    if not res.success or res.x is None:
+        return None
+    b = res.x[:k] > 0.5
+    if b.sum() != n:
+        return None
+    sel = [j for j in range(k) if b[j]]
+    batches = np.array([res.x[k + j * d : k + (j + 1) * d] for j in sel])
+    return [eligible[j] for j in sel], batches
+
+
+def _solve_greedy(inp: SelectionInputs, d: int, n: int, eligible: List[int],
+                  dom_idx: Dict[str, int]):
+    """Greedy heuristic: rank clients by σ_c × energy-feasible batches, then
+    admit in rank order while water-filling each domain's per-step budget."""
+    reg = inp.registry
+    budget = inp.r_excess[:, :d].copy()  # remaining energy per domain/step
+    specs = {ci: reg.clients[inp.client_order[ci]] for ci in eligible}
+
+    def alloc(ci, commit):
+        spec = specs[ci]
+        pi = dom_idx[spec.domain]
+        take = np.minimum(inp.m_spare[ci, :d], budget[pi] / spec.delta)
+        cum = np.cumsum(take)
+        total = min(cum[-1] if d else 0.0, spec.m_max_batches)
+        if total < spec.m_min_batches:
+            return None
+        # cap at m_max: stop allocating once reached
+        overshoot = cum - spec.m_max_batches
+        take = np.where(overshoot > 0, np.maximum(take - overshoot, 0.0), take)
+        if commit:
+            budget[pi] -= take * spec.delta
+        return take
+
+    scored = []
+    for ci in eligible:
+        take = alloc(ci, commit=False)
+        if take is not None:
+            scored.append((inp.sigma[ci] * take.sum(), ci))
+    scored.sort(reverse=True)
+    chosen, batches = [], []
+    for _, ci in scored:
+        take = alloc(ci, commit=True)
+        if take is None:
+            continue
+        chosen.append(ci)
+        batches.append(take)
+        if len(chosen) == n:
+            return chosen, np.array(batches)
+    return None
+
+
+def find_clients_for_duration(inp: SelectionInputs, d: int, n: int,
+                              solver: str = "mip", time_limit: float = 60.0):
+    eligible, dom_idx = _eligible(inp, d)
+    if len(eligible) < n:  # Alg. 1 line 13
+        return None
+    if solver == "greedy":
+        return _solve_greedy(inp, d, n, eligible, dom_idx)
+    return _solve_mip(inp, d, n, eligible, dom_idx, time_limit)
+
+
+def select_clients(inp: SelectionInputs, n: int, d_max: int,
+                   solver: str = "mip", search: str = "binary",
+                   time_limit: float = 60.0) -> Optional[Selection]:
+    """Algorithm 1: smallest d ∈ [1, d_max] admitting a valid solution.
+
+    ``search='binary'`` exploits the monotonicity of feasibility in d
+    (paper §4.3: O(log d_max)); ``'linear'`` matches the pseudo-code
+    literally.
+    """
+    def attempt(d):
+        return find_clients_for_duration(inp, d, n, solver, time_limit)
+
+    best = None
+    if search == "linear":
+        for d in range(1, d_max + 1):
+            best = attempt(d)
+            if best is not None:
+                return _to_selection(inp, best, d)
+        return None
+    lo_d, hi_d, found, found_d = 1, d_max, None, None
+    # exponential probe then bisect on feasibility
+    while lo_d <= hi_d:
+        mid = (lo_d + hi_d) // 2
+        res = attempt(mid)
+        if res is not None:
+            found, found_d = res, mid
+            hi_d = mid - 1
+        else:
+            lo_d = mid + 1
+    if found is None:
+        return None
+    return _to_selection(inp, found, found_d)
+
+
+def _to_selection(inp: SelectionInputs, result, d: int) -> Selection:
+    rows, batches = result
+    names = [inp.client_order[ci] for ci in rows]
+    return Selection(
+        clients=names,
+        expected_duration=d,
+        expected_batches={nm: float(b.sum()) for nm, b in zip(names, batches)},
+    )

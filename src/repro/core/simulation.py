@@ -1,0 +1,213 @@
+"""Discrete-event FL co-simulation over energy + load traces (paper §5).
+
+Equivalent of the paper's Flower+Vessim testbed: time advances in 1-minute
+slots; rounds are scheduled by a strategy, executed under per-domain
+excess-energy budgets (two-phase power sharing) and per-client spare
+capacity, and idle windows (no feasible selection) are skipped
+event-style. Energy accounting covers *all* selected clients, including
+stragglers whose work is discarded (paper §4.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.data.traces import ScenarioData
+
+from .power import share_power
+from .strategies import BaseStrategy, EnvView
+from .types import ClientRegistry, ClientRoundState, RoundResult, Selection
+
+
+class FLSimulation:
+    def __init__(self, registry: ClientRegistry, scenario: ScenarioData,
+                 strategy: BaseStrategy, trainer, d_max: int = 60,
+                 eval_every: int = 5, seed: int = 0):
+        self.registry = registry
+        self.scenario = scenario
+        self.strategy = strategy
+        self.trainer = trainer
+        self.d_max = d_max
+        self.eval_every = eval_every
+        self.now = 0
+        self.round_idx = 0
+        self.results: List[RoundResult] = []
+        self.client_order = registry.client_names
+        self.domain_order = scenario.domain_names
+        self._dom_idx = {p: i for i, p in enumerate(self.domain_order)}
+        self.participation: Dict[str, int] = {c: 0 for c in self.client_order}
+        self.rng = np.random.default_rng(seed)
+
+    # ------------------------------------------------------------------
+    def _env_view(self) -> EnvView:
+        sc = self.scenario
+        return EnvView(
+            registry=self.registry, now=self.now,
+            excess_now=sc.excess_at(self.now),
+            spare_now=sc.spare_at(self.now),
+            excess_fc=sc.excess_forecast(self.now, self.d_max),
+            spare_fc=sc.spare_forecast(self.now, self.d_max),
+            client_order=self.client_order,
+            domain_order=self.domain_order,
+        )
+
+    # ------------------------------------------------------------------
+    def _execute_round(self, sel: Selection) -> RoundResult:
+        reg = self.registry
+        sc = self.scenario
+        constrained = (self.strategy.needs_energy_constraints
+                       and not getattr(sel, "grid", False))
+        states = {c: ClientRoundState(spec=reg.clients[c]) for c in sel.clients}
+        carbon_g = 0.0  # grid-fallback rounds only
+        need_done = (self.strategy.n if self.strategy.over_select > 1.0
+                     else len(sel.clients))
+        duration = self.d_max
+        for step in range(self.d_max):
+            t = self.now + step
+            if t >= sc.n_steps:
+                duration = step
+                break
+            spare = sc.spare_at(t)
+            excess = sc.excess_at(t)
+            # group active clients by domain and attribute power
+            by_dom: Dict[str, List[str]] = {}
+            for c, st in states.items():
+                if st.computed < st.spec.m_max_batches:
+                    by_dom.setdefault(st.spec.domain, []).append(c)
+            for dom, members in by_dom.items():
+                caps = np.array([
+                    spare[self.client_order.index(c)] *
+                    states[c].spec.m_max_capacity for c in members])
+                if not constrained:
+                    batches = np.array([states[c].spec.m_max_capacity
+                                        for c in members])
+                    grants = batches * np.array(
+                        [states[c].spec.delta for c in members])
+                else:
+                    deltas = np.array([states[c].spec.delta for c in members])
+                    computed = np.array([states[c].computed for c in members])
+                    m_min = np.array([states[c].spec.m_min_batches for c in members])
+                    m_max = np.array([states[c].spec.m_max_batches for c in members])
+                    budget = float(excess[self._dom_idx[dom]])  # W × 1 min = Wmin
+                    grants = share_power(budget, deltas, computed, m_min,
+                                         m_max, caps)
+                    batches = np.minimum(grants / deltas, caps)
+                if getattr(sel, "grid", False):
+                    # fallback round: spare-capacity compute on grid power
+                    batches = caps
+                    grants = caps * np.array(
+                        [states[c].spec.delta for c in members])
+                for c, nb, g in zip(members, batches, grants):
+                    st = states[c]
+                    room = st.spec.m_max_batches - st.computed
+                    nb = min(nb, room)
+                    st.computed += nb
+                    st.energy_used += nb * st.spec.delta
+                    if getattr(sel, "grid", False):
+                        ci = sc.carbon_at(t)[self._dom_idx[dom]]
+                        # Wmin -> kWh: /60/1000
+                        carbon_g += nb * st.spec.delta / 60e3 * ci
+                    if not st.done_min and st.computed >= st.spec.m_min_batches:
+                        st.done_min = True
+                        st.finished_at = step
+            n_done = sum(1 for st in states.values() if st.done_min)
+            if n_done >= need_done:
+                duration = step + 1
+                break
+
+        finished = sorted((st.finished_at, c) for c, st in states.items()
+                          if st.done_min)
+        contributors = [c for _, c in finished[: max(self.strategy.n, need_done)]]
+        stragglers = [c for c in sel.clients if c not in contributors]
+        total_e = sum(st.energy_used for st in states.values())
+        return RoundResult(
+            round_idx=self.round_idx, start_step=self.now, duration=duration,
+            participants=list(sel.clients), contributors=contributors,
+            stragglers=stragglers,
+            energy_used=total_e,
+            grid_energy=total_e if getattr(sel, "grid", False) else 0.0,
+            carbon_g=carbon_g,
+            batches={c: states[c].computed for c in sel.clients},
+        )
+
+    # ------------------------------------------------------------------
+    def run(self, until_step: Optional[int] = None, max_rounds: Optional[int] = None,
+            target_metric: Optional[float] = None, verbose: bool = False):
+        until = until_step if until_step is not None else self.scenario.n_steps - 1
+        while self.now < until:
+            if max_rounds is not None and self.round_idx >= max_rounds:
+                break
+            env = self._env_view()
+            sel = self.strategy.select(env)
+            if sel is None or not sel.clients:
+                self.now += self.strategy.wait_for()  # idle fast-forward
+                continue
+            rr = self._execute_round(sel)
+            # local training + aggregation for contributors
+            sample_losses = {}
+            if rr.contributors:
+                updates = []
+                for c in rr.contributors:
+                    upd = self.trainer.local_update(c, rr.batches[c])
+                    sample_losses[c] = upd["sample_losses"]
+                    updates.append(upd)
+                rr.train_loss = float(np.mean(
+                    [u["mean_loss"] for u in updates]))
+                self.trainer.aggregate(updates)
+                for c in rr.contributors:
+                    self.participation[c] += 1
+            self.strategy.record_round(rr.contributors, rr.participants,
+                                       sample_losses)
+            if self.eval_every and self.round_idx % self.eval_every == 0:
+                rr.eval_metric = float(self.trainer.evaluate())
+            self.results.append(rr)
+            self.round_idx += 1
+            self.now += max(rr.duration, 1)
+            if verbose:
+                print(f"[{self.strategy.name}] round {rr.round_idx:4d} "
+                      f"t={rr.start_step:6d} dur={rr.duration:3d} "
+                      f"contrib={len(rr.contributors):2d} "
+                      f"E={rr.energy_used/60:.1f}Wh loss={rr.train_loss:.4f} "
+                      f"metric={rr.eval_metric:.4f}")
+            if target_metric is not None and rr.eval_metric == rr.eval_metric \
+                    and rr.eval_metric >= target_metric:
+                break
+        return self.summary()
+
+    # ------------------------------------------------------------------
+    def summary(self) -> Dict:
+        total_energy = sum(r.energy_used for r in self.results)
+        metrics, cum_e = [], 0.0
+        for r in self.results:
+            cum_e += r.energy_used
+            if r.eval_metric == r.eval_metric:
+                metrics.append((r.start_step + r.duration, r.eval_metric,
+                                cum_e / 60.0))  # (min, metric, cum Wh)
+        best = max((m for _, m, _ in metrics), default=float("nan"))
+        durations = [r.duration for r in self.results]
+        return {
+            "strategy": self.strategy.name,
+            "rounds": len(self.results),
+            "sim_minutes": self.now,
+            "total_energy_wh": total_energy / 60.0,
+            "grid_energy_wh": sum(r.grid_energy for r in self.results) / 60.0,
+            "carbon_g": sum(r.carbon_g for r in self.results),
+            "grid_rounds": sum(1 for r in self.results if r.grid_energy > 0),
+            "best_metric": best,
+            "metric_curve": metrics,
+            "mean_round_duration": float(np.mean(durations)) if durations else 0,
+            "std_round_duration": float(np.std(durations)) if durations else 0,
+            "participation": dict(self.participation),
+        }
+
+    def time_energy_to_metric(self, target: float):
+        """(sim minutes, Wh) until eval metric first reached target."""
+        energy = 0.0
+        for r in self.results:
+            energy += r.energy_used
+            if r.eval_metric == r.eval_metric and r.eval_metric >= target:
+                return r.start_step + r.duration, energy / 60.0
+        return None, None

@@ -1,0 +1,277 @@
+"""Client-selection strategies: FedZero and the paper's baselines (§5.1).
+
+* ``FedZeroStrategy``      — forecasts + Algorithm 1 MIP + blocklist fairness
+* ``RandomStrategy``       — uniform over currently-available clients
+* ``OortStrategy``         — statistical × system utility (Oort [30]),
+                             updated each round from available energy/capacity
+* over-selection (×1.3)    — ``over_select`` parameter on Random/Oort
+* forecast-filter (``fc``) — ``use_forecast_filter`` on Random/Oort: drop
+                             clients not expected to reach m_min within d_max
+* ``UpperBoundStrategy``   — random selection, no energy/capacity constraints
+
+All strategies see the same environment interface; only FedZero consumes
+the full forecast horizon and solves the MIP.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .fairness import Blocklist
+from .selection import SelectionInputs, select_clients
+from .types import ClientRegistry, Selection
+from .utility import UtilityTracker
+
+
+@dataclasses.dataclass
+class EnvView:
+    """What a strategy may observe at round start."""
+
+    registry: ClientRegistry
+    now: int
+    excess_now: np.ndarray          # [P] W actual right now
+    spare_now: np.ndarray           # [C] fraction of capacity free right now
+    excess_fc: np.ndarray           # [P, H] forecast
+    spare_fc: Optional[np.ndarray]  # [C, H] forecast fraction (None: no load fc)
+    client_order: List[str]
+    domain_order: List[str]
+
+    def client_row(self, name):
+        return self.client_order.index(name)
+
+
+class BaseStrategy:
+    name = "base"
+    needs_energy_constraints = True
+
+    def __init__(self, registry: ClientRegistry, n: int = 10, d_max: int = 60,
+                 seed: int = 0, over_select: float = 1.0,
+                 use_forecast_filter: bool = False):
+        self.registry = registry
+        self.n = n
+        self.d_max = d_max
+        self.over_select = over_select
+        self.use_forecast_filter = use_forecast_filter
+        self.rng = np.random.default_rng(seed)
+        self.utility = UtilityTracker(
+            {c.name: c.n_samples for c in registry.clients.values()})
+
+    # -- hooks -----------------------------------------------------------
+    def n_to_select(self):
+        return int(math.ceil(self.n * self.over_select))
+
+    def wait_for(self) -> int:
+        """Steps to fast-forward when no selection is possible."""
+        return 5
+
+    def record_round(self, contributors: List[str], selected: List[str],
+                     sample_losses: Dict[str, np.ndarray]):
+        for c in contributors:
+            self.utility.record(c, sample_losses.get(c, np.array([])))
+
+    # -- availability ------------------------------------------------------
+    def _available(self, env: EnvView) -> List[int]:
+        """Clients with access to excess energy + spare capacity right now."""
+        dom_idx = {p: i for i, p in enumerate(env.domain_order)}
+        out = []
+        for ci, cname in enumerate(env.client_order):
+            spec = self.registry.clients[cname]
+            if env.excess_now[dom_idx[spec.domain]] <= 0:
+                continue
+            if env.spare_now[ci] * spec.m_max_capacity <= 0:
+                continue
+            out.append(ci)
+        return out
+
+    def _forecast_filter(self, env: EnvView, rows: List[int]) -> List[int]:
+        """Drop clients not expected to reach m_min within d_max (fc baselines)."""
+        dom_idx = {p: i for i, p in enumerate(env.domain_order)}
+        H = env.excess_fc.shape[1]
+        out = []
+        for ci in rows:
+            spec = self.registry.clients[env.client_order[ci]]
+            if env.spare_fc is None:
+                spare = np.full(H, spec.m_max_capacity)
+            else:
+                spare = env.spare_fc[ci] * spec.m_max_capacity
+            energy = env.excess_fc[dom_idx[spec.domain]] / spec.delta
+            if np.minimum(spare, energy).sum() >= spec.m_min_batches:
+                out.append(ci)
+        return out
+
+    def select(self, env: EnvView) -> Optional[Selection]:
+        raise NotImplementedError
+
+
+class RandomStrategy(BaseStrategy):
+    name = "random"
+
+    def select(self, env: EnvView) -> Optional[Selection]:
+        rows = self._available(env)
+        if self.use_forecast_filter:
+            rows = self._forecast_filter(env, rows)
+        k = self.n_to_select()
+        if len(rows) < k:
+            return None
+        chosen = self.rng.choice(rows, size=k, replace=False)
+        return Selection(clients=[env.client_order[i] for i in chosen],
+                         expected_duration=self.d_max)
+
+
+class OortStrategy(BaseStrategy):
+    """Oort [30]: utility = statistical utility × system-speed penalty,
+    with ε-greedy exploration. System utility is recomputed each round from
+    the available energy and capacity (paper §5.1)."""
+
+    name = "oort"
+
+    def __init__(self, *a, pref_duration: int = 15, alpha_sys: float = 2.0,
+                 epsilon: float = 0.1, **kw):
+        super().__init__(*a, **kw)
+        self.pref_duration = pref_duration
+        self.alpha_sys = alpha_sys
+        self.epsilon = epsilon
+
+    def _score(self, env: EnvView, ci: int) -> float:
+        cname = env.client_order[ci]
+        spec = self.registry.clients[cname]
+        dom_idx = env.domain_order.index(spec.domain)
+        stat = self.utility.sigma(cname)
+        # achievable batches/step right now given energy + capacity
+        rate = min(env.spare_now[ci] * spec.m_max_capacity,
+                   env.excess_now[dom_idx] / spec.delta)
+        if rate <= 0:
+            return 0.0
+        est_dur = spec.m_min_batches / rate
+        sys_factor = (self.pref_duration / est_dur) ** self.alpha_sys \
+            if est_dur > self.pref_duration else 1.0
+        return stat * sys_factor
+
+    def select(self, env: EnvView) -> Optional[Selection]:
+        rows = self._available(env)
+        if self.use_forecast_filter:
+            rows = self._forecast_filter(env, rows)
+        k = self.n_to_select()
+        if len(rows) < k:
+            return None
+        n_explore = int(round(self.epsilon * k))
+        scores = np.array([self._score(env, ci) for ci in rows])
+        order = np.argsort(-scores)
+        exploit = [rows[i] for i in order[: k - n_explore]]
+        rest = [r for r in rows if r not in exploit]
+        explore = list(self.rng.choice(rest, size=min(n_explore, len(rest)),
+                                       replace=False)) if rest and n_explore else []
+        chosen = exploit + [int(x) for x in explore]
+        if len(chosen) < k:
+            return None
+        return Selection(clients=[env.client_order[i] for i in chosen],
+                         expected_duration=self.d_max)
+
+
+class UpperBoundStrategy(BaseStrategy):
+    """Random selection with no energy/capacity constraints (paper's
+    Upper bound — still heterogeneous clients, but grid-powered)."""
+
+    name = "upper_bound"
+    needs_energy_constraints = False
+
+    def select(self, env: EnvView) -> Optional[Selection]:
+        rows = list(range(len(env.client_order)))
+        chosen = self.rng.choice(rows, size=self.n, replace=False)
+        return Selection(clients=[env.client_order[i] for i in chosen],
+                         expected_duration=self.d_max)
+
+
+class FedZeroStrategy(BaseStrategy):
+    """FedZero (paper §4). ``fallback``:
+
+    * "wait" (paper default) — if no valid selection exists within d_max,
+      idle until conditions improve;
+    * "grid" — Alg. 1 line 19's constraint weakening: select by statistical
+      utility on spare capacity only, drawing (carbon-accounted) grid
+      energy for that round. Used at most every ``grid_cooldown`` rounds so
+      the training stays overwhelmingly excess-powered.
+    """
+
+    name = "fedzero"
+
+    def __init__(self, *a, alpha: float = 1.0, solver: str = "mip",
+                 search: str = "binary", exclusion_factor: float = 1.0,
+                 fallback: str = "wait", grid_cooldown: int = 10, **kw):
+        super().__init__(*a, **kw)
+        self.blocklist = Blocklist(self.registry.client_names, alpha=alpha,
+                                   seed=kw.get("seed", 0) + 7)
+        self.solver = solver
+        self.search = search
+        # fraction of past participants entering the blocklist (1.0 = paper)
+        self.exclusion_factor = exclusion_factor
+        self.fallback = fallback
+        self.grid_cooldown = grid_cooldown
+        self._rounds_since_grid = grid_cooldown
+
+    def _grid_fallback(self, env: EnvView) -> Optional[Selection]:
+        """Weakened constraints: capacity-only selection on grid energy."""
+        sigma = self.utility.sigmas(env.client_order)
+        rows = [i for i, c in enumerate(env.client_order)
+                if not self.blocklist.is_blocked(c)
+                and env.spare_now[i] * self.registry.clients[c].m_max_capacity > 0]
+        if len(rows) < self.n:
+            rows = [i for i in range(len(env.client_order))
+                    if env.spare_now[i] > 0]
+        if len(rows) < self.n:
+            return None
+        chosen = sorted(rows, key=lambda i: -sigma[i])[: self.n]
+        return Selection(clients=[env.client_order[i] for i in chosen],
+                         expected_duration=self.d_max, grid=True)
+
+    def select(self, env: EnvView) -> Optional[Selection]:
+        self.blocklist.start_round()
+        sigma = self.utility.sigmas(env.client_order)
+        for i, cname in enumerate(env.client_order):
+            if self.blocklist.is_blocked(cname):
+                sigma[i] = 0.0  # §4.4: blocked clients get σ_c = 0
+        m_spare = np.stack([
+            (env.spare_fc[i] if env.spare_fc is not None
+             else np.ones(env.excess_fc.shape[1]))
+            * self.registry.clients[c].m_max_capacity
+            for i, c in enumerate(env.client_order)])
+        inp = SelectionInputs(
+            registry=self.registry, m_spare=m_spare, r_excess=env.excess_fc,
+            sigma=sigma, client_order=env.client_order,
+            domain_order=env.domain_order)
+        sel = select_clients(inp, self.n, self.d_max, solver=self.solver,
+                             search=self.search)
+        if sel is not None:
+            self._rounds_since_grid += 1
+            return sel
+        if (self.fallback == "grid"
+                and self._rounds_since_grid >= self.grid_cooldown):
+            sel = self._grid_fallback(env)
+            if sel is not None:
+                self._rounds_since_grid = 0
+            return sel
+        return None
+
+    def record_round(self, contributors, selected, sample_losses):
+        super().record_round(contributors, selected, sample_losses)
+        blocked = [c for c in contributors
+                   if self.rng.random() < self.exclusion_factor]
+        self.blocklist.record_participation(blocked)
+
+
+def make_strategy(name: str, registry: ClientRegistry, **kw) -> BaseStrategy:
+    """Factory covering the paper's seven configurations."""
+    table = {
+        "fedzero": lambda: FedZeroStrategy(registry, **kw),
+        "random": lambda: RandomStrategy(registry, **kw),
+        "random_1.3n": lambda: RandomStrategy(registry, over_select=1.3, **kw),
+        "random_fc": lambda: RandomStrategy(registry, use_forecast_filter=True, **kw),
+        "oort": lambda: OortStrategy(registry, **kw),
+        "oort_1.3n": lambda: OortStrategy(registry, over_select=1.3, **kw),
+        "oort_fc": lambda: OortStrategy(registry, use_forecast_filter=True, **kw),
+        "upper_bound": lambda: UpperBoundStrategy(registry, **kw),
+    }
+    return table[name]()

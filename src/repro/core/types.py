@@ -1,0 +1,93 @@
+"""Core data types for the FedZero scheduling system (paper Table 1)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClientSpec:
+    """Static registration info for one FL client (paper §4.1)."""
+
+    name: str
+    domain: str                 # power domain id
+    m_max_capacity: float       # m_c: max batches per timestep
+    delta: float                # δ_c: energy per batch (Wmin/batch)
+    n_samples: int              # |B_c| local dataset size
+    batches_per_epoch: int      # ceil(n_samples / batch_size)
+    min_epochs: float = 1.0     # lower bound: m_c^min = min_epochs * batches_per_epoch
+    max_epochs: float = 5.0
+
+    @property
+    def m_min_batches(self) -> float:
+        return self.min_epochs * self.batches_per_epoch
+
+    @property
+    def m_max_batches(self) -> float:
+        return self.max_epochs * self.batches_per_epoch
+
+
+@dataclasses.dataclass
+class PowerDomain:
+    """A cluster of clients sharing one excess-energy budget (paper §3.1)."""
+
+    name: str
+    clients: List[str] = dataclasses.field(default_factory=list)
+    max_output: float = 800.0  # W (paper §5.1: 800 W per domain)
+
+
+@dataclasses.dataclass
+class ClientRoundState:
+    """Mutable per-round runtime state of a participating client."""
+
+    spec: ClientSpec
+    computed: float = 0.0         # m_c^comp batches done this round
+    energy_used: float = 0.0      # Wmin this round
+    done_min: bool = False        # reached m_min (notified server)
+    finished_at: Optional[int] = None  # timestep index when m_min reached
+
+
+@dataclasses.dataclass
+class Selection:
+    """Output of a client-selection strategy for one round."""
+
+    clients: List[str]
+    expected_duration: int                    # d (timesteps)
+    expected_batches: Dict[str, float] = dataclasses.field(default_factory=dict)
+    grid: bool = False   # grid-fallback round (carbon-accounted, not zero)
+
+
+@dataclasses.dataclass
+class RoundResult:
+    round_idx: int
+    start_step: int
+    duration: int                  # actual timesteps used
+    participants: List[str]        # selected
+    contributors: List[str]        # reached m_min and were aggregated
+    stragglers: List[str]          # selected but discarded
+    energy_used: float             # Wmin, all selected clients (incl. discarded)
+    grid_energy: float = 0.0       # Wmin drawn from the grid (fallback rounds)
+    carbon_g: float = 0.0          # gCO2 emitted (fallback rounds only)
+    batches: Dict[str, float] = dataclasses.field(default_factory=dict)
+    train_loss: float = float("nan")
+    eval_metric: float = float("nan")
+
+
+class ClientRegistry:
+    """Holds the static client/domain structure and derived lookups."""
+
+    def __init__(self, clients: List[ClientSpec], domains: List[PowerDomain]):
+        self.clients: Dict[str, ClientSpec] = {c.name: c for c in clients}
+        self.domains: Dict[str, PowerDomain] = {p.name: p for p in domains}
+        for p in self.domains.values():
+            p.clients = [c.name for c in clients if c.domain == p.name]
+        self.client_names = [c.name for c in clients]
+        self.domain_of = {c.name: c.domain for c in clients}
+
+    def domain_clients(self, domain: str) -> List[ClientSpec]:
+        return [self.clients[n] for n in self.domains[domain].clients]
+
+    def __len__(self):
+        return len(self.clients)

@@ -1,0 +1,34 @@
+"""Statistical utility σ_c (paper §4.3, based on Oort [30]).
+
+    σ_c = |B_c| · sqrt( 1/|B_c| · Σ_{k∈B_c} loss(k)² )   if p(c) ≥ 1
+    σ_c = 1                                               otherwise
+
+The per-sample losses come from the client's most recent participation.
+Blocked clients (fairness module) override σ_c = 0 at selection time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class UtilityTracker:
+    def __init__(self, n_samples: Dict[str, int]):
+        self.n_samples = dict(n_samples)
+        self.sq_loss_mean: Dict[str, Optional[float]] = {c: None for c in n_samples}
+        self.participation: Dict[str, int] = {c: 0 for c in n_samples}
+
+    def record(self, client: str, sample_losses: np.ndarray):
+        """Store the loss statistics reported after a participation."""
+        self.participation[client] += 1
+        if len(sample_losses):
+            self.sq_loss_mean[client] = float(np.mean(np.square(sample_losses)))
+
+    def sigma(self, client: str) -> float:
+        if self.participation[client] < 1 or self.sq_loss_mean[client] is None:
+            return 1.0
+        return self.n_samples[client] * float(np.sqrt(self.sq_loss_mean[client]))
+
+    def sigmas(self, order) -> np.ndarray:
+        return np.array([self.sigma(c) for c in order])

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the clients' compute hot-spots.
+
+FedZero itself is a scheduling contribution (no kernel in the paper), but
+the client training workloads it schedules have three hot loops that we
+implement TPU-native: flash attention (+sliding window), the MoE grouped
+GEMM, and the RWKV6 chunked scan. Each has a pure-jnp oracle in ref.py and
+is validated in interpret mode over shape/dtype sweeps.
+"""
+from . import ops, ref
+from .ops import flash_attention, moe_gemm, rwkv_scan
+
+__all__ = ["ops", "ref", "flash_attention", "moe_gemm", "rwkv_scan"]

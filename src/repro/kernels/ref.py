@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """q: [B, H, S, dh]; k, v: [B, H, Sk, dh] (GQA pre-expanded).
+
+    window > 0 limits attention to the last `window` keys (sliding window).
+    """
+    B, H, S, dh = q.shape
+    Sk = k.shape[2]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(dh)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None] + (Sk - S)  # align ends (prefill/full)
+    kpos = jnp.arange(Sk)[None, :]
+    if causal:
+        ok = kpos <= qpos
+        if window > 0:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def moe_gemm_ref(x, w):
+    """x: [E, C, d]; w: [E, d, f] -> [E, C, f] batched matmul."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rwkv_scan_ref(r, k, v, w, u):
+    """Exact RWKV6 recurrence. r/k/v/w: [B, S, H, dh]; u: [H, dh].
+
+    out_t = r_t · (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns out [B, S, H, dh] (fp32) and final state [B, H, dh, dh].
+    """
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    B, S, H, dh = r.shape
+    state0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, S_ + u[None][..., None] * kv)
+        return w_t[..., None] * S_ + kv, out
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state0, seq)
+    return jnp.moveaxis(outs, 0, 1), state

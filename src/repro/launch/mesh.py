@@ -1,0 +1,21 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state. The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else (tests, benchmarks) sees the 1 real CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh with the production axis names (smoke tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

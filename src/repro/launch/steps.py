@@ -1,0 +1,74 @@
+"""Step-function factories: train / prefill / decode per architecture.
+
+``make_step(cfg, kind)`` returns (step_fn, abstract kwargs builder) pairs
+used identically by the dry-run (lower/compile against ShapeDtypeStructs)
+and the real launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (ModelConfig, build_model, input_specs,
+                          shape_for_long_context, SHAPES)
+from repro.optim import adamw, sgd
+
+# parameter-count threshold above which training uses SGD-momentum with
+# bf16 state instead of AdamW fp32 state (HBM fit for the giant MoEs —
+# DESIGN.md §6)
+BIG_MODEL_PARAMS = 30e9
+
+
+def default_optimizer(cfg: ModelConfig):
+    if cfg.param_count() > BIG_MODEL_PARAMS:
+        return sgd(3e-4, momentum=0.9, state_dtype=jnp.bfloat16)
+    return adamw(3e-4, weight_decay=0.1)
+
+
+def make_train_step(cfg: ModelConfig, optimizer=None, remat: bool = True,
+                    unroll: bool = False):
+    """Returns (model, opt, train_step(params, opt_state, batch))."""
+    model = build_model(cfg, remat=remat, unroll=unroll)
+    opt = optimizer or default_optimizer(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        return new_params, new_state, loss
+
+    return model, opt, train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape_name: str, unroll: bool = False):
+    spec = SHAPES[shape_name]
+    model = build_model(cfg, unroll=unroll)
+    if cfg.encoder_layers > 0:
+        def prefill_step(params, frames):
+            enc = model.encode(params, frames)
+            return model.precompute_enc_kv(params, enc)
+        return model, prefill_step
+
+    cache_len = spec["seq"]
+
+    def prefill_step(params, tokens, frontend_embeds=None):
+        return model.prefill(params, tokens, cache_len,
+                             frontend_embeds=frontend_embeds)
+
+    return model, prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, shape_name: str, unroll: bool = False):
+    cfg = shape_for_long_context(cfg)
+    model = build_model(cfg, unroll=unroll)
+    if cfg.encoder_layers > 0:
+        def decode_step(params, cache, tokens, enc_kv):
+            return model.decode_step(params, cache, tokens, enc_kv)
+        return model, decode_step
+
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return model, decode_step

@@ -1,0 +1,11 @@
+from .common import ModelConfig, cross_entropy_loss, rmsnorm
+from .api import SHAPES, build_model, input_specs, params_spec, shape_for_long_context
+from .transformer import DecoderLM, EncDecLM
+from .paper_models import ConvNet, KWTModel, LSTMModel
+
+__all__ = [
+    "ModelConfig", "cross_entropy_loss", "rmsnorm",
+    "SHAPES", "build_model", "input_specs", "params_spec",
+    "shape_for_long_context", "DecoderLM", "EncDecLM",
+    "ConvNet", "KWTModel", "LSTMModel",
+]

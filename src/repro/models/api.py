@@ -1,0 +1,106 @@
+"""Unified model API + input-shape catalogue.
+
+``build_model(cfg)`` returns an object exposing:
+    init(rng) -> params
+    loss(params, batch) -> scalar            (train path)
+    prefill(params, ...) -> (logits, cache)  (inference prefill)
+    decode_step(params, cache, tokens, ...)  (one-token decode)
+
+``input_specs(cfg, shape_name)`` returns ShapeDtypeStruct stand-ins for every
+input of the step that the shape exercises — weak-type-correct, shardable,
+and allocation-free (the dry-run lowers against these).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .transformer import DecoderLM, EncDecLM
+
+# the four assigned input shapes
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k":    {"kind": "train",   "seq": 4096,   "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768,  "batch": 32},
+    "decode_32k":  {"kind": "decode",  "seq": 32768,  "batch": 128},
+    "long_500k":   {"kind": "decode",  "seq": 524288, "batch": 1},
+}
+
+# decoder context given to the encoder-decoder (audio) model: the encoder
+# consumes `seq` frontend frames; the decoder trains on seq // DEC_RATIO
+# text tokens (speech-to-text length ratio).
+DEC_RATIO = 4
+ENC_CTX_DECODE = 4096  # encoder frames cached during decode shapes
+
+
+def shape_for_long_context(cfg: ModelConfig) -> ModelConfig:
+    """Sub-quadratic variant used for long_500k: SSM/hybrid run natively;
+    full-attention families switch to the sliding-window variant."""
+    if cfg.family == "ssm" or cfg.attn_variant == "swa":
+        return cfg
+    return dataclasses.replace(cfg, attn_variant="swa", window=8192)
+
+
+def build_model(cfg: ModelConfig, remat: bool = False, unroll: bool = False):
+    if cfg.encoder_layers > 0:
+        return EncDecLM(cfg, remat=remat, unroll=unroll)
+    return DecoderLM(cfg, remat=remat, unroll=unroll)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """Returns (kind, specs) where specs maps step-fn kwargs to
+    ShapeDtypeStruct pytrees."""
+    spec = SHAPES[shape_name]
+    kind, S, B = spec["kind"], spec["seq"], spec["batch"]
+    if kind == "decode":
+        cfg = shape_for_long_context(cfg)
+    model = build_model(cfg)
+    tok = jnp.int32
+
+    if cfg.encoder_layers > 0:  # encoder-decoder (audio)
+        if kind == "train":
+            Sd = S // DEC_RATIO
+            return kind, {"batch": {
+                "frontend_embeds": _sds((B, S, cfg.d_model), cfg.dtype),
+                "tokens": _sds((B, Sd), tok),
+                "labels": _sds((B, Sd), tok),
+            }}
+        if kind == "prefill":
+            # serving prefill = encode the audio + precompute cross K/V
+            return kind, {"frames": _sds((B, S, cfg.d_model), cfg.dtype)}
+        cache = jax.eval_shape(lambda: model.init_cache(B, S))
+        params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        enc_kv = jax.eval_shape(model.precompute_enc_kv, params_struct,
+                                _sds((B, ENC_CTX_DECODE, cfg.d_model), cfg.dtype))
+        return kind, {"cache": cache, "tokens": _sds((B, 1), tok), "enc_kv": enc_kv}
+
+    n_fe = cfg.n_frontend_embeds
+    if kind == "train":
+        batch = {"tokens": _sds((B, S - n_fe), tok), "labels": _sds((B, S - n_fe), tok)}
+        if n_fe:
+            batch["frontend_embeds"] = _sds((B, n_fe, cfg.d_model), cfg.dtype)
+        return kind, {"batch": batch}
+    if kind == "prefill":
+        out = {"tokens": _sds((B, S - n_fe), tok)}
+        if n_fe:
+            out["frontend_embeds"] = _sds((B, n_fe, cfg.d_model), cfg.dtype)
+        return kind, out
+    # decode
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    return kind, {"cache": cache, "tokens": _sds((B, 1), tok)}
+
+
+def params_spec(cfg: ModelConfig, shape_name: str = "train_4k"):
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    spec = SHAPES[shape_name]
+    if spec["kind"] == "decode":
+        cfg = shape_for_long_context(cfg)
+    model = build_model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))

@@ -1,0 +1,172 @@
+"""Grouped-query attention with RoPE, full / sliding-window masks, KV cache.
+
+Three entry points per layer:
+  * ``attend_train``  — causal self-attention over a full sequence.
+  * ``attend_decode`` — one new token against a KV cache (ring buffer for
+    sliding-window configs).
+  * ``init_cache``    — allocate the cache for a decode shape.
+
+The matmul path is plain jnp einsum by default (XLA fuses this well and it
+is what the dry-run lowers); ``repro.kernels.flash.ops`` provides the Pallas
+TPU kernel for the same contraction, validated against this reference.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import (BATCH_AXES, ModelConfig, apply_rope, dense_init,
+                     head_mask, maybe_shard)
+
+NEG_INF = -1e30
+
+
+def init_attn_params(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    H, KV, dh = cfg.n_heads_padded, cfg.n_kv_heads_padded, cfg.d_head
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, (d, H, dh), cfg.param_dtype),
+        "wk": dense_init(ks[1], d, (d, KV, dh), cfg.param_dtype),
+        "wv": dense_init(ks[2], d, (d, KV, dh), cfg.param_dtype),
+        "wo": dense_init(ks[3], H * dh, (H, dh, d), cfg.param_dtype),
+    }
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _causal_mask(sq, sk, q_offset, window):
+    """[sq, sk] additive mask. window<=0 -> full causal."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    ok = kpos <= qpos
+    if window and window > 0:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attend_train(params, x, cfg: ModelConfig, positions=None, window=None,
+                 causal=True, kv_x=None, use_flash_kernel=False):
+    """x: [B, S, d]. Returns [B, S, d].
+
+    ``kv_x`` enables cross attention (keys/values from encoder output).
+    ``use_flash_kernel`` routes the softmax(QK^T)V contraction through the
+    Pallas TPU flash-attention kernel (repro.kernels) instead of the jnp
+    einsum chain — same math, validated in tests/test_kernels.py.
+    """
+    B, S, _ = x.shape
+    H, KV, dh = cfg.n_heads_padded, cfg.n_kv_heads_padded, cfg.d_head
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    src = kv_x if kv_x is not None else x
+    Sk = src.shape[1]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    if kv_x is None:  # self attention -> rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if use_flash_kernel and causal and kv_x is None:
+        from repro.kernels import ops as kops
+        w = window if window is not None else (
+            cfg.window if cfg.attn_variant == "swa" else 0)
+        bq = bk = min(128, S)
+        out = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, window=w,
+            block_q=bq, block_k=bk)
+        out = out.transpose(0, 2, 1, 3)
+        hm = head_mask(cfg)
+        if hm is not None:
+            out = out * hm[None, None, :, None].astype(out.dtype)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+    k = _repeat_kv(k, H // KV)
+    v = _repeat_kv(v, H // KV)
+    # pin head sharding: GSPMD alone replicates the score matmul on 'model'
+    q = maybe_shard(q, BATCH_AXES, None, "model", None)
+    k = maybe_shard(k, BATCH_AXES, None, "model", None)
+    v = maybe_shard(v, BATCH_AXES, None, "model", None)
+
+    scores = jnp.einsum("bshk,bthk->bhst", q, k) / jnp.sqrt(dh).astype(jnp.float32)
+    scores = scores.astype(jnp.float32)
+    if causal:
+        w = window if window is not None else (cfg.window if cfg.attn_variant == "swa" else 0)
+        scores = scores + _causal_mask(S, Sk, 0, w)[None, None]
+    p = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", p, v)
+    hm = head_mask(cfg)
+    if hm is not None:
+        out = out * hm[None, None, :, None].astype(out.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # [B, C, KV, dh]  (C = cache length or window)
+    v: jax.Array
+    length: jax.Array  # [] int32 — number of valid tokens seen so far
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> KVCache:
+    KV, dh = cfg.n_kv_heads_padded, cfg.d_head
+    C = min(cache_len, cfg.window) if cfg.attn_variant == "swa" else cache_len
+    store = cfg.cache_dtype or dtype
+    return KVCache(
+        k=jnp.zeros((batch, C, KV, dh), store),
+        v=jnp.zeros((batch, C, KV, dh), store),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def attend_decode(params, x, cache: KVCache, cfg: ModelConfig):
+    """x: [B, 1, d]; one-step decode against the cache. Returns (out, cache)."""
+    B = x.shape[0]
+    H, KV, dh = cfg.n_heads_padded, cfg.n_kv_heads_padded, cfg.d_head
+    C = cache.k.shape[1]
+    pos = cache.length  # scalar position of the new token
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k_new = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v_new = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, pos[None, None].astype(jnp.int32) * jnp.ones((B, 1), jnp.int32), cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[None, None] * jnp.ones((B, 1), jnp.int32), cfg.rope_theta)
+
+    slot = pos % C  # ring buffer; for full attention C == cache_len so % is a no-op
+    k = jax.lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype), (0, slot, 0, 0))
+
+    # GQA-aware decode attention: keep K/V at their native KV heads (no
+    # jnp.repeat — repeating materialized and moved cache-sized copies,
+    # measured as the dominant decode collective, §Perf it2-4) and contract
+    # query groups against them directly. fp32 only via the accumulator
+    # (preferred_element_type), never a cache-sized fp32 tensor. The
+    # attention follows the CACHE layout: local for a batch-sharded cache,
+    # psum-over-seq for a seq-sharded one.
+    G = H // KV
+    q = maybe_shard(q, BATCH_AXES, None, None, None)
+    qg = q.reshape(B, 1, KV, G, dh)
+    k_read = k.astype(x.dtype) if cfg.cache_dtype is not None else k
+    v_read = v.astype(x.dtype) if cfg.cache_dtype is not None else v
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k_read,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(dh)
+    # mask out slots that have never been written
+    valid = jnp.arange(C)[None, None, None, None, :] <= jnp.minimum(pos, C - 1)
+    scores = jnp.where(valid, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v_read,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H, dh).astype(x.dtype)
+    hm = head_mask(cfg)
+    if hm is not None:
+        out = out * hm[None, None, :, None].astype(out.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return out, KVCache(k=k, v=v, length=pos + 1)

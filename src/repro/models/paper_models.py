@@ -1,0 +1,175 @@
+"""The models from FedZero's own evaluation (Section 5.1).
+
+* ``LSTMModel``  — 2-layer LSTM, 100 hidden units, 8-d embedding, next-char
+  prediction (Shakespeare; footnote 7 of the paper / FedProx setup).
+* ``KWTModel``   — Keyword Transformer KWT-1 (Berg et al. 2021): 12 layers,
+  d=64, 1 head, MLP 256, on precomputed MFCC patch embeddings.
+* ``ConvNet``    — small densely-connected conv classifier standing in for
+  DenseNet-121 / EfficientNet-B1 (the paper's image workloads); the real
+  datasets are not available offline, so this model is used with the
+  synthetic image task in the FL simulation.
+
+These are the workloads the FL simulation trains; the assigned production
+architectures live in transformer.py and are exercised via the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import cross_entropy_loss, dense_init, embed_init
+
+
+# ---------------------------------------------------------------------------
+# LSTM (Shakespeare)
+
+
+class LSTMModel:
+    def __init__(self, vocab=90, embed=8, hidden=100, layers=2):
+        self.vocab, self.embed, self.hidden, self.layers = vocab, embed, hidden, layers
+
+    def init(self, rng):
+        ks = jax.random.split(rng, 2 + 2 * self.layers)
+        params = {"embed": embed_init(ks[0], self.vocab, self.embed, jnp.float32),
+                  "head": dense_init(ks[1], self.hidden, (self.hidden, self.vocab), jnp.float32),
+                  "cells": []}
+        d_in = self.embed
+        cells = []
+        for i in range(self.layers):
+            k1, k2 = ks[2 + 2 * i], ks[3 + 2 * i]
+            cells.append({
+                "wx": dense_init(k1, d_in, (d_in, 4 * self.hidden), jnp.float32),
+                "wh": dense_init(k2, self.hidden, (self.hidden, 4 * self.hidden), jnp.float32),
+                "b": jnp.zeros((4 * self.hidden,)),
+            })
+            d_in = self.hidden
+        params["cells"] = cells
+        return params
+
+    @staticmethod
+    def _lstm_layer(cell, x):
+        B, S, _ = x.shape
+        H = cell["wh"].shape[0]
+
+        def step(carry, x_t):
+            h, c = carry
+            gates = x_t @ cell["wx"] + h @ cell["wh"] + cell["b"]
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), h
+
+        init = (jnp.zeros((B, H)), jnp.zeros((B, H)))
+        _, hs = jax.lax.scan(step, init, jnp.moveaxis(x, 1, 0))
+        return jnp.moveaxis(hs, 0, 1)
+
+    def logits_fn(self, params, batch):
+        x = params["embed"][batch["tokens"]]
+        for cell in params["cells"]:
+            x = self._lstm_layer(cell, x)
+        return x @ params["head"]
+
+    def loss(self, params, batch):
+        return cross_entropy_loss(self.logits_fn(params, batch), batch["labels"],
+                                  batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# KWT-1 (Google Speech) — tiny ViT over MFCC patches
+
+
+class KWTModel:
+    def __init__(self, n_classes=35, d=64, layers=12, heads=1, mlp=256, n_patches=98):
+        self.n_classes, self.d, self.layers = n_classes, d, layers
+        self.heads, self.mlp, self.n_patches = heads, mlp, n_patches
+
+    def init(self, rng):
+        ks = jax.random.split(rng, 4)
+        L, d, m = self.layers, self.d, self.mlp
+
+        def layer_init(k):
+            k1, k2, k3, k4 = jax.random.split(k, 4)
+            return {
+                "ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)),
+                "wqkv": dense_init(k1, d, (d, 3 * d), jnp.float32),
+                "wo": dense_init(k2, d, (d, d), jnp.float32),
+                "w1": dense_init(k3, d, (d, m), jnp.float32),
+                "w2": dense_init(k4, m, (m, d), jnp.float32),
+            }
+
+        return {
+            "patch_proj": dense_init(ks[0], 40, (40, d), jnp.float32),
+            "pos": 0.02 * jax.random.normal(ks[1], (self.n_patches + 1, d)),
+            "cls": jnp.zeros((d,)),
+            "blocks": jax.vmap(layer_init)(jax.random.split(ks[2], L)),
+            "head": dense_init(ks[3], d, (d, self.n_classes), jnp.float32),
+        }
+
+    def logits_fn(self, params, batch):
+        """batch["mfcc"]: [B, n_patches, 40]."""
+        x = batch["mfcc"] @ params["patch_proj"]
+        B = x.shape[0]
+        cls = jnp.broadcast_to(params["cls"], (B, 1, self.d))
+        x = jnp.concatenate([cls, x], axis=1) + params["pos"][None]
+        H, dh = self.heads, self.d // self.heads
+
+        def body(h, p):
+            from .common import rmsnorm
+            hn = rmsnorm(h, p["ln1"])
+            qkv = hn @ p["wqkv"]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            S = q.shape[1]
+            q = q.reshape(B, S, H, dh); k = k.reshape(B, S, H, dh); v = v.reshape(B, S, H, dh)
+            s = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.sqrt(dh)
+            a = jax.nn.softmax(s, -1)
+            o = jnp.einsum("bhst,bthd->bshd", a, v).reshape(B, S, self.d)
+            h = h + o @ p["wo"]
+            hn = rmsnorm(h, p["ln2"])
+            h = h + jax.nn.gelu(hn @ p["w1"]) @ p["w2"]
+            return h, None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return x[:, 0] @ params["head"]
+
+    def loss(self, params, batch):
+        return cross_entropy_loss(self.logits_fn(params, batch), batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Small conv classifier (CIFAR-style stand-in for DenseNet/EfficientNet)
+
+
+class ConvNet:
+    def __init__(self, n_classes=100, channels=(32, 64, 128), in_ch=3, hw=32):
+        self.n_classes, self.channels, self.in_ch, self.hw = n_classes, channels, in_ch, hw
+
+    def init(self, rng):
+        ks = jax.random.split(rng, len(self.channels) + 1)
+        convs, c_in = [], self.in_ch
+        for i, c_out in enumerate(self.channels):
+            convs.append({
+                "w": dense_init(ks[i], 9 * c_in, (3, 3, c_in, c_out), jnp.float32),
+                "b": jnp.zeros((c_out,)),
+                "scale": jnp.ones((c_out,)),
+            })
+            c_in = c_out + c_in  # dense connectivity: concat input
+        final_hw = self.hw // (2 ** len(self.channels))
+        d_feat = c_in * final_hw * final_hw
+        return {"convs": convs,
+                "head": dense_init(ks[-1], d_feat, (d_feat, self.n_classes), jnp.float32)}
+
+    def logits_fn(self, params, batch):
+        x = batch["image"]  # [B, H, W, C]
+        for conv in params["convs"]:
+            y = jax.lax.conv_general_dilated(
+                x, conv["w"], (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            y = jax.nn.relu(y * conv["scale"] + conv["b"])
+            x = jnp.concatenate([x, y], axis=-1)  # dense block
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+        x = x.reshape(x.shape[0], -1)
+        return x @ params["head"]
+
+    def loss(self, params, batch):
+        return cross_entropy_loss(self.logits_fn(params, batch), batch["labels"])

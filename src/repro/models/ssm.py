@@ -1,0 +1,252 @@
+"""State-space / linear-attention mixers.
+
+* RWKV6 ("Finch", arXiv:2404.05892): data-dependent-decay linear attention.
+  The per-head state is a (d_head × d_head) matrix; training uses a
+  time-scan (the Pallas kernel in repro.kernels.rwkv_scan implements the
+  chunked form), decode is a single recurrence step.
+* Mamba-style selective SSM branch for the Hymba hybrid blocks
+  (arXiv:2411.13676): diagonal selective scan with conv1d pre-mixer.
+
+Simplifications vs the reference implementations (documented in DESIGN.md):
+RWKV6's five ddlerp token-shift mixes share one LoRA; output groupnorm is a
+per-head rmsnorm. The recurrences themselves are exact.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import BATCH_AXES, ModelConfig, dense_init, maybe_shard
+
+
+# =====================================================================
+# RWKV6 time mix
+# =====================================================================
+
+LORA_DIM = 32
+
+
+def init_rwkv_params(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H = cfg.n_heads_padded if cfg.n_heads_padded else max(1, d // 64)
+    dh = d // H
+    ks = jax.random.split(key, 12)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), cfg.param_dtype),  # r,k,v,w,g static lerp
+        "shift_lora_a": dense_init(ks[0], d, (d, LORA_DIM), cfg.param_dtype),
+        "shift_lora_b": dense_init(ks[1], LORA_DIM, (LORA_DIM, 5, d), cfg.param_dtype),
+        "wr": dense_init(ks[2], d, (d, d), cfg.param_dtype),
+        "wk": dense_init(ks[3], d, (d, d), cfg.param_dtype),
+        "wv": dense_init(ks[4], d, (d, d), cfg.param_dtype),
+        "wg": dense_init(ks[5], d, (d, d), cfg.param_dtype),
+        "wo": dense_init(ks[6], d, (d, d), cfg.param_dtype),
+        "w0": jnp.zeros((d,), cfg.param_dtype) - 0.5,  # base decay logit
+        "w_lora_a": dense_init(ks[7], d, (d, LORA_DIM), cfg.param_dtype),
+        "w_lora_b": dense_init(ks[8], LORA_DIM, (LORA_DIM, d), cfg.param_dtype),
+        "u": dense_init(ks[9], dh, (H, dh), cfg.param_dtype),  # bonus
+        "ln_out": jnp.ones((d,), cfg.param_dtype),
+    }
+
+
+def _rwkv_inputs(params, x, x_prev, cfg: ModelConfig):
+    """Token-shift ddlerp then project to r,k,v,w,g. x: [B,S,d]."""
+    d = cfg.d_model
+    H = cfg.n_heads_padded if cfg.n_heads_padded else max(1, d // 64)
+    dh = d // H
+    xx = x_prev - x
+    mix0 = x + xx * params["mu"][3]  # seed mix (reuse w's mu)
+    delta = jnp.einsum(
+        "bsl,lkd->bskd",
+        jnp.tanh(mix0 @ params["shift_lora_a"]),
+        params["shift_lora_b"],
+    )  # [B,S,5,d]
+    mixed = x[:, :, None, :] + xx[:, :, None, :] * (params["mu"][None, None] + delta)
+    xr, xk, xv, xw, xg = [mixed[:, :, i] for i in range(5)]
+
+    B, S = x.shape[:2]
+    r = (xr @ params["wr"]).reshape(B, S, H, dh)
+    k = (xk @ params["wk"]).reshape(B, S, H, dh)
+    v = (xv @ params["wv"]).reshape(B, S, H, dh)
+    g = jax.nn.silu(xg @ params["wg"])
+    w_logit = params["w0"] + jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"]
+    w = jnp.exp(-jnp.exp(w_logit.astype(jnp.float32))).reshape(B, S, H, dh)
+    r = maybe_shard(r, BATCH_AXES, None, "model", None)
+    k = maybe_shard(k, BATCH_AXES, None, "model", None)
+    v = maybe_shard(v, BATCH_AXES, None, "model", None)
+    w = maybe_shard(w, BATCH_AXES, None, "model", None)
+    return r, k, v, w, g
+
+
+def rwkv_recurrence(r, k, v, w, u, state):
+    """Exact RWKV6 recurrence (reference; the Pallas kernel mirrors this).
+
+    r,k,v,w: [B,S,H,dh]; u: [H,dh]; state: [B,H,dh,dh] (key-major).
+    Returns out [B,S,H,dh], final state.
+    """
+    def step(S_, inp):
+        r_t, k_t, v_t, w_t = inp  # [B,H,dh]
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, S_ + u[None] [..., None] * kv)
+        S_ = w_t[..., None] * S_ + kv
+        return S_, out
+
+    rs, ks_, vs, ws = [jnp.moveaxis(t, 1, 0) for t in (r, k, v, w)]
+    state, outs = jax.lax.scan(step, state, (rs, ks_, vs, ws))
+    return jnp.moveaxis(outs, 0, 1), state
+
+
+def _rwkv_out(params, wkv, g, cfg):
+    B, S = g.shape[:2]
+    d = cfg.d_model
+    y = wkv.reshape(B, S, d).astype(jnp.float32)
+    # per-head rmsnorm stand-in for groupnorm
+    H = wkv.shape[2]
+    yh = y.reshape(B, S, H, -1)
+    yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, -1, keepdims=True) + 1e-5)
+    y = yh.reshape(B, S, d) * params["ln_out"].astype(jnp.float32)
+    return (y.astype(g.dtype) * g) @ params["wo"]
+
+
+def rwkv_time_mix_train(params, x, cfg: ModelConfig, use_kernel: bool = False):
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, w, g = _rwkv_inputs(params, x, x_prev, cfg)
+    H, dh = r.shape[2], r.shape[3]
+    state0 = jnp.zeros((x.shape[0], H, dh, dh), jnp.float32)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        wkv = kops.rwkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), w,
+                             params["u"].astype(jnp.float32))
+    else:
+        wkv, _ = rwkv_recurrence(
+            r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+            w, params["u"].astype(jnp.float32), state0)
+    return _rwkv_out(params, wkv.astype(x.dtype), g, cfg)
+
+
+class RWKVState(NamedTuple):
+    shift: jax.Array   # [B, d] last token (time-mix)
+    shift_cm: jax.Array  # [B, d] last token (channel-mix)
+    S: jax.Array       # [B, H, dh, dh]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> RWKVState:
+    d = cfg.d_model
+    H = cfg.n_heads_padded if cfg.n_heads_padded else max(1, d // 64)
+    dh = d // H
+    return RWKVState(
+        shift=jnp.zeros((batch, d), cfg.dtype),
+        shift_cm=jnp.zeros((batch, d), cfg.dtype),
+        S=jnp.zeros((batch, H, dh, dh), jnp.float32),
+    )
+
+
+def rwkv_time_mix_decode(params, x, state: RWKVState, cfg: ModelConfig):
+    """x: [B, 1, d] one token."""
+    x_prev = state.shift[:, None, :]
+    r, k, v, w, g = _rwkv_inputs(params, x, x_prev, cfg)
+    u = params["u"].astype(jnp.float32)
+    r1, k1, v1, w1 = [t[:, 0].astype(jnp.float32) for t in (r, k, v, w)]
+    kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+    out = jnp.einsum("bhk,bhkv->bhv", r1, state.S + u[None][..., None] * kv)
+    S_new = w1[..., None] * state.S + kv
+    y = _rwkv_out(params, out[:, None].astype(x.dtype), g, cfg)
+    return y, state._replace(shift=x[:, 0], S=S_new)
+
+
+# --- RWKV channel mix (replaces the FFN in rwkv blocks) ----------------
+
+def init_rwkv_cm_params(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    return {
+        "mu_k": 0.5 * jnp.ones((d,), cfg.param_dtype),
+        "wk": dense_init(k1, d, (d, f), cfg.param_dtype),
+        "wv": dense_init(k2, f, (f, d), cfg.param_dtype),
+    }
+
+
+def rwkv_channel_mix(params, x, x_prev):
+    xk = x + (x_prev - x) * params["mu_k"]
+    h = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    h = maybe_shard(h, BATCH_AXES, None, "model")
+    return h @ params["wv"]
+
+
+# =====================================================================
+# Mamba-style selective SSM branch (Hymba hybrid)
+# =====================================================================
+
+CONV_K = 4
+
+
+def init_mamba_params(key, cfg: ModelConfig):
+    d, n = cfg.d_model, cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, (d, 2 * d), cfg.param_dtype),   # x, z
+        "conv": dense_init(ks[1], CONV_K, (CONV_K, d), cfg.param_dtype),
+        "w_bc": dense_init(ks[2], d, (d, 2 * n), cfg.param_dtype),
+        "w_dt": dense_init(ks[3], d, (d,), cfg.param_dtype),
+        "dt_bias": jnp.zeros((d,), cfg.param_dtype),
+        "logA": jnp.log(jnp.linspace(1.0, float(n), n))[None, :] * jnp.ones((d, 1)),
+        "D": jnp.ones((d,), cfg.param_dtype),
+        "out_proj": dense_init(ks[4], d, (d, d), cfg.param_dtype),
+    }
+
+
+def _mamba_core(params, xz, conv_state, h0):
+    """xz: [B,S,2d]; conv_state: [B,CONV_K-1,d]; h0: [B,d,n]."""
+    d = params["D"].shape[0]
+    x, z = xz[..., :d], xz[..., d:]
+    # depthwise causal conv1d
+    xc = jnp.concatenate([conv_state, x], axis=1)
+    conv_out = sum(xc[:, i : i + x.shape[1]] * params["conv"][i] for i in range(CONV_K))
+    x = jax.nn.silu(conv_out)
+    new_conv_state = xc[:, -(CONV_K - 1):]
+
+    bc = x @ params["w_bc"]
+    n = bc.shape[-1] // 2
+    Bm, Cm = bc[..., :n], bc[..., n:]                       # [B,S,n]
+    dt = jax.nn.softplus(x * params["w_dt"] + params["dt_bias"])  # [B,S,d]
+    A = -jnp.exp(params["logA"].astype(jnp.float32))         # [d,n]
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp                            # [B,d],[B,d],[B,n],[B,n]
+        dA = jnp.exp(dt_t[..., None] * A[None])              # [B,d,n]
+        h = dA * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    seq = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (x, dt, Bm, Cm))
+    h_final, ys = jax.lax.scan(step, h0, seq)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    y = y + x * params["D"]
+    return (y * jax.nn.silu(z)) @ params["out_proj"], new_conv_state, h_final
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # [B, CONV_K-1, d]
+    h: jax.Array     # [B, d, n]
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, CONV_K - 1, cfg.d_model), cfg.dtype),
+        h=jnp.zeros((batch, cfg.d_model, cfg.ssm_state), jnp.float32),
+    )
+
+
+def mamba_train(params, x, cfg: ModelConfig):
+    xz = x @ params["in_proj"]
+    st = init_mamba_state(cfg, x.shape[0])
+    y, _, _ = _mamba_core(params, xz, st.conv, st.h)
+    return y
+
+
+def mamba_decode(params, x, state: MambaState, cfg: ModelConfig):
+    xz = x @ params["in_proj"]
+    y, conv, h = _mamba_core(params, xz, state.conv, state.h)
+    return y, MambaState(conv=conv, h=h)

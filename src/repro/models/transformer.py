@@ -1,0 +1,454 @@
+"""Decoder-only / encoder-decoder transformer assembly.
+
+All families share one block scaffold (pre-norm residual blocks scanned over
+a stacked ``[L, ...]`` parameter pytree):
+
+  dense / vlm : GQA attention + SwiGLU FFN
+  moe         : GQA attention + top-k expert FFN (+ optional shared expert)
+  ssm (rwkv6) : RWKV6 time-mix + channel-mix (attention-free)
+  hybrid      : parallel GQA-attention and Mamba heads, fused by averaging
+                (Hymba-style), + SwiGLU FFN
+  encdec      : local-attention encoder over frontend embeddings + causal
+                decoder with cross-attention
+
+Entry points return pure functions suitable for jax.jit/pjit.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import (BATCH_AXES, ModelConfig, cross_entropy_loss, dense_init,
+                     embed_init, maybe_shard, rmsnorm, swiglu, vocab_mask)
+
+
+# ---------------------------------------------------------------------------
+# per-layer parameter init
+
+
+def init_ffn_params(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, d, (d, f), cfg.param_dtype),
+        "w3": dense_init(k2, d, (d, f), cfg.param_dtype),
+        "w2": dense_init(k3, f, (f, d), cfg.param_dtype),
+    }
+
+
+def init_block_params(key, cfg: ModelConfig, cross_attention: bool = False):
+    ks = jax.random.split(key, 6)
+    p = {"ln1": jnp.ones((cfg.d_model,), cfg.param_dtype),
+         "ln2": jnp.ones((cfg.d_model,), cfg.param_dtype)}
+    if cfg.family == "ssm":
+        p["tm"] = ssm_mod.init_rwkv_params(ks[0], cfg)
+        p["cm"] = ssm_mod.init_rwkv_cm_params(ks[1], cfg)
+        return p
+    p["attn"] = attn.init_attn_params(ks[0], cfg)
+    if cfg.hybrid:
+        p["mamba"] = ssm_mod.init_mamba_params(ks[1], cfg)
+    if cross_attention:
+        p["xattn"] = attn.init_attn_params(ks[2], cfg)
+        p["ln_x"] = jnp.ones((cfg.d_model,), cfg.param_dtype)
+    if cfg.n_experts:
+        p["moe"] = moe_mod.init_moe_params(ks[3], cfg)
+    else:
+        p["ffn"] = init_ffn_params(ks[3], cfg)
+    return p
+
+
+def stack_layer_params(key, cfg: ModelConfig, n_layers: int, **kw):
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(lambda k: init_block_params(k, cfg, **kw))(keys)
+
+
+# ---------------------------------------------------------------------------
+# block forward (training / prefill path)
+
+
+def block_train(p, x, cfg: ModelConfig, enc_out=None, return_kv=False):
+    """One residual block over the full sequence. Returns (x, aux, kv)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    kv = None
+    if cfg.family == "ssm":
+        y = ssm_mod.rwkv_time_mix_train(p["tm"], h, cfg)
+        x = x + y
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        h2_prev = jnp.pad(h2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        return x + ssm_mod.rwkv_channel_mix(p["cm"], h2, h2_prev), aux, kv
+    y = attn.attend_train(p["attn"], h, cfg)
+    if return_kv:
+        # re-derive K/V for the cache (cheap relative to attention itself)
+        kv = _project_kv(p["attn"], h, cfg)
+    if cfg.hybrid:
+        y = 0.5 * (y + ssm_mod.mamba_train(p["mamba"], h, cfg))
+    x = x + y
+    if enc_out is not None:
+        hx = rmsnorm(x, p["ln_x"], cfg.norm_eps)
+        x = x + attn.attend_train(p["xattn"], hx, cfg, kv_x=enc_out, causal=False)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        y, moe_aux = moe_mod.moe_ffn(p["moe"], h, cfg)
+        aux = moe_aux["lb_loss"]
+    else:
+        y = swiglu(h, p["ffn"]["w1"], p["ffn"]["w3"], p["ffn"]["w2"])
+    return x + y, aux, kv
+
+
+def _project_kv(ap, x, cfg: ModelConfig):
+    S = x.shape[1]
+    pos = jnp.arange(S)[None, :]
+    k = jnp.einsum("bsd,dhk->bshk", x, ap["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, ap["wv"])
+    k = attn.apply_rope(k, pos, cfg.rope_theta)
+    if cfg.attn_variant == "swa":
+        k, v = k[:, -cfg.window:], v[:, -cfg.window:]
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# block decode (one token)
+
+
+def block_decode(p, x, cache, cfg: ModelConfig, enc_kv=None):
+    """x: [B,1,d]; cache is the per-layer cache pytree."""
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        y, st = ssm_mod.rwkv_time_mix_decode(p["tm"], h, cache, cfg)
+        x = x + y
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        y2 = ssm_mod.rwkv_channel_mix(p["cm"], h2, st.shift_cm[:, None, :])
+        st = st._replace(shift_cm=h2[:, 0])
+        return x + y2, st
+    if cfg.hybrid:
+        kv_cache, m_state = cache
+        ya, kv_cache = attn.attend_decode(p["attn"], h, kv_cache, cfg)
+        ym, m_state = ssm_mod.mamba_decode(p["mamba"], h, m_state, cfg)
+        x = x + 0.5 * (ya + ym)
+        new_cache = (kv_cache, m_state)
+    else:
+        y, new_cache = attn.attend_decode(p["attn"], h, cache, cfg)
+        x = x + y
+    if enc_kv is not None:
+        hx = rmsnorm(x, p["ln_x"], cfg.norm_eps)
+        x = x + _cross_attend_cached(p["xattn"], hx, enc_kv, cfg)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.n_experts:
+        y, _ = moe_mod.moe_ffn(p["moe"], h, cfg)
+    else:
+        y = swiglu(h, p["ffn"]["w1"], p["ffn"]["w3"], p["ffn"]["w2"])
+    return x + y, new_cache
+
+
+def _cross_attend_cached(ap, x, enc_kv, cfg: ModelConfig):
+    """Cross attention against precomputed encoder K/V: enc_kv = (k, v)."""
+    k, v = enc_kv
+    H, KV, dh = cfg.n_heads_padded, cfg.n_kv_heads_padded, cfg.d_head
+    q = jnp.einsum("bsd,dhk->bshk", x, ap["wq"])
+    kk = attn._repeat_kv(k, H // KV)
+    vv = attn._repeat_kv(v, H // KV)
+    s = jnp.einsum("bshk,bthk->bhst", q, kk).astype(jnp.float32) / jnp.sqrt(dh)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", pr, vv)
+    return jnp.einsum("bshk,hkd->bsd", out, ap["wo"])
+
+
+# ---------------------------------------------------------------------------
+# layer-stack traversal: lax.scan (compact HLO) or python unroll (used by
+# the dry-run cost probe — XLA's cost analysis counts a while body once, so
+# per-layer costs are measured on unrolled 1/2-layer variants and
+# extrapolated)
+
+
+def scan_layers(body, carry, blocks, n_layers: int, unroll: bool):
+    if not unroll:
+        return jax.lax.scan(body, carry, blocks)
+    ys = []
+    for i in range(n_layers):
+        lp = jax.tree_util.tree_map(lambda a: a[i], blocks)
+        carry, y = body(carry, lp)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ys)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# full models
+
+
+class DecoderLM:
+    """Decoder-only LM covering dense / moe / ssm / hybrid / vlm families.
+
+    ``remat=True`` wraps the per-layer scan body in jax.checkpoint
+    (activation recomputation) — required for the 4k-seq training shapes to
+    fit HBM; the dry-run launcher enables it for train lowering.
+    """
+
+    def __init__(self, cfg: ModelConfig, remat: bool = False,
+                 unroll: bool = False):
+        self.cfg = cfg
+        self.remat = remat
+        self.unroll = unroll
+
+    # -- params ---------------------------------------------------------
+    def init(self, rng):
+        cfg = self.cfg
+        k_emb, k_blocks, k_head = jax.random.split(rng, 3)
+        params = {
+            "embed": embed_init(k_emb, cfg.vocab_padded, cfg.d_model,
+                                cfg.param_dtype),
+            "blocks": stack_layer_params(k_blocks, cfg, cfg.n_layers),
+            "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(
+                k_head, cfg.vocab_padded, cfg.d_model, cfg.param_dtype).T
+        return params
+
+    # -- shared trunk ----------------------------------------------------
+    def _embed(self, params, tokens, frontend_embeds=None):
+        x = params["embed"][tokens].astype(self.cfg.dtype)
+        if frontend_embeds is not None:
+            x = jnp.concatenate([frontend_embeds.astype(self.cfg.dtype), x], axis=1)
+        return x
+
+    def _trunk(self, params, x):
+        cfg = self.cfg
+
+        def body(h, layer_p):
+            h, aux, _ = block_train(layer_p, h, cfg)
+            return h, aux
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        x, auxs = scan_layers(body, x, params["blocks"], cfg.n_layers, self.unroll)
+        return rmsnorm(x, params["final_norm"], cfg.norm_eps), jnp.sum(auxs)
+
+    def _logits(self, params, x):
+        head = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        logits = x @ head.astype(x.dtype)
+        vm = vocab_mask(self.cfg)
+        if vm is not None:
+            logits = logits + vm.astype(logits.dtype)
+        return maybe_shard(logits, BATCH_AXES, None, "model")
+
+    # -- training --------------------------------------------------------
+    def loss(self, params, batch):
+        """batch: {tokens [B,S], labels [B,S], (frontend_embeds [B,N,d])}."""
+        x = self._embed(params, batch["tokens"], batch.get("frontend_embeds"))
+        x, aux = self._trunk(params, x)
+        n_fe = 0 if "frontend_embeds" not in batch else batch["frontend_embeds"].shape[1]
+        logits = self._logits(params, x[:, n_fe:])
+        mask = batch.get("mask")
+        return cross_entropy_loss(logits, batch["labels"], mask) + 0.01 * aux
+
+    def logits_fn(self, params, batch):
+        x = self._embed(params, batch["tokens"], batch.get("frontend_embeds"))
+        x, _ = self._trunk(params, x)
+        n_fe = 0 if "frontend_embeds" not in batch else batch["frontend_embeds"].shape[1]
+        return self._logits(params, x[:, n_fe:])
+
+    # -- decode -----------------------------------------------------------
+    def init_cache(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        L = cfg.n_layers
+
+        def one(_):
+            if cfg.family == "ssm":
+                return ssm_mod.init_rwkv_state(cfg, batch)
+            kvc = attn.init_cache(cfg, batch, cache_len, cfg.dtype)
+            if cfg.hybrid:
+                return (kvc, ssm_mod.init_mamba_state(cfg, batch))
+            return kvc
+
+        return jax.vmap(one)(jnp.arange(L))
+
+    def decode_step(self, params, cache, tokens, cache_len_hint: int = 0):
+        """tokens: [B, 1] -> (logits [B,1,V], new cache)."""
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(cfg.dtype)
+
+        def body(h, scanned):
+            layer_p, layer_cache = scanned
+            h, new_cache = block_decode(layer_p, h, layer_cache, cfg)
+            return h, new_cache
+
+        x, new_cache = scan_layers(body, x, (params["blocks"], cache), cfg.n_layers, self.unroll)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return self._logits(params, x), new_cache
+
+    def prefill(self, params, tokens, cache_len: int, frontend_embeds=None):
+        """Full forward returning (logits, populated cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, frontend_embeds)
+        B, S = x.shape[0], x.shape[1]
+
+        def body(h, layer_p):
+            h, _, kv = block_train(layer_p, h, cfg, return_kv=True)
+            return h, kv
+
+        if cfg.family == "ssm":
+            # run trunk and rebuild final states per layer via scan outputs
+            def body_ssm(h, layer_p):
+                hn = rmsnorm(h, layer_p["ln1"], cfg.norm_eps)
+                x_prev = jnp.pad(hn, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+                r, k, v, w, g = ssm_mod._rwkv_inputs(layer_p["tm"], hn, x_prev, cfg)
+                st0 = ssm_mod.init_rwkv_state(cfg, B)
+                wkv, S_final = ssm_mod.rwkv_recurrence(
+                    r.astype(jnp.float32), k.astype(jnp.float32),
+                    v.astype(jnp.float32), w,
+                    layer_p["tm"]["u"].astype(jnp.float32), st0.S)
+                h = h + ssm_mod._rwkv_out(layer_p["tm"], wkv.astype(h.dtype), g, cfg)
+                h2 = rmsnorm(h, layer_p["ln2"], cfg.norm_eps)
+                h2_prev = jnp.pad(h2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+                h = h + ssm_mod.rwkv_channel_mix(layer_p["cm"], h2, h2_prev)
+                state = ssm_mod.RWKVState(shift=hn[:, -1], shift_cm=h2[:, -1], S=S_final)
+                return h, state
+
+            x, states = scan_layers(body_ssm, x, params["blocks"], cfg.n_layers, self.unroll)
+            x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+            return self._logits(params, x[:, -1:]), states
+
+        if cfg.hybrid:
+            def body_hybrid(h, layer_p):
+                hn = rmsnorm(h, layer_p["ln1"], cfg.norm_eps)
+                ya = attn.attend_train(layer_p["attn"], hn, cfg)
+                kv = _project_kv(layer_p["attn"], hn, cfg)
+                xz = hn @ layer_p["mamba"]["in_proj"]
+                st0 = ssm_mod.init_mamba_state(cfg, B)
+                ym, conv_st, h_st = ssm_mod._mamba_core(
+                    layer_p["mamba"], xz, st0.conv, st0.h)
+                h = h + 0.5 * (ya + ym)
+                hn = rmsnorm(h, layer_p["ln2"], cfg.norm_eps)
+                h = h + swiglu(hn, layer_p["ffn"]["w1"], layer_p["ffn"]["w3"],
+                               layer_p["ffn"]["w2"])
+                return h, (kv, ssm_mod.MambaState(conv=conv_st, h=h_st))
+
+            x, (kvs, m_states) = scan_layers(body_hybrid, x, params["blocks"], cfg.n_layers, self.unroll)
+        else:
+            x, kvs = scan_layers(body, x, params["blocks"], cfg.n_layers, self.unroll)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        ks_, vs_ = kvs
+        C = min(cache_len, cfg.window) if cfg.attn_variant == "swa" else cache_len
+        pad = C - ks_.shape[2]
+        if pad > 0:
+            ks_ = jnp.pad(ks_, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            vs_ = jnp.pad(vs_, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        elif cfg.attn_variant == "swa" and S > C:
+            # align the sliced window with the ring-buffer slot convention
+            # (token t lives at slot t % C)
+            ks_ = jnp.roll(ks_, S % C, axis=2)
+            vs_ = jnp.roll(vs_, S % C, axis=2)
+        if cfg.cache_dtype is not None:
+            ks_ = ks_.astype(cfg.cache_dtype)
+            vs_ = vs_.astype(cfg.cache_dtype)
+        length = jnp.full((), S, jnp.int32)
+        cache = jax.vmap(lambda k, v: attn.KVCache(k=k, v=v, length=length))(ks_, vs_)
+        if cfg.hybrid:
+            return self._logits(params, x[:, -1:]), (cache, m_states)
+        return self._logits(params, x[:, -1:]), cache
+
+
+class EncDecLM:
+    """Encoder-decoder (audio) model: local-attention encoder over frontend
+    embeddings, causal decoder with cross attention."""
+
+    def __init__(self, cfg: ModelConfig, remat: bool = False,
+                 unroll: bool = False):
+        self.cfg = cfg
+        self.remat = remat
+        self.unroll = unroll
+        assert cfg.encoder_layers > 0
+
+    def init(self, rng):
+        cfg = self.cfg
+        k_emb, k_enc, k_dec, k_head = jax.random.split(rng, 4)
+        enc_cfg = cfg  # same dims; encoder ignores moe/hybrid
+        return {
+            "embed": embed_init(k_emb, cfg.vocab, cfg.d_model, cfg.param_dtype),
+            "enc_blocks": stack_layer_params(k_enc, enc_cfg, cfg.encoder_layers),
+            "enc_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "dec_blocks": stack_layer_params(k_dec, cfg, cfg.n_layers, cross_attention=True),
+            "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+            "lm_head": embed_init(k_head, cfg.vocab_padded, cfg.d_model,
+                                  cfg.param_dtype).T,
+        }
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        w = cfg.encoder_window or 1024
+
+        def body(h, layer_p):
+            hn = rmsnorm(h, layer_p["ln1"], cfg.norm_eps)
+            y = attn.attend_train(layer_p["attn"], hn, cfg, window=w, causal=True)
+            h = h + y
+            hn = rmsnorm(h, layer_p["ln2"], cfg.norm_eps)
+            h = h + swiglu(hn, layer_p["ffn"]["w1"], layer_p["ffn"]["w3"], layer_p["ffn"]["w2"])
+            return h, None
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        x, _ = scan_layers(body, frames.astype(cfg.dtype), params["enc_blocks"], cfg.encoder_layers, self.unroll)
+        return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+    def loss(self, params, batch):
+        """batch: {frontend_embeds [B,Se,d], tokens [B,Sd], labels [B,Sd]}."""
+        cfg = self.cfg
+        enc = self.encode(params, batch["frontend_embeds"])
+        x = params["embed"][batch["tokens"]].astype(cfg.dtype)
+
+        def body(h, layer_p):
+            h, aux, _ = block_train(layer_p, h, cfg, enc_out=enc)
+            return h, aux
+
+        if self.remat:
+            body = jax.checkpoint(body)
+        x, _ = scan_layers(body, x, params["dec_blocks"], cfg.n_layers, self.unroll)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["lm_head"].astype(x.dtype)
+        vm = vocab_mask(cfg)
+        if vm is not None:
+            logits = logits + vm.astype(logits.dtype)
+        return cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+
+    def init_cache(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        return jax.vmap(lambda _: attn.init_cache(cfg, batch, cache_len, cfg.dtype))(
+            jnp.arange(cfg.n_layers))
+
+    def precompute_enc_kv(self, params, enc_out):
+        """Per-decoder-layer cross-attention K/V from encoder output."""
+        cfg = self.cfg
+
+        def one(layer_p):
+            k = jnp.einsum("bsd,dhk->bshk", enc_out, layer_p["xattn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", enc_out, layer_p["xattn"]["wv"])
+            return k, v
+
+        return jax.vmap(one)(params["dec_blocks"])
+
+    def decode_step(self, params, cache, tokens, enc_kv):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(cfg.dtype)
+
+        def body(h, scanned):
+            layer_p, layer_cache, layer_enc_kv = scanned
+            h, new_cache = block_decode(layer_p, h, layer_cache, cfg, enc_kv=layer_enc_kv)
+            return h, new_cache
+
+        x, new_cache = scan_layers(body, x, (params["dec_blocks"], cache, enc_kv), cfg.n_layers, self.unroll)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = x @ params["lm_head"].astype(x.dtype)
+        vm = vocab_mask(cfg)
+        if vm is not None:
+            logits = logits + vm.astype(logits.dtype)
+        return logits, new_cache

@@ -1,0 +1,5 @@
+from .optimizers import (Optimizer, adam, adamw, fedprox_loss, sgd,
+                         cosine_schedule, constant_schedule)
+
+__all__ = ["Optimizer", "adam", "adamw", "sgd", "fedprox_loss",
+           "cosine_schedule", "constant_schedule"]

@@ -1,0 +1,138 @@
+"""Pure-JAX pytree optimizers (no optax available offline).
+
+API mirrors optax loosely: ``opt = sgd(...)``; ``state = opt.init(params)``;
+``params, state = opt.update(grads, state, params)``. All state lives in a
+pytree so optimizers compose with pjit/shard_map and checkpointing.
+
+``state_dtype`` lets large-model training keep first/second moments in
+bf16 (used by the giant-MoE dry-run configs to fit HBM — see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]
+    name: str = "optimizer"
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, warmup: int = 0,
+                    final_frac: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return lr * warm * cos
+    return sched
+
+
+def _resolve(lr):
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+def sgd(lr, momentum: float = 0.0, weight_decay: float = 0.0,
+        state_dtype=None) -> Optimizer:
+    """SGD with optional (heavy-ball) momentum and decoupled weight decay."""
+    sched = _resolve(lr)
+
+    def init(params):
+        step = jnp.zeros((), jnp.int32)
+        if momentum == 0.0:
+            return {"step": step}
+        dt = state_dtype
+        return {"step": step,
+                "mu": jax.tree.map(
+                    lambda p: jnp.zeros_like(p, dtype=dt or p.dtype), params)}
+
+    def update(grads, state, params):
+        lr_t = sched(state["step"])
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: (p - lr_t * (g + weight_decay * p)).astype(p.dtype),
+                params, grads)
+            return new_params, {"step": state["step"] + 1}
+        mu = jax.tree.map(lambda m, g: (momentum * m + g).astype(m.dtype),
+                          state["mu"], grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p - lr_t * (m.astype(jnp.float32)
+                                      + weight_decay * p)).astype(p.dtype),
+            params, mu)
+        return new_params, {"step": state["step"] + 1, "mu": mu}
+
+    return Optimizer(init=init, update=update, name="sgd")
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay, decoupled, state_dtype, name):
+    sched = _resolve(lr)
+
+    def init(params):
+        dt = state_dtype
+
+        def z(p):
+            return jnp.zeros_like(p, dtype=dt or jnp.float32)
+
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(state["step"])
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            if weight_decay and not decoupled:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            upd_ = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            if weight_decay and decoupled:
+                upd_ = upd_ + weight_decay * p.astype(jnp.float32)
+            p_new = (p.astype(jnp.float32) - lr_t * upd_).astype(p.dtype)
+            return p_new, m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_params, {"step": step, "m": new_m, "v": new_v}
+
+    return Optimizer(init=init, update=update, name=name)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0, state_dtype=None):
+    return _adam_core(lr, b1, b2, eps, weight_decay, False, state_dtype, "adam")
+
+
+def adamw(lr, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01, state_dtype=None):
+    return _adam_core(lr, b1, b2, eps, weight_decay, True, state_dtype, "adamw")
+
+
+def fedprox_loss(loss_fn, mu: float):
+    """FedProx [34]: adds (μ/2)·||w − w_global||² to the local objective."""
+    def wrapped(params, batch, global_params):
+        base = loss_fn(params, batch)
+        prox = sum(jnp.sum(jnp.square(p.astype(jnp.float32) -
+                                      g.astype(jnp.float32)))
+                   for p, g in zip(jax.tree.leaves(params),
+                                   jax.tree.leaves(global_params)))
+        return base + 0.5 * mu * prox
+    return wrapped

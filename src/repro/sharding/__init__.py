@@ -1,0 +1,5 @@
+from .specs import (STRATEGIES, batch_specs, cache_specs, leaf_spec,
+                    param_specs, tree_shardings)
+
+__all__ = ["STRATEGIES", "batch_specs", "cache_specs", "leaf_spec",
+           "param_specs", "tree_shardings"]

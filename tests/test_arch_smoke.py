@@ -1,0 +1,165 @@
+"""Per-architecture smoke tests: reduced config (2 layers, d_model ≤ 512,
+≤4 experts), one forward + one train step on CPU; output shapes + no NaNs.
+Also decode-path consistency vs teacher forcing."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, get_config
+from repro.models import build_model
+from repro.optim import adamw
+
+ARCHS = all_archs()
+
+
+def _batch(cfg, B=2, S=32, rng_seed=0):
+    rng = jax.random.PRNGKey(rng_seed)
+    if cfg.encoder_layers:
+        return {
+            "frontend_embeds": 0.1 * jax.random.normal(
+                rng, (B, S, cfg.d_model), cfg.dtype),
+            "tokens": jax.random.randint(rng, (B, S // 4), 0, cfg.vocab),
+            "labels": jax.random.randint(rng, (B, S // 4), 0, cfg.vocab),
+        }
+    batch = {
+        "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab),
+    }
+    if cfg.n_frontend_embeds:
+        batch["frontend_embeds"] = 0.1 * jax.random.normal(
+            rng, (B, cfg.n_frontend_embeds, cfg.d_model), cfg.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_config_limits(arch):
+    cfg = get_config(arch, reduced=True)
+    assert cfg.n_layers <= 2
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(p, s, b):
+        loss, grads = jax.value_and_grad(model.loss)(p, b)
+        p, s = opt.update(grads, s, p)
+        return p, s, loss
+
+    loss0 = model.loss(params, batch)
+    assert np.isfinite(float(loss0)), "initial loss must be finite"
+    params, opt_state, loss = step(params, opt_state, batch)
+    assert np.isfinite(float(loss))
+    # all updated params finite
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree.leaves(params))
+    # second step reduces loss on the same batch (sanity of gradients)
+    for _ in range(3):
+        params, opt_state, loss = step(params, opt_state, batch)
+    assert float(loss) < float(loss0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_logits_shape(arch):
+    cfg = get_config(arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    if cfg.encoder_layers:
+        loss = model.loss(params, batch)  # enc-dec exposes loss only
+        assert loss.shape == ()
+        return
+    logits = model.logits_fn(params, batch)
+    assert logits.shape == (*batch["tokens"].shape, cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if "seamless" not in a])
+def test_decode_matches_teacher_forcing(arch):
+    cfg = get_config(arch, reduced=True)
+    if cfg.n_experts:  # avoid capacity-drop nondeterminism in the check
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S, C = 2, 24, 96
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + 1), 0, cfg.vocab)
+    _, cache = model.prefill(params, toks[:, :S], C)
+    logits_dec, _ = model.decode_step(params, cache, toks[:, S:S + 1])
+    full = model.logits_fn(params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(logits_dec[:, 0]),
+                               np.asarray(full[:, S]), atol=2e-4, rtol=1e-3)
+
+
+def test_encdec_decode_runs():
+    cfg = get_config("seamless-m4t-large-v2", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S, C = 2, 16, 32
+    frames = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model))
+    enc = model.encode(params, frames)
+    enc_kv = model.precompute_enc_kv(params, enc)
+    cache = model.init_cache(B, C)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for _ in range(3):
+        logits, cache = model.decode_step(params, cache, tok, enc_kv)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32).reshape(B, 1)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_multi_step_decode_consistency():
+    """Decode 4 tokens step-by-step == teacher forcing at each position."""
+    cfg = get_config("granite-3-2b", reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    B, S, C, G = 1, 16, 64, 4
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, S + G), 0, cfg.vocab)
+    _, cache = model.prefill(params, toks[:, :S], C)
+    full = model.logits_fn(params, {"tokens": toks})
+    for g in range(G):
+        logits, cache = model.decode_step(params, cache, toks[:, S + g:S + g + 1])
+        np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                                   np.asarray(full[:, S + g]),
+                                   atol=2e-4, rtol=1e-3)
+
+
+# -- paper models -----------------------------------------------------------
+
+
+def test_paper_lstm_trains():
+    from repro.models import LSTMModel
+    model = LSTMModel(vocab=30, embed=8, hidden=32, layers=2)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 20), 0, 30)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    loss = model.loss(params, batch)
+    assert np.isfinite(float(loss))
+    assert model.logits_fn(params, batch).shape == (4, 19, 30)
+
+
+def test_paper_kwt_trains():
+    from repro.models import KWTModel
+    model = KWTModel(n_classes=10, d=32, layers=2, heads=2, mlp=64, n_patches=8)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"mfcc": jax.random.normal(jax.random.PRNGKey(1), (4, 8, 40)),
+             "labels": jnp.array([0, 1, 2, 3])}
+    assert np.isfinite(float(model.loss(params, batch)))
+
+
+def test_paper_convnet_trains():
+    from repro.models import ConvNet
+    model = ConvNet(n_classes=10, channels=(8, 16), hw=16)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"image": jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16, 3)),
+             "labels": jnp.array([0, 1, 2, 3])}
+    assert np.isfinite(float(model.loss(params, batch)))

@@ -1,0 +1,236 @@
+"""Unit tests: fairness blocklist, Oort utility, power sharing, traces,
+profiles, checkpointing, optimizers."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Blocklist, UtilityTracker, share_power
+from repro.core.profiles import make_paper_registry, paper_profile, tpu_site_profile
+from repro.data.traces import make_scenario
+
+
+# ---------------------------------------------------------------------------
+# fairness
+
+
+def test_blocklist_blocks_and_releases():
+    bl = Blocklist(["a", "b", "c"], alpha=1.0, seed=0)
+    bl.record_participation(["a"])
+    assert bl.is_blocked("a") and not bl.is_blocked("b")
+    # release prob for a: p(a)=1, omega=mean=1/3 -> (1-1/3)^-1 = 1.5 -> 1.0
+    bl.start_round()
+    assert not bl.is_blocked("a")
+
+
+def test_blocklist_high_participation_released_slowly():
+    bl = Blocklist([f"c{i}" for i in range(10)], alpha=1.0, seed=0)
+    for _ in range(20):
+        bl.record_participation(["c0"])
+    bl.start_round()  # omega = mean = 2.0; p(c0)-omega = 18 -> P = 1/18
+    assert bl.release_probability("c0") == pytest.approx(1 / 18.0)
+
+
+def test_blocklist_alpha_controls_release():
+    b1 = Blocklist(["x"], alpha=0.5)
+    b2 = Blocklist(["x"], alpha=2.0)
+    for b in (b1, b2):
+        b.participation["x"] = 10
+        b.omega = 1.0
+    assert b1.release_probability("x") > b2.release_probability("x")
+
+
+# ---------------------------------------------------------------------------
+# Oort utility
+
+
+def test_oort_sigma_formula():
+    ut = UtilityTracker({"a": 50, "b": 100})
+    assert ut.sigma("a") == 1.0  # never participated
+    ut.record("a", np.array([2.0, 2.0, 2.0]))
+    assert ut.sigma("a") == pytest.approx(50 * 2.0)
+    ut.record("b", np.array([1.0, 3.0]))
+    assert ut.sigma("b") == pytest.approx(100 * np.sqrt((1 + 9) / 2))
+
+
+# ---------------------------------------------------------------------------
+# power sharing (deterministic cases)
+
+
+def test_share_power_single_client_gets_all_it_can_use():
+    g = share_power(100.0, np.array([2.0]), np.array([0.0]),
+                    np.array([10.0]), np.array([20.0]), np.array([5.0]))
+    # capacity 5 batches × δ2 = 10 energy, even though 100 available
+    assert g[0] == pytest.approx(10.0)
+
+
+def test_share_power_weighted_by_remaining_need():
+    # both below min; client 0 needs 2x the energy of client 1
+    g = share_power(6.0, np.array([1.0, 1.0]), np.array([0.0, 5.0]),
+                    np.array([10.0, 10.0]), np.array([20.0, 20.0]),
+                    np.array([100.0, 100.0]))
+    assert g[0] == pytest.approx(4.0, rel=1e-3)
+    assert g[1] == pytest.approx(2.0, rel=1e-3)
+
+
+def test_share_power_redistributes_capacity_limited():
+    # client 0 capped at 1 batch; leftover goes to client 1
+    g = share_power(10.0, np.array([1.0, 1.0]), np.array([0.0, 0.0]),
+                    np.array([10.0, 10.0]), np.array([20.0, 20.0]),
+                    np.array([1.0, 100.0]))
+    assert g[0] == pytest.approx(1.0)
+    assert g[1] == pytest.approx(9.0)
+
+
+# ---------------------------------------------------------------------------
+# traces
+
+
+def test_scenario_shapes_and_diurnality():
+    sc = make_scenario("global", n_clients=20, days=2, seed=1)
+    assert sc.excess.shape == (10, 2 * 24 * 60)
+    assert sc.util.shape == (20, 2 * 24 * 60)
+    assert (sc.excess >= 0).all()
+    assert sc.excess.max() <= 800.0 + 1e-6
+    # some zero (night) and some positive (day) for every domain
+    assert (sc.excess.min(axis=1) == 0).all()
+    assert (sc.excess.max(axis=1) > 100).all()
+
+
+def test_global_vs_colocated_phase():
+    """Co-located domains peak together; global domains are spread."""
+    g = make_scenario("global", n_clients=10, days=1, seed=0)
+    c = make_scenario("co_located", n_clients=10, days=1, seed=0)
+    peak_g = g.excess.argmax(axis=1)
+    peak_c = c.excess.argmax(axis=1)
+    assert np.std(peak_c) < np.std(peak_g)
+
+
+def test_forecast_error_modes():
+    sc_err = make_scenario("global", n_clients=5, days=1, seed=0, error="realistic")
+    sc_none = make_scenario("global", n_clients=5, days=1, seed=0, error="none")
+    sc_noload = make_scenario("global", n_clients=5, days=1, seed=0, error="no_load")
+    now, H = 600, 30
+    f_err = sc_err.excess_forecast(now, H)
+    f_none = sc_none.excess_forecast(now, H)
+    actual = sc_err.excess[:, now + 1: now + 1 + H]
+    np.testing.assert_allclose(f_none, actual)
+    assert not np.allclose(f_err, actual)       # realistic errors differ
+    assert sc_noload.spare_forecast(now, H) is None
+    assert sc_err.spare_forecast(now, H) is not None
+
+
+def test_unlimited_domain():
+    sc = make_scenario("global", n_clients=5, days=1, seed=0,
+                       unlimited_domains=("berlin",))
+    i = sc.domain_names.index("berlin")
+    assert (sc.excess[i] >= 1e8).all()
+
+
+# ---------------------------------------------------------------------------
+# profiles
+
+
+def test_paper_profile_table2():
+    m_c, delta = paper_profile("small", "densenet")
+    assert m_c == pytest.approx(11.0)     # 110 samples/min / batch 10
+    assert delta == pytest.approx(70.0 / 11.0)
+
+
+def test_registry_structure():
+    reg = make_paper_registry(n_clients=100, n_domains=10)
+    assert len(reg) == 100
+    assert len(reg.domains) == 10
+    sizes = [len(p.clients) for p in reg.domains.values()]
+    assert sum(sizes) == 100
+
+
+def test_tpu_site_profile_roofline_terms():
+    # compute-bound case: flops dominate
+    m_c, delta = tpu_site_profile(flops_per_step=1e15, bytes_per_step=1e9,
+                                  n_chips=256, batch_per_step=1)
+    t = 1e15 / (256 * 197e12)
+    assert m_c == pytest.approx(60.0 / t)
+    assert delta * m_c == pytest.approx(256 * 250.0)  # W × min worth
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import load_checkpoint, save_checkpoint, latest_step
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 7, tree, extra={"step": 7})
+    assert latest_step(str(tmp_path)) == 7
+    restored, extra = load_checkpoint(str(tmp_path), tree)
+    assert extra["step"] == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+
+
+def _quadratic_min(opt, steps=200):
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for _ in range(steps):
+        grads = jax.grad(loss_fn)(params)
+        params, state = opt.update(grads, state, params)
+    return float(loss_fn(params))
+
+
+def test_sgd_converges_quadratic():
+    from repro.optim import sgd
+    assert _quadratic_min(sgd(0.1)) < 1e-6
+
+
+def test_sgd_momentum_converges():
+    from repro.optim import sgd
+    assert _quadratic_min(sgd(0.05, momentum=0.9)) < 1e-6
+
+
+def test_adamw_converges():
+    from repro.optim import adamw
+    assert _quadratic_min(adamw(0.1, weight_decay=0.0), steps=400) < 1e-4
+
+
+def test_fedprox_penalty_pulls_to_global():
+    from repro.optim import fedprox_loss, sgd
+    base = lambda p, b: jnp.sum((p["w"] - 10.0) ** 2)
+    global_params = {"w": jnp.zeros(3)}
+    prox = fedprox_loss(base, mu=1000.0)   # huge prox => stay at global
+    params = {"w": jnp.zeros(3)}
+    opt = sgd(0.001)
+    state = opt.init(params)
+    for _ in range(100):
+        grads = jax.grad(prox)(params, None, global_params)
+        params, state = opt.update(grads, state, params)
+    # strong prox keeps params near 0 (global), far from 10
+    assert float(jnp.abs(params["w"]).max()) < 1.0
+
+
+def test_bf16_state_dtype():
+    from repro.optim import sgd
+    opt = sgd(0.1, momentum=0.9, state_dtype=jnp.bfloat16)
+    state = opt.init({"w": jnp.zeros(3, jnp.float32)})
+    assert state["mu"]["w"].dtype == jnp.bfloat16
+
+
+def test_cosine_schedule_endpoints():
+    from repro.optim import cosine_schedule
+    s = cosine_schedule(1.0, total_steps=100, warmup=10)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1.0, abs=0.02)
+    assert float(s(100)) == pytest.approx(0.1, abs=0.02)

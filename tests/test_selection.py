@@ -1,0 +1,125 @@
+"""Unit tests for Algorithm 1 + the MIP (repro.core.selection)."""
+import numpy as np
+import pytest
+
+from repro.core import (ClientRegistry, ClientSpec, PowerDomain,
+                        SelectionInputs, find_clients_for_duration,
+                        select_clients)
+
+
+def make_setup(n_clients=12, n_domains=3, horizon=20, seed=0,
+               energy=50.0, spare=4.0, delta=2.0, m_min=8, m_max=40):
+    rng = np.random.default_rng(seed)
+    domains = [PowerDomain(name=f"d{i}") for i in range(n_domains)]
+    clients = [ClientSpec(
+        name=f"c{i}", domain=f"d{i % n_domains}", m_max_capacity=spare,
+        delta=delta, n_samples=100, batches_per_epoch=m_min,
+        min_epochs=1.0, max_epochs=m_max / m_min)
+        for i in range(n_clients)]
+    reg = ClientRegistry(clients, domains)
+    inp = SelectionInputs(
+        registry=reg,
+        m_spare=np.full((n_clients, horizon), spare),
+        r_excess=np.full((n_domains, horizon), energy),
+        sigma=np.ones(n_clients),
+        client_order=[c.name for c in clients],
+        domain_order=[d.name for d in domains])
+    return reg, inp
+
+
+def assert_solution_valid(inp, sel, n):
+    assert len(sel.clients) == n                      # constraint (3)
+    d = sel.expected_duration
+    reg = inp.registry
+    for c in sel.clients:
+        spec = reg.clients[c]
+        total = sel.expected_batches[c]
+        assert total >= spec.m_min_batches - 1e-6     # constraint (1) lower
+        assert total <= spec.m_max_batches + 1e-6     # constraint (1) upper
+
+
+def test_mip_selects_exactly_n():
+    _, inp = make_setup()
+    sel = select_clients(inp, n=5, d_max=20)
+    assert sel is not None
+    assert_solution_valid(inp, sel, 5)
+
+
+def test_infeasible_when_no_energy():
+    _, inp = make_setup(energy=0.0)
+    assert select_clients(inp, n=5, d_max=20) is None
+
+
+def test_blocked_clients_never_selected():
+    _, inp = make_setup()
+    inp.sigma[:6] = 0.0  # block half
+    sel = select_clients(inp, n=5, d_max=20)
+    assert sel is not None
+    blocked = set(inp.client_order[:6])
+    assert not blocked & set(sel.clients)
+
+
+def test_insufficient_eligible_returns_none():
+    _, inp = make_setup(n_clients=12)
+    inp.sigma[:9] = 0.0  # only 3 eligible
+    assert select_clients(inp, n=5, d_max=20) is None
+
+
+def test_energy_constraint_limits_coselection():
+    """Two clients per domain can't both fit in tight energy; MIP must
+    spread across domains or allocate within budget."""
+    reg, inp = make_setup(n_clients=6, n_domains=3, energy=18.0,
+                          delta=2.0, spare=4.0, m_min=8)
+    # per-step energy 18 => 9 batches/step worth; m_min=8 within d needs
+    # 16 energy for one client; two clients/domain need 32 > 18 per step
+    # but over multiple steps it's fine — check budget per step honoured
+    sel = select_clients(inp, n=6, d_max=20)
+    assert sel is not None
+    # implied per-step usage cannot exceed budget (checked via MIP vars
+    # aggregate): total energy per domain ≤ budget × duration
+    d = sel.expected_duration
+    for dom in inp.domain_order:
+        members = [c for c in sel.clients if reg.clients[c].domain == dom]
+        used = sum(sel.expected_batches[c] * reg.clients[c].delta
+                   for c in members)
+        assert used <= 18.0 * d + 1e-6
+
+
+def test_binary_search_matches_linear():
+    _, inp = make_setup(energy=25.0)
+    s_bin = select_clients(inp, n=4, d_max=20, search="binary")
+    s_lin = select_clients(inp, n=4, d_max=20, search="linear")
+    assert s_bin is not None and s_lin is not None
+    assert s_bin.expected_duration == s_lin.expected_duration
+
+
+def test_duration_is_minimal():
+    """No valid solution may exist for d-1 if d was returned."""
+    _, inp = make_setup(energy=25.0)
+    sel = select_clients(inp, n=4, d_max=20)
+    d = sel.expected_duration
+    if d > 1:
+        assert find_clients_for_duration(inp, d - 1, 4) is None
+
+
+def test_greedy_matches_mip_feasibility():
+    _, inp = make_setup(seed=3)
+    s_mip = select_clients(inp, n=5, d_max=20, solver="mip")
+    s_greedy = select_clients(inp, n=5, d_max=20, solver="greedy")
+    assert (s_mip is None) == (s_greedy is None)
+    if s_mip is not None:
+        assert_solution_valid(inp, s_greedy, 5)
+        # greedy objective within 40% of MIP on this easy instance
+        obj = lambda s: sum(s.expected_batches.values())
+        assert obj(s_greedy) >= 0.6 * obj(s_mip)
+
+
+def test_sigma_weighting_prefers_high_utility():
+    """With capacity for only some clients, high-σ clients win."""
+    _, inp = make_setup(n_clients=12, energy=17.0)  # tight: ~1 client/domain
+    inp.sigma[:] = 0.01
+    favored = [0, 4, 8]  # one per domain
+    inp.sigma[favored] = 100.0
+    sel = select_clients(inp, n=3, d_max=20)
+    assert sel is not None
+    assert set(sel.clients) == {inp.client_order[i] for i in favored}

@@ -1,0 +1,45 @@
+"""The dry-run cost probe relies on unrolled layer traversal being
+semantically identical to the lax.scan path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "mixtral-8x22b",
+                                  "rwkv6-1.6b", "hymba-1.5b",
+                                  "seamless-m4t-large-v2"])
+def test_unroll_matches_scan(arch):
+    cfg = get_config(arch, reduced=True)
+    m_scan = build_model(cfg, unroll=False)
+    m_unroll = build_model(cfg, unroll=True)
+    params = m_scan.init(jax.random.PRNGKey(0))
+    rng = jax.random.PRNGKey(1)
+    B, S = 2, 16
+    if cfg.encoder_layers:
+        batch = {"frontend_embeds": 0.1 * jax.random.normal(rng, (B, S, cfg.d_model)),
+                 "tokens": jax.random.randint(rng, (B, S // 4), 0, cfg.vocab),
+                 "labels": jax.random.randint(rng, (B, S // 4), 0, cfg.vocab)}
+    else:
+        batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab),
+                 "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab)}
+    l1 = float(m_scan.loss(params, batch))
+    l2 = float(m_unroll.loss(params, batch))
+    assert l1 == pytest.approx(l2, rel=1e-5)
+
+
+def test_unroll_matches_scan_decode():
+    cfg = get_config("granite-3-2b", reduced=True)
+    m_scan = build_model(cfg, unroll=False)
+    m_unroll = build_model(cfg, unroll=True)
+    params = m_scan.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    _, cache = m_scan.prefill(params, toks, 32)
+    tok = toks[:, :1]
+    l1, _ = m_scan.decode_step(params, cache, tok)
+    l2, _ = m_unroll.decode_step(params, cache, tok)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=1e-5, rtol=1e-5)
