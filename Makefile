@@ -1,0 +1,16 @@
+# Developer entry points. Tier-1 verify == `make test`.
+PYTHON ?= python
+
+.PHONY: test test-quick bench-scalability
+
+# full tier-1 suite (what CI and the driver run)
+test:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q
+
+# scheduling-core tests only (~1 min): skips the kernel/model-heavy modules
+test-quick:
+	PYTHONPATH=src $(PYTHON) -m pytest -x -q -m "not slow"
+
+# 1k-50k client selection/simulation sweep -> BENCH_scalability.json
+bench-scalability:
+	$(PYTHON) benchmarks/scalability.py

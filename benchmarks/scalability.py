@@ -1,0 +1,134 @@
+"""Selection/simulation scalability sweep (paper §5 "tens of thousands of
+clients").
+
+Times the end-to-end ``select_clients`` call (binary search over d,
+eligibility filter + solver) for synthetic fleets of 1k→50k clients with
+both solvers, plus the vectorized ``FLSimulation._execute_round`` step loop
+for large selections. Emits ``BENCH_scalability.json`` at the repo root.
+
+Usage:
+    python benchmarks/scalability.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import (ClientRegistry, ClientSpec, FLSimulation, PowerDomain,
+                        ProxyTrainer, Selection, SelectionInputs,
+                        make_strategy, select_clients)
+from repro.data.traces import ScenarioData
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_scalability.json")
+
+
+def synth_inputs(n_clients: int, n_domains: int = 10, horizon: int = 60,
+                 seed: int = 0):
+    """A solvable fleet: per-domain energy scales with domain population so
+    selection stays feasible at every size."""
+    rng = np.random.default_rng(seed)
+    domains = [PowerDomain(name=f"d{i}") for i in range(n_domains)]
+    clients = [ClientSpec(
+        name=f"c{i:06d}", domain=f"d{i % n_domains}",
+        m_max_capacity=float(rng.uniform(2.0, 8.0)),
+        delta=float(rng.uniform(0.5, 3.0)),
+        n_samples=int(rng.integers(100, 1000)),
+        batches_per_epoch=int(rng.integers(4, 16)))
+        for i in range(n_clients)]
+    reg = ClientRegistry(clients, domains)
+    per_dom = n_clients / n_domains
+    inp = SelectionInputs(
+        registry=reg,
+        m_spare=rng.uniform(0.0, 6.0, (n_clients, horizon)),
+        r_excess=rng.uniform(0.0, 8.0 * per_dom, (n_domains, horizon)),
+        sigma=rng.uniform(0.1, 2.0, n_clients),
+        client_order=reg.client_names,
+        domain_order=[d.name for d in domains])
+    return reg, inp
+
+
+def bench_selection(sizes, solver: str, n: int = 10, d_max: int = 60,
+                    time_limit: float = 30.0):
+    out = []
+    for size in sizes:
+        reg, inp = synth_inputs(size)
+        t0 = time.perf_counter()
+        sel = select_clients(inp, n=n, d_max=d_max, solver=solver,
+                             time_limit=time_limit)
+        wall = time.perf_counter() - t0
+        row = {"solver": solver, "n_clients": size, "wall_s": wall,
+               "feasible": sel is not None,
+               "d": sel.expected_duration if sel else None}
+        out.append(row)
+        print(f"[select/{solver}] C={size:6d}  {wall:7.3f}s  "
+              f"feasible={row['feasible']} d={row['d']}")
+    return out
+
+
+def bench_execute_round(sizes, d_max: int = 60, seed: int = 0):
+    """Step-loop throughput: one full round over a selection of C clients
+    (every client selected — the worst case for the executor)."""
+    out = []
+    for size in sizes:
+        reg, inp = synth_inputs(size, seed=seed)
+        T = 24 * 60
+        rng = np.random.default_rng(seed + 1)
+        sc = ScenarioData(
+            excess=rng.uniform(0.0, 8.0 * size / 10, (10, T)),
+            util=rng.uniform(0.0, 1.0, (size, T)),
+            domain_names=inp.domain_order, seed=seed)
+        strat = make_strategy("random", reg, n=size, d_max=d_max, seed=seed)
+        trainer = ProxyTrainer(reg.client_names,
+                               {c: reg.clients[c].n_samples
+                                for c in reg.client_names})
+        sim = FLSimulation(reg, sc, strat, trainer, d_max=d_max)
+        sel = Selection(clients=reg.client_names, expected_duration=d_max)
+        t0 = time.perf_counter()
+        rr = sim._execute_round(sel)
+        wall = time.perf_counter() - t0
+        out.append({"n_selected": size, "d_max": d_max, "wall_s": wall,
+                    "duration": rr.duration,
+                    "contributors": len(rr.contributors)})
+        print(f"[round] C={size:6d}  {wall:7.3f}s  dur={rr.duration} "
+              f"contrib={len(rr.contributors)}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep for smoke-testing the harness")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+
+    if args.quick:
+        greedy_sizes, mip_sizes, round_sizes = [1000, 10000], [200], [1000]
+    else:
+        greedy_sizes = [1000, 2000, 5000, 10000, 20000, 50000]
+        mip_sizes = [200, 500, 1000]
+        round_sizes = [1000, 10000]
+
+    payload = {
+        "selection_greedy": bench_selection(greedy_sizes, "greedy"),
+        "selection_mip": bench_selection(mip_sizes, "mip"),
+        "execute_round": bench_execute_round(round_sizes),
+    }
+    ten_k = [r for r in payload["selection_greedy"]
+             if r["n_clients"] == 10000]
+    if ten_k:
+        payload["greedy_10k_under_5s"] = bool(ten_k[0]["wall_s"] < 5.0)
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"wrote {os.path.abspath(args.out)}")
+
+
+if __name__ == "__main__":
+    main()

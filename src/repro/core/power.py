@@ -24,6 +24,13 @@ def _waterfill(budget: float, needs: np.ndarray, caps: np.ndarray) -> np.ndarray
     (both in energy units). Returns energy granted per client."""
     grant = np.zeros_like(needs, dtype=float)
     active = (needs > 1e-12) & (caps > 1e-12)
+    # fast path: budget covers every active client's usable need — common
+    # around solar peak; one vector op instead of the saturation fixpoint
+    # loop (which is O(#cap-saturations) passes over the domain).
+    limit = np.minimum(needs, caps)
+    if active.any() and budget >= limit[active].sum():
+        grant[active] = limit[active]
+        return grant
     remaining = budget
     for _ in range(len(needs) + 1):  # converges in ≤ len(needs) rounds
         if remaining <= 1e-9 or not active.any():

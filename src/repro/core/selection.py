@@ -15,17 +15,26 @@ waterfilling heuristic (``solver='greedy'``) reproduces the selection with
 near-identical quality at O(C·d + C log C) cost — used by the scalability
 benchmark beyond the exact-MIP comfort zone and validated against the MIP
 in tests.
+
+Implementation notes (10k+-client scale): all per-client work is batched
+NumPy over structure-of-arrays client data (see ``SelectionInputs.arrays``)
+— no per-client Python loops or dict lookups remain in the eligibility
+filter or the greedy hot path. A per-call :class:`_ProbeCache` shares the
+expensive intermediates (SoA gather, cumulative reachability/excess sums,
+the m_spare upper-bound slab) across the O(log d_max) binary-search probes,
+so each probe only slices cached arrays instead of rebuilding its COO
+constraint triplets from scratch.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional
 
 import numpy as np
 import scipy.sparse as sp
 from scipy.optimize import Bounds, LinearConstraint, milp
 
-from .types import ClientRegistry, ClientSpec, Selection
+from .types import ClientRegistry, Selection
 
 
 @dataclasses.dataclass
@@ -39,76 +48,123 @@ class SelectionInputs:
     client_order: List[str]    # row order of m_spare/sigma
     domain_order: List[str]    # row order of r_excess
 
+    def arrays(self):
+        """SoA client data aligned with ``client_order`` (cached).
 
-def _eligible(inp: SelectionInputs, d: int):
-    """Pre-filters of Algorithm 1 (lines 6, 8, 11)."""
-    reg = inp.registry
-    # line 6: domains with excess energy at every step up to d —
-    # the paper filters domains with no excess at all in [0, d); we use
-    # "any positive step" which matches its implementation intent (a domain
-    # with a single zero step can still power clients in other steps).
-    dom_ok = {p: inp.r_excess[i, :d].sum() > 0 for i, p in enumerate(inp.domain_order)}
-    dom_idx = {p: i for i, p in enumerate(inp.domain_order)}
-    eligible = []
-    for ci, cname in enumerate(inp.client_order):
-        spec = reg.clients[cname]
-        if inp.sigma[ci] <= 0:          # line 8: blocklisted
-            continue
-        if not dom_ok.get(spec.domain, False):
-            continue
-        # line 11: enough capacity+energy to reach m_min within d
-        pi = dom_idx[spec.domain]
-        reachable = np.minimum(inp.m_spare[ci, :d],
-                               inp.r_excess[pi, :d] / spec.delta).sum()
-        if reachable < spec.m_min_batches:
-            continue
-        eligible.append(ci)
-    return eligible, dom_idx
+        Returns ``(delta[C], m_min[C], m_max[C], dom[C])`` where ``dom``
+        maps each client row to its domain's row in ``domain_order``.
+        """
+        cached = getattr(self, "_soa", None)
+        if cached is None:
+            reg = self.registry
+            rows = reg.rows(self.client_order)
+            cached = (reg.delta_arr[rows], reg.m_min_arr[rows],
+                      reg.m_max_arr[rows],
+                      reg.domain_rows(self.domain_order)[rows])
+            self._soa = cached
+        return cached
+
+
+class _ProbeCache:
+    """Shared intermediates for one ``select_clients`` call.
+
+    Binary search probes several durations ``d`` over the *same* inputs;
+    everything that is d-independent — or a cumulative sum that any ``d``
+    can slice — is computed once here:
+
+    * ``reach_cum[C, H]``: cumulative Σ_t min(m_spare, r_excess/δ), so the
+      Alg. 1 line-11 reachability test at duration d is ``reach_cum[:, d-1]``;
+    * ``excess_cum[P, H]``: cumulative domain excess for the line-6 filter;
+    * ``ub[C, H]``: clipped m_spare slab, sliced per probe for the MIP
+      variable upper bounds.
+    """
+
+    def __init__(self, inp: SelectionInputs):
+        delta, m_min, m_max, dom = inp.arrays()
+        self.delta, self.m_min, self.m_max, self.dom = delta, m_min, m_max, dom
+        self.excess_cum = np.cumsum(inp.r_excess, axis=1)
+        self.reach_cum = np.cumsum(
+            np.minimum(inp.m_spare, inp.r_excess[dom] / delta[:, None]),
+            axis=1)
+        self.ub = np.maximum(inp.m_spare, 0.0)
+
+
+def _eligible(inp: SelectionInputs, d: int,
+              cache: Optional[_ProbeCache] = None) -> List[int]:
+    """Pre-filters of Algorithm 1 (lines 6, 8, 11) — vectorized over C."""
+    if cache is None:
+        cache = _ProbeCache(inp)
+    # clamp to the forecast horizon: a probe beyond H sees the same windows
+    # as d == H (the [:d] slices of the loop implementation did the same)
+    dd = min(d, cache.reach_cum.shape[1])
+    if dd <= 0:
+        return []
+    # line 6: domains with excess energy somewhere in [0, d) — the paper
+    # filters domains with no excess at all in the window (a domain with a
+    # single zero step can still power clients in other steps).
+    dom_ok = cache.excess_cum[:, dd - 1] > 0
+    # line 8 (σ > 0, blocklist) + line 11 (capacity+energy reach m_min in d)
+    mask = ((inp.sigma > 0) & dom_ok[cache.dom]
+            & (cache.reach_cum[:, dd - 1] >= cache.m_min))
+    return np.nonzero(mask)[0].tolist()
 
 
 def _solve_mip(inp: SelectionInputs, d: int, n: int, eligible: List[int],
-               dom_idx: Dict[str, int], time_limit: float = 60.0):
-    """Exact MIP via HiGHS. Returns (selected client rows, batches [k,d]) or None."""
-    reg = inp.registry
-    k = len(eligible)
+               time_limit: float = 60.0,
+               cache: Optional[_ProbeCache] = None):
+    """Exact MIP via HiGHS. Returns (selected client rows, batches [k,d]) or None.
+
+    The constraint matrix is assembled from flat index arithmetic on the
+    cached SoA arrays (one O(nnz) slice/gather per probe, no Python loops):
+    rows [0, 2k) are the per-client min/max rows (1), rows [2k, 2k+P·d) the
+    per-domain per-step budgets (2) in order of first domain appearance,
+    and the last row is the cardinality constraint (3).
+    """
+    if cache is None:
+        cache = _ProbeCache(inp)
+    el = np.asarray(eligible, dtype=int)
+    k = el.size
     nv = k + k * d  # b vars then m vars (client-major)
+    delta, m_min, m_max = cache.delta[el], cache.m_min[el], cache.m_max[el]
+    dom = cache.dom[el]
+
     c_obj = np.zeros(nv)
-    specs = [reg.clients[inp.client_order[ci]] for ci in eligible]
-    for j, ci in enumerate(eligible):
-        c_obj[k + j * d : k + (j + 1) * d] = -inp.sigma[ci]  # maximize
+    c_obj[k:] = -np.repeat(inp.sigma[el], d)  # maximize
 
-    rows, cols, vals, lo, hi = [], [], [], [], []
-    r = 0
-    # (1) m_min·b ≤ Σ m  and  Σ m ≤ m_max·b   (two rows per client)
-    for j, spec in enumerate(specs):
-        for t in range(d):
-            rows += [r, r + 1]; cols += [k + j * d + t] * 2; vals += [1.0, 1.0]
-        rows += [r]; cols += [j]; vals += [-spec.m_min_batches]
-        lo.append(0.0); hi.append(np.inf)
-        rows += [r + 1]; cols += [j]; vals += [-spec.m_max_batches]
-        lo.append(-np.inf); hi.append(0.0)
-        r += 2
-    # (2) per-domain per-step energy budget
-    dom_members: Dict[int, List[int]] = {}
-    for j, spec in enumerate(specs):
-        dom_members.setdefault(dom_idx[spec.domain], []).append(j)
-    for pi, members in dom_members.items():
-        for t in range(d):
-            for j in members:
-                rows.append(r); cols.append(k + j * d + t)
-                vals.append(specs[j].delta)
-            lo.append(-np.inf); hi.append(float(inp.r_excess[pi, t]))
-            r += 1
+    jj = np.arange(k)
+    j_rep = np.repeat(jj, d)                  # [k*d] local client per m var
+    t_rep = np.tile(np.arange(d), k)          # [k*d] step per m var
+    mcols = k + j_rep * d + t_rep
+    # (1) m_min·b ≤ Σ m  and  Σ m ≤ m_max·b   (rows 2j, 2j+1)
+    rows1 = np.concatenate([2 * j_rep, 2 * j_rep + 1, 2 * jj, 2 * jj + 1])
+    cols1 = np.concatenate([mcols, mcols, jj, jj])
+    vals1 = np.concatenate([np.ones(2 * k * d), -m_min, -m_max])
+    lo1 = np.tile([0.0, -np.inf], k)
+    hi1 = np.tile([np.inf, 0.0], k)
+    # (2) per-domain per-step energy budget, domains ranked by first
+    # appearance among the eligible clients (matches the dict-based builder)
+    uniq, first, inv = np.unique(dom, return_index=True, return_inverse=True)
+    by_first = np.argsort(first, kind="stable")
+    rank_of = np.empty(uniq.size, dtype=int)
+    rank_of[by_first] = np.arange(uniq.size)
+    rank = rank_of[inv]                       # [k] domain rank per client
+    rows2 = 2 * k + rank[j_rep] * d + t_rep
+    vals2 = delta[j_rep]
+    lo2 = np.full(uniq.size * d, -np.inf)
+    hi2 = inp.r_excess[uniq[by_first], :d].ravel()
     # (3) exactly n clients
-    for j in range(k):
-        rows.append(r); cols.append(j); vals.append(1.0)
-    lo.append(float(n)); hi.append(float(n))
-    r += 1
+    r3 = 2 * k + uniq.size * d
+    nrows = r3 + 1
 
-    A = sp.csr_matrix((vals, (rows, cols)), shape=(r, nv))
+    rows = np.concatenate([rows1, rows2, np.full(k, r3)])
+    cols = np.concatenate([cols1, mcols, jj])
+    vals = np.concatenate([vals1, vals2, np.ones(k)])
+    lo = np.concatenate([lo1, lo2, [float(n)]])
+    hi = np.concatenate([hi1, hi2, [float(n)]])
+
+    A = sp.csr_matrix((vals, (rows, cols)), shape=(nrows, nv))
     ub = np.ones(nv)
-    for j, ci in enumerate(eligible):
-        ub[k + j * d : k + (j + 1) * d] = np.maximum(inp.m_spare[ci, :d], 0.0)
+    ub[k:] = cache.ub[el, :d].ravel()
     integrality = np.zeros(nv)
     integrality[:k] = 1
     res = milp(c=c_obj,
@@ -121,46 +177,52 @@ def _solve_mip(inp: SelectionInputs, d: int, n: int, eligible: List[int],
     b = res.x[:k] > 0.5
     if b.sum() != n:
         return None
-    sel = [j for j in range(k) if b[j]]
-    batches = np.array([res.x[k + j * d : k + (j + 1) * d] for j in sel])
-    return [eligible[j] for j in sel], batches
+    sel = np.nonzero(b)[0]
+    batches = res.x[k:].reshape(k, d)[sel]
+    return el[sel].tolist(), batches
 
 
 def _solve_greedy(inp: SelectionInputs, d: int, n: int, eligible: List[int],
-                  dom_idx: Dict[str, int]):
+                  cache: Optional[_ProbeCache] = None):
     """Greedy heuristic: rank clients by σ_c × energy-feasible batches, then
-    admit in rank order while water-filling each domain's per-step budget."""
-    reg = inp.registry
+    admit in rank order while water-filling each domain's per-step budget.
+
+    The scoring pass runs against the untouched budget, so it is one batched
+    [k, d] min/cumsum; only the commit loop (≈n iterations, O(d) each) is
+    sequential because every admission drains its domain's budget.
+    """
+    if cache is None:
+        cache = _ProbeCache(inp)
+    el = np.asarray(eligible, dtype=int)
+    k = el.size
     budget = inp.r_excess[:, :d].copy()  # remaining energy per domain/step
-    specs = {ci: reg.clients[inp.client_order[ci]] for ci in eligible}
+    delta, m_min, m_max = cache.delta[el], cache.m_min[el], cache.m_max[el]
+    dom = cache.dom[el]
+    spare = inp.m_spare[el, :d]
 
-    def alloc(ci, commit):
-        spec = specs[ci]
-        pi = dom_idx[spec.domain]
-        take = np.minimum(inp.m_spare[ci, :d], budget[pi] / spec.delta)
-        cum = np.cumsum(take)
-        total = min(cum[-1] if d else 0.0, spec.m_max_batches)
-        if total < spec.m_min_batches:
-            return None
-        # cap at m_max: stop allocating once reached
-        overshoot = cum - spec.m_max_batches
-        take = np.where(overshoot > 0, np.maximum(take - overshoot, 0.0), take)
-        if commit:
-            budget[pi] -= take * spec.delta
-        return take
+    # scoring pass (no commits): achievable total is min(Σ take, m_max)
+    take_all = np.minimum(spare, budget[dom] / delta[:, None])
+    total = np.minimum(take_all.sum(axis=1), m_max) if d else np.zeros(k)
+    feas = total >= m_min
+    score = inp.sigma[el] * total
+    # rank: descending score, ties broken by descending client row (matches
+    # sorting (score, row) tuples in reverse)
+    cand = np.nonzero(feas)[0]
+    cand = cand[np.lexsort((-el[cand], -score[cand]))]
 
-    scored = []
-    for ci in eligible:
-        take = alloc(ci, commit=False)
-        if take is not None:
-            scored.append((inp.sigma[ci] * take.sum(), ci))
-    scored.sort(reverse=True)
     chosen, batches = [], []
-    for _, ci in scored:
-        take = alloc(ci, commit=True)
-        if take is None:
+    for j in cand:
+        pi = dom[j]
+        take = np.minimum(spare[j], budget[pi] / delta[j])
+        cum = np.cumsum(take)
+        total_j = min(cum[-1] if d else 0.0, m_max[j])
+        if total_j < m_min[j]:
             continue
-        chosen.append(ci)
+        # cap at m_max: stop allocating once reached
+        overshoot = cum - m_max[j]
+        take = np.where(overshoot > 0, np.maximum(take - overshoot, 0.0), take)
+        budget[pi] -= take * delta[j]
+        chosen.append(int(el[j]))
         batches.append(take)
         if len(chosen) == n:
             return chosen, np.array(batches)
@@ -168,13 +230,16 @@ def _solve_greedy(inp: SelectionInputs, d: int, n: int, eligible: List[int],
 
 
 def find_clients_for_duration(inp: SelectionInputs, d: int, n: int,
-                              solver: str = "mip", time_limit: float = 60.0):
-    eligible, dom_idx = _eligible(inp, d)
+                              solver: str = "mip", time_limit: float = 60.0,
+                              cache: Optional[_ProbeCache] = None):
+    if cache is None:
+        cache = _ProbeCache(inp)
+    eligible = _eligible(inp, d, cache)
     if len(eligible) < n:  # Alg. 1 line 13
         return None
     if solver == "greedy":
-        return _solve_greedy(inp, d, n, eligible, dom_idx)
-    return _solve_mip(inp, d, n, eligible, dom_idx, time_limit)
+        return _solve_greedy(inp, d, n, eligible, cache)
+    return _solve_mip(inp, d, n, eligible, time_limit, cache)
 
 
 def select_clients(inp: SelectionInputs, n: int, d_max: int,
@@ -184,10 +249,12 @@ def select_clients(inp: SelectionInputs, n: int, d_max: int,
 
     ``search='binary'`` exploits the monotonicity of feasibility in d
     (paper §4.3: O(log d_max)); ``'linear'`` matches the pseudo-code
-    literally.
+    literally. All probes share one :class:`_ProbeCache`.
     """
+    cache = _ProbeCache(inp)
+
     def attempt(d):
-        return find_clients_for_duration(inp, d, n, solver, time_limit)
+        return find_clients_for_duration(inp, d, n, solver, time_limit, cache)
 
     best = None
     if search == "linear":

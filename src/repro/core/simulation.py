@@ -6,6 +6,12 @@ excess-energy budgets (two-phase power sharing) and per-client spare
 capacity, and idle windows (no feasible selection) are skipped
 event-style. Energy accounting covers *all* selected clients, including
 stragglers whose work is discarded (paper §4.5).
+
+Scale: per-round client state is structure-of-arrays NumPy (vectors indexed
+by selection position, registry rows gathered once per round), so a
+simulated minute costs a few array ops per power domain rather than
+per-client Python work — 10k-client rounds execute in well under 100 ms
+(see benchmarks/scalability.py).
 """
 from __future__ import annotations
 
@@ -19,7 +25,7 @@ from repro.data.traces import ScenarioData
 
 from .power import share_power
 from .strategies import BaseStrategy, EnvView
-from .types import ClientRegistry, ClientRoundState, RoundResult, Selection
+from .types import ClientRegistry, RoundResult, Selection
 
 
 class FLSimulation:
@@ -37,7 +43,7 @@ class FLSimulation:
         self.results: List[RoundResult] = []
         self.client_order = registry.client_names
         self.domain_order = scenario.domain_names
-        self._dom_idx = {p: i for i, p in enumerate(self.domain_order)}
+        self._dom_rows = registry.domain_rows(self.domain_order)
         self.participation: Dict[str, int] = {c: 0 for c in self.client_order}
         self.rng = np.random.default_rng(seed)
 
@@ -56,14 +62,37 @@ class FLSimulation:
 
     # ------------------------------------------------------------------
     def _execute_round(self, sel: Selection) -> RoundResult:
+        """Run one round's step loop as structure-of-arrays NumPy state.
+
+        All per-client round state (``computed``, ``energy_used``,
+        ``done_min``, ``finished_at``) lives in vectors indexed by position
+        in ``sel.clients``; client→registry-row and client→domain maps are
+        gathered once per round, so the per-minute loop does pure array
+        ops (no name lookups). Semantically identical to the dict-of-
+        ``ClientRoundState`` implementation it replaced (see
+        tests/test_vectorized_parity.py).
+        """
         reg = self.registry
         sc = self.scenario
-        constrained = (self.strategy.needs_energy_constraints
-                       and not getattr(sel, "grid", False))
-        states = {c: ClientRoundState(spec=reg.clients[c]) for c in sel.clients}
+        grid = bool(getattr(sel, "grid", False))
+        constrained = self.strategy.needs_energy_constraints and not grid
+        n_sel = len(sel.clients)
+        rows = reg.rows(sel.clients)               # registry row per client
+        dom = self._dom_rows[rows]                 # scenario domain row
+        delta = reg.delta_arr[rows]
+        capacity = reg.capacity_arr[rows]
+        m_min = reg.m_min_arr[rows]
+        m_max = reg.m_max_arr[rows]
+        computed = np.zeros(n_sel)
+        energy_used = np.zeros(n_sel)
+        done_min = np.zeros(n_sel, dtype=bool)
+        finished_at = np.full(n_sel, -1, dtype=int)
+        # per-domain member groups, in order of first appearance
+        groups = [(pi, np.nonzero(dom == pi)[0])
+                  for pi in dict.fromkeys(dom.tolist())]
         carbon_g = 0.0  # grid-fallback rounds only
         need_done = (self.strategy.n if self.strategy.over_select > 1.0
-                     else len(sel.clients))
+                     else n_sel)
         duration = self.d_max
         for step in range(self.d_max):
             t = self.now + step
@@ -72,65 +101,51 @@ class FLSimulation:
                 break
             spare = sc.spare_at(t)
             excess = sc.excess_at(t)
-            # group active clients by domain and attribute power
-            by_dom: Dict[str, List[str]] = {}
-            for c, st in states.items():
-                if st.computed < st.spec.m_max_batches:
-                    by_dom.setdefault(st.spec.domain, []).append(c)
-            for dom, members in by_dom.items():
-                caps = np.array([
-                    spare[self.client_order.index(c)] *
-                    states[c].spec.m_max_capacity for c in members])
+            active = computed < m_max
+            for pi, group in groups:
+                mem = group[active[group]]
+                if mem.size == 0:
+                    continue
+                caps = spare[rows[mem]] * capacity[mem]
                 if not constrained:
-                    batches = np.array([states[c].spec.m_max_capacity
-                                        for c in members])
-                    grants = batches * np.array(
-                        [states[c].spec.delta for c in members])
+                    batches = capacity[mem]
                 else:
-                    deltas = np.array([states[c].spec.delta for c in members])
-                    computed = np.array([states[c].computed for c in members])
-                    m_min = np.array([states[c].spec.m_min_batches for c in members])
-                    m_max = np.array([states[c].spec.m_max_batches for c in members])
-                    budget = float(excess[self._dom_idx[dom]])  # W × 1 min = Wmin
-                    grants = share_power(budget, deltas, computed, m_min,
-                                         m_max, caps)
-                    batches = np.minimum(grants / deltas, caps)
-                if getattr(sel, "grid", False):
+                    budget = float(excess[pi])  # W × 1 min = Wmin
+                    grants = share_power(budget, delta[mem], computed[mem],
+                                         m_min[mem], m_max[mem], caps)
+                    batches = np.minimum(grants / delta[mem], caps)
+                if grid:
                     # fallback round: spare-capacity compute on grid power
                     batches = caps
-                    grants = caps * np.array(
-                        [states[c].spec.delta for c in members])
-                for c, nb, g in zip(members, batches, grants):
-                    st = states[c]
-                    room = st.spec.m_max_batches - st.computed
-                    nb = min(nb, room)
-                    st.computed += nb
-                    st.energy_used += nb * st.spec.delta
-                    if getattr(sel, "grid", False):
-                        ci = sc.carbon_at(t)[self._dom_idx[dom]]
-                        # Wmin -> kWh: /60/1000
-                        carbon_g += nb * st.spec.delta / 60e3 * ci
-                    if not st.done_min and st.computed >= st.spec.m_min_batches:
-                        st.done_min = True
-                        st.finished_at = step
-            n_done = sum(1 for st in states.values() if st.done_min)
-            if n_done >= need_done:
+                nb = np.minimum(batches, m_max[mem] - computed[mem])
+                computed[mem] += nb
+                step_e = nb * delta[mem]
+                energy_used[mem] += step_e
+                if grid:
+                    ci = sc.carbon_at(t)[pi]
+                    # Wmin -> kWh: /60/1000
+                    carbon_g += float(step_e.sum()) / 60e3 * ci
+                newly = mem[~done_min[mem] & (computed[mem] >= m_min[mem])]
+                done_min[newly] = True
+                finished_at[newly] = step
+            if int(done_min.sum()) >= need_done:
                 duration = step + 1
                 break
 
-        finished = sorted((st.finished_at, c) for c, st in states.items()
-                          if st.done_min)
+        finished = sorted((int(finished_at[i]), sel.clients[i])
+                          for i in np.nonzero(done_min)[0])
         contributors = [c for _, c in finished[: max(self.strategy.n, need_done)]]
-        stragglers = [c for c in sel.clients if c not in contributors]
-        total_e = sum(st.energy_used for st in states.values())
+        contrib_set = set(contributors)
+        stragglers = [c for c in sel.clients if c not in contrib_set]
+        total_e = float(energy_used.sum())
         return RoundResult(
             round_idx=self.round_idx, start_step=self.now, duration=duration,
             participants=list(sel.clients), contributors=contributors,
             stragglers=stragglers,
             energy_used=total_e,
-            grid_energy=total_e if getattr(sel, "grid", False) else 0.0,
+            grid_energy=total_e if grid else 0.0,
             carbon_g=carbon_g,
-            batches={c: states[c].computed for c in sel.clients},
+            batches={c: float(computed[i]) for i, c in enumerate(sel.clients)},
         )
 
     # ------------------------------------------------------------------

@@ -40,7 +40,19 @@ class EnvView:
     domain_order: List[str]
 
     def client_row(self, name):
-        return self.client_order.index(name)
+        row_of = getattr(self, "_row_of", None)
+        if row_of is None:
+            row_of = {c: i for i, c in enumerate(self.client_order)}
+            self._row_of = row_of
+        return row_of[name]
+
+    def client_rows(self) -> np.ndarray:
+        """Registry row per entry of ``client_order`` (vectorized gather)."""
+        return self.registry.rows(self.client_order)
+
+    def domain_rows(self) -> np.ndarray:
+        """[C] each client's domain row within ``domain_order``."""
+        return self.registry.domain_rows(self.domain_order)[self.client_rows()]
 
 
 class BaseStrategy:
@@ -75,32 +87,30 @@ class BaseStrategy:
     # -- availability ------------------------------------------------------
     def _available(self, env: EnvView) -> List[int]:
         """Clients with access to excess energy + spare capacity right now."""
-        dom_idx = {p: i for i, p in enumerate(env.domain_order)}
-        out = []
-        for ci, cname in enumerate(env.client_order):
-            spec = self.registry.clients[cname]
-            if env.excess_now[dom_idx[spec.domain]] <= 0:
-                continue
-            if env.spare_now[ci] * spec.m_max_capacity <= 0:
-                continue
-            out.append(ci)
-        return out
+        reg = self.registry
+        reg_rows = env.client_rows()
+        dom = env.domain_rows()
+        ok = ((env.excess_now[dom] > 0)
+              & (env.spare_now * reg.capacity_arr[reg_rows] > 0))
+        return np.nonzero(ok)[0].tolist()
 
     def _forecast_filter(self, env: EnvView, rows: List[int]) -> List[int]:
         """Drop clients not expected to reach m_min within d_max (fc baselines)."""
-        dom_idx = {p: i for i, p in enumerate(env.domain_order)}
+        if not len(rows):
+            return []
+        reg = self.registry
+        rows = np.asarray(rows, dtype=int)
+        reg_rows = env.client_rows()[rows]
+        dom = env.domain_rows()[rows]
         H = env.excess_fc.shape[1]
-        out = []
-        for ci in rows:
-            spec = self.registry.clients[env.client_order[ci]]
-            if env.spare_fc is None:
-                spare = np.full(H, spec.m_max_capacity)
-            else:
-                spare = env.spare_fc[ci] * spec.m_max_capacity
-            energy = env.excess_fc[dom_idx[spec.domain]] / spec.delta
-            if np.minimum(spare, energy).sum() >= spec.m_min_batches:
-                out.append(ci)
-        return out
+        cap = reg.capacity_arr[reg_rows]
+        if env.spare_fc is None:
+            spare = np.broadcast_to(cap[:, None], (rows.size, H))
+        else:
+            spare = env.spare_fc[rows] * cap[:, None]
+        energy = env.excess_fc[dom] / reg.delta_arr[reg_rows, None]
+        reach = np.minimum(spare, energy).sum(axis=1)
+        return rows[reach >= reg.m_min_arr[reg_rows]].tolist()
 
     def select(self, env: EnvView) -> Optional[Selection]:
         raise NotImplementedError
@@ -135,20 +145,26 @@ class OortStrategy(BaseStrategy):
         self.alpha_sys = alpha_sys
         self.epsilon = epsilon
 
-    def _score(self, env: EnvView, ci: int) -> float:
-        cname = env.client_order[ci]
-        spec = self.registry.clients[cname]
-        dom_idx = env.domain_order.index(spec.domain)
-        stat = self.utility.sigma(cname)
+    def _scores(self, env: EnvView, rows: np.ndarray) -> np.ndarray:
+        """Utility per candidate row — batched over all candidates."""
+        reg = self.registry
+        reg_rows = env.client_rows()[rows]
+        dom = env.domain_rows()[rows]
+        stat = self.utility.sigmas([env.client_order[i] for i in rows])
         # achievable batches/step right now given energy + capacity
-        rate = min(env.spare_now[ci] * spec.m_max_capacity,
-                   env.excess_now[dom_idx] / spec.delta)
-        if rate <= 0:
-            return 0.0
-        est_dur = spec.m_min_batches / rate
-        sys_factor = (self.pref_duration / est_dur) ** self.alpha_sys \
-            if est_dur > self.pref_duration else 1.0
-        return stat * sys_factor
+        rate = np.minimum(env.spare_now[rows] * reg.capacity_arr[reg_rows],
+                          env.excess_now[dom] / reg.delta_arr[reg_rows])
+        with np.errstate(divide="ignore"):
+            est_dur = np.where(rate > 0, reg.m_min_arr[reg_rows]
+                               / np.maximum(rate, 1e-300), np.inf)
+        sys_factor = np.where(est_dur > self.pref_duration,
+                              (self.pref_duration
+                               / np.maximum(est_dur, 1e-300)) ** self.alpha_sys,
+                              1.0)
+        return np.where(rate > 0, stat * sys_factor, 0.0)
+
+    def _score(self, env: EnvView, ci: int) -> float:
+        return float(self._scores(env, np.array([ci]))[0])
 
     def select(self, env: EnvView) -> Optional[Selection]:
         rows = self._available(env)
@@ -157,14 +173,16 @@ class OortStrategy(BaseStrategy):
         k = self.n_to_select()
         if len(rows) < k:
             return None
+        rows = np.asarray(rows, dtype=int)
         n_explore = int(round(self.epsilon * k))
-        scores = np.array([self._score(env, ci) for ci in rows])
+        scores = self._scores(env, rows)
         order = np.argsort(-scores)
-        exploit = [rows[i] for i in order[: k - n_explore]]
-        rest = [r for r in rows if r not in exploit]
-        explore = list(self.rng.choice(rest, size=min(n_explore, len(rest)),
-                                       replace=False)) if rest and n_explore else []
-        chosen = exploit + [int(x) for x in explore]
+        exploit = rows[order[: k - n_explore]]
+        rest = rows[~np.isin(rows, exploit)]
+        explore = list(self.rng.choice(rest, size=min(n_explore, rest.size),
+                                       replace=False)) \
+            if rest.size and n_explore else []
+        chosen = [int(x) for x in exploit] + [int(x) for x in explore]
         if len(chosen) < k:
             return None
         return Selection(clients=[env.client_order[i] for i in chosen],
@@ -215,29 +233,29 @@ class FedZeroStrategy(BaseStrategy):
     def _grid_fallback(self, env: EnvView) -> Optional[Selection]:
         """Weakened constraints: capacity-only selection on grid energy."""
         sigma = self.utility.sigmas(env.client_order)
-        rows = [i for i, c in enumerate(env.client_order)
-                if not self.blocklist.is_blocked(c)
-                and env.spare_now[i] * self.registry.clients[c].m_max_capacity > 0]
-        if len(rows) < self.n:
-            rows = [i for i in range(len(env.client_order))
-                    if env.spare_now[i] > 0]
-        if len(rows) < self.n:
+        cap = self.registry.capacity_arr[env.client_rows()]
+        unblocked = np.array([not self.blocklist.is_blocked(c)
+                              for c in env.client_order])
+        rows = np.nonzero(unblocked & (env.spare_now * cap > 0))[0]
+        if rows.size < self.n:
+            rows = np.nonzero(env.spare_now > 0)[0]
+        if rows.size < self.n:
             return None
-        chosen = sorted(rows, key=lambda i: -sigma[i])[: self.n]
+        chosen = sorted(rows.tolist(), key=lambda i: -sigma[i])[: self.n]
         return Selection(clients=[env.client_order[i] for i in chosen],
                          expected_duration=self.d_max, grid=True)
 
     def select(self, env: EnvView) -> Optional[Selection]:
         self.blocklist.start_round()
         sigma = self.utility.sigmas(env.client_order)
-        for i, cname in enumerate(env.client_order):
-            if self.blocklist.is_blocked(cname):
-                sigma[i] = 0.0  # §4.4: blocked clients get σ_c = 0
-        m_spare = np.stack([
-            (env.spare_fc[i] if env.spare_fc is not None
-             else np.ones(env.excess_fc.shape[1]))
-            * self.registry.clients[c].m_max_capacity
-            for i, c in enumerate(env.client_order)])
+        for cname in self.blocklist.blocked:  # typically ≪ C entries
+            sigma[env.client_row(cname)] = 0.0  # §4.4: blocked get σ_c = 0
+        cap = self.registry.capacity_arr[env.client_rows()]
+        if env.spare_fc is not None:
+            m_spare = env.spare_fc * cap[:, None]
+        else:
+            m_spare = np.ones((len(env.client_order),
+                               env.excess_fc.shape[1])) * cap[:, None]
         inp = SelectionInputs(
             registry=self.registry, m_spare=m_spare, r_excess=env.excess_fc,
             sigma=sigma, client_order=env.client_order,

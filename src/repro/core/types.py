@@ -76,7 +76,15 @@ class RoundResult:
 
 
 class ClientRegistry:
-    """Holds the static client/domain structure and derived lookups."""
+    """Holds the static client/domain structure and derived lookups.
+
+    Besides the name-keyed dicts, the registry exposes structure-of-arrays
+    mirrors of the per-client spec fields (``delta_arr``, ``capacity_arr``,
+    ``m_min_arr``, ``m_max_arr``), aligned with ``client_names``. The
+    simulation step loop and the selection solvers index these with integer
+    row arrays instead of doing per-client attribute/dict lookups, which is
+    what makes 10k+-client rounds tractable.
+    """
 
     def __init__(self, clients: List[ClientSpec], domains: List[PowerDomain]):
         self.clients: Dict[str, ClientSpec] = {c.name: c for c in clients}
@@ -85,6 +93,66 @@ class ClientRegistry:
             p.clients = [c.name for c in clients if c.domain == p.name]
         self.client_names = [c.name for c in clients]
         self.domain_of = {c.name: c.domain for c in clients}
+        self.row_of = {n: i for i, n in enumerate(self.client_names)}
+        self._soa: Optional[tuple] = None
+        self._domain_rows_cache: Dict[tuple, np.ndarray] = {}
+
+    # The SoA mirrors build lazily on first use, so the documented pattern
+    # of tweaking ClientSpec fields right after construction (e.g. matching
+    # n_samples/batches_per_epoch to a real dataset, see test_system.py) is
+    # reflected. After mutating specs *once arrays have been used*, call
+    # refresh_arrays().
+    def _arrays(self) -> tuple:
+        if self._soa is None:
+            specs = [self.clients[n] for n in self.client_names]
+            self._soa = (
+                np.array([s.delta for s in specs], dtype=float),
+                np.array([s.m_max_capacity for s in specs], dtype=float),
+                np.array([s.m_min_batches for s in specs], dtype=float),
+                np.array([s.m_max_batches for s in specs], dtype=float),
+            )
+        return self._soa
+
+    @property
+    def delta_arr(self) -> np.ndarray:
+        return self._arrays()[0]
+
+    @property
+    def capacity_arr(self) -> np.ndarray:
+        return self._arrays()[1]
+
+    @property
+    def m_min_arr(self) -> np.ndarray:
+        return self._arrays()[2]
+
+    @property
+    def m_max_arr(self) -> np.ndarray:
+        return self._arrays()[3]
+
+    def refresh_arrays(self):
+        """Invalidate the cached SoA mirrors after mutating ClientSpecs."""
+        self._soa = None
+
+    def rows(self, names: List[str]) -> np.ndarray:
+        """Registry row index per name (vectorized gather key)."""
+        if names is self.client_names:
+            return np.arange(len(self.client_names))
+        return np.array([self.row_of[n] for n in names], dtype=int)
+
+    def domain_rows(self, domain_order: List[str]) -> np.ndarray:
+        """[C] index of each client's domain within ``domain_order``.
+
+        Cached per domain ordering: simulations/strategies call this every
+        round with the scenario's (stable) domain list.
+        """
+        key = tuple(domain_order)
+        cached = self._domain_rows_cache.get(key)
+        if cached is None:
+            idx = {p: i for i, p in enumerate(domain_order)}
+            cached = np.array([idx[self.domain_of[n]]
+                               for n in self.client_names], dtype=int)
+            self._domain_rows_cache[key] = cached
+        return cached
 
     def domain_clients(self, domain: str) -> List[ClientSpec]:
         return [self.clients[n] for n in self.domains[domain].clients]

@@ -5,8 +5,35 @@ the client training workloads it schedules have three hot loops that we
 implement TPU-native: flash attention (+sliding window), the MoE grouped
 GEMM, and the RWKV6 chunked scan. Each has a pure-jnp oracle in ref.py and
 is validated in interpret mode over shape/dtype sweeps.
+
+jax-version compat policy: Pallas renamed ``pltpu.TPUCompilerParams`` to
+``pltpu.CompilerParams`` across jax releases. Kernels must not reference
+either name directly — they go through :func:`compiler_params`, which
+resolves whichever class the installed jax provides. New version-dependent
+Pallas surface should get the same treatment: one ``getattr``-probing
+helper here, call sites stay version-agnostic.
 """
+from jax.experimental.pallas import tpu as _pltpu
+
+
+def compiler_params(**kwargs):
+    """Build TPU compiler params on any supported jax version.
+
+    Resolves ``pltpu.CompilerParams`` (new name) or
+    ``pltpu.TPUCompilerParams`` (jax <= 0.4.x) and instantiates it with
+    ``kwargs`` (e.g. ``dimension_semantics=...``).
+    """
+    cls = getattr(_pltpu, "CompilerParams", None) or getattr(
+        _pltpu, "TPUCompilerParams", None)
+    if cls is None:  # pragma: no cover - very old/unknown jax
+        raise AttributeError(
+            "jax.experimental.pallas.tpu provides neither CompilerParams "
+            "nor TPUCompilerParams")
+    return cls(**kwargs)
+
+
 from . import ops, ref
 from .ops import flash_attention, moe_gemm, rwkv_scan
 
-__all__ = ["ops", "ref", "flash_attention", "moe_gemm", "rwkv_scan"]
+__all__ = ["compiler_params", "ops", "ref", "flash_attention", "moe_gemm",
+           "rwkv_scan"]

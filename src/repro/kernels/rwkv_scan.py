@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import compiler_params
+
 
 def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *, T, dh):
     ci = pl.program_id(1)
@@ -99,7 +101,7 @@ def rwkv_scan(r, k, v, w, u, *, chunk: int = 32, interpret: bool = False):
         out_specs=pl.BlockSpec((1, T, dh), lambda i, c: (i, c, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, S, dh), jnp.float32),
         scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(rb, kb, vb, wb, ub)

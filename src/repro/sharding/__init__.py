@@ -1,5 +1,5 @@
 from .specs import (STRATEGIES, batch_specs, cache_specs, leaf_spec,
-                    param_specs, tree_shardings)
+                    make_abstract_mesh, param_specs, tree_shardings)
 
 __all__ = ["STRATEGIES", "batch_specs", "cache_specs", "leaf_spec",
-           "param_specs", "tree_shardings"]
+           "make_abstract_mesh", "param_specs", "tree_shardings"]

@@ -12,6 +12,8 @@ from repro.configs import all_archs, get_config
 from repro.models import build_model
 from repro.optim import adamw
 
+pytestmark = pytest.mark.slow  # deselect via -m 'not slow'
+
 ARCHS = all_archs()
 
 

@@ -9,6 +9,8 @@ import pytest
 from repro.configs import get_config
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # deselect via -m 'not slow'
+
 
 @pytest.mark.parametrize("arch", ["granite-3-2b", "mixtral-8x22b"])
 def test_fp8_cache_decode_close_to_bf16(arch):

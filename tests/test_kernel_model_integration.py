@@ -8,6 +8,8 @@ import pytest
 from repro.configs import get_config
 from repro.models import attention as A
 
+pytestmark = pytest.mark.slow  # deselect via -m 'not slow'
+
 
 @pytest.mark.parametrize("arch,S", [("granite-3-2b", 128),
                                     ("hymba-1.5b", 128)])

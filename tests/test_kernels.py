@@ -8,6 +8,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.slow  # deselect via -m 'not slow'
+
 
 def _tol(dtype):
     return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \

@@ -8,6 +8,8 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+pytestmark = pytest.mark.slow  # deselect via -m 'not slow'
+
 
 def run_cli(module_main, argv):
     old = sys.argv

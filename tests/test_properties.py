@@ -1,5 +1,8 @@
 """Hypothesis property tests for the system's invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ClientRegistry, ClientSpec, PowerDomain,

@@ -4,15 +4,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import all_archs, get_config
 from repro.models import build_model, input_specs, params_spec
-from repro.sharding import batch_specs, cache_specs, param_specs
+from repro.sharding import batch_specs, cache_specs, make_abstract_mesh, param_specs
 from repro.sharding.specs import _axis_size
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = make_abstract_mesh((16, 16), ("data", "model"))
+MESH_MP = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _check_divisible(struct, specs, mesh):

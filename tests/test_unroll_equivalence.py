@@ -8,6 +8,8 @@ import pytest
 from repro.configs import get_config
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # deselect via -m 'not slow'
+
 
 @pytest.mark.parametrize("arch", ["granite-3-2b", "mixtral-8x22b",
                                   "rwkv6-1.6b", "hymba-1.5b",
