@@ -1,7 +1,7 @@
 # Developer entry points. Tier-1 verify == `make test`.
 PYTHON ?= python
 
-.PHONY: test test-quick bench-scalability
+.PHONY: test test-quick bench-scalability bench-e2e
 
 # full tier-1 suite (what CI and the driver run)
 test:
@@ -11,6 +11,10 @@ test:
 test-quick:
 	PYTHONPATH=src $(PYTHON) -m pytest -x -q -m "not slow"
 
-# 1k-50k client selection/simulation sweep -> BENCH_scalability.json
+# 1k-100k client selection/simulation sweep -> BENCH_scalability.json
 bench-scalability:
 	$(PYTHON) benchmarks/scalability.py
+
+# 3-day 10k-client end-to-end simulation -> BENCH_e2e_simulation.json
+bench-e2e:
+	$(PYTHON) benchmarks/e2e_simulation.py

@@ -1,0 +1,100 @@
+"""End-to-end multi-day 10k-client simulation benchmark (paper §5.6).
+
+Unlike ``benchmarks/scalability.py`` — which times one ``select_clients``
+call and one executor round in isolation — this runs the *whole* FedZero
+loop at fleet scale: scenario generation (batched trace synthesis),
+per-round forecasts (memoized batched noise slabs), Algorithm 1 with the
+chunked greedy solver, the SoA round executor, utility/fairness updates
+and the proxy trainer, for ≥3 simulated days over 10k clients. Emits
+``BENCH_e2e_simulation.json`` at the repo root; CI runs it on every push
+and the ``under_60s`` flag is the regression tripwire for the
+"tens of thousands of clients in seconds" claim.
+
+Usage:
+    python benchmarks/e2e_simulation.py [--clients 10000] [--days 3] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (FLSimulation, ProxyTrainer, make_paper_registry,
+                        make_strategy)
+from repro.data.traces import make_scenario
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_e2e_simulation.json")
+
+
+def run_e2e(n_clients: int, days: int, n: int = 10, d_max: int = 60,
+            seed: int = 0, solver: str = "greedy"):
+    t0 = time.perf_counter()
+    sc = make_scenario("global", n_clients=n_clients, days=days, seed=seed)
+    reg = make_paper_registry(n_clients=n_clients, seed=seed,
+                              domain_names=sc.domain_names)
+    strat = make_strategy("fedzero", reg, n=n, d_max=d_max, seed=seed,
+                          solver=solver)
+    trainer = ProxyTrainer(reg.client_names,
+                           {c: reg.clients[c].n_samples
+                            for c in reg.client_names},
+                           k=0.0004, seed=seed)
+    sim = FLSimulation(reg, sc, strat, trainer, eval_every=5, seed=seed)
+    t_setup = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    summary = sim.run(until_step=days * 24 * 60 - d_max - 1)
+    t_sim = time.perf_counter() - t1
+
+    return {
+        "n_clients": n_clients,
+        "days": days,
+        "n_per_round": n,
+        "d_max": d_max,
+        "solver": solver,
+        "setup_s": t_setup,
+        "sim_s": t_sim,
+        "wall_s": t_setup + t_sim,
+        "rounds": summary["rounds"],
+        "sim_minutes": summary["sim_minutes"],
+        "total_energy_wh": summary["total_energy_wh"],
+        "mean_round_duration": summary["mean_round_duration"],
+        "ms_per_round": (1000.0 * t_sim / summary["rounds"]
+                         if summary["rounds"] else None),
+        "ms_per_sim_minute": (1000.0 * t_sim / summary["sim_minutes"]
+                              if summary["sim_minutes"] else None),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=10000)
+    ap.add_argument("--days", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="small run for smoke-testing the harness")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+
+    if args.quick:
+        args.clients, args.days = 1000, 1
+
+    row = run_e2e(args.clients, args.days)
+    row["under_60s"] = bool(row["wall_s"] < 60.0)
+    print(f"[e2e] C={row['n_clients']}  days={row['days']}  "
+          f"setup={row['setup_s']:.1f}s  sim={row['sim_s']:.1f}s  "
+          f"rounds={row['rounds']}  "
+          f"{row['ms_per_round'] and round(row['ms_per_round'], 1)}ms/round  "
+          f"under_60s={row['under_60s']}")
+    with open(args.out, "w") as f:
+        json.dump(row, f, indent=1, default=float)
+    print(f"wrote {os.path.abspath(args.out)}")
+    if not args.quick and not row["under_60s"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -73,6 +73,25 @@ def bench_selection(sizes, solver: str, n: int = 10, d_max: int = 60,
     return out
 
 
+def bench_solve_greedy(sizes, n: int = 10, d: int = 60):
+    """One `_solve_greedy` call at full duration — the per-probe cost the
+    binary search pays, isolated from eligibility/cache building."""
+    from repro.core.selection import _ProbeCache, _eligible, _solve_greedy
+    out = []
+    for size in sizes:
+        reg, inp = synth_inputs(size)
+        cache = _ProbeCache(inp)
+        eligible = _eligible(inp, d, cache)
+        t0 = time.perf_counter()
+        res = _solve_greedy(inp, d, n, eligible, cache)
+        wall = time.perf_counter() - t0
+        out.append({"n_clients": size, "d": d, "wall_s": wall,
+                    "eligible": len(eligible), "feasible": res is not None})
+        print(f"[greedy-call] C={size:6d}  {wall:7.3f}s  "
+              f"eligible={len(eligible)}")
+    return out
+
+
 def bench_execute_round(sizes, d_max: int = 60, seed: int = 0):
     """Step-loop throughput: one full round over a selection of C clients
     (every client selected — the worst case for the executor)."""
@@ -111,20 +130,28 @@ def main():
 
     if args.quick:
         greedy_sizes, mip_sizes, round_sizes = [1000, 10000], [200], [1000]
+        call_sizes = [10000]
     else:
-        greedy_sizes = [1000, 2000, 5000, 10000, 20000, 50000]
+        greedy_sizes = [1000, 2000, 5000, 10000, 20000, 50000, 100000]
         mip_sizes = [200, 500, 1000]
         round_sizes = [1000, 10000]
+        call_sizes = [10000, 50000, 100000]
 
     payload = {
         "selection_greedy": bench_selection(greedy_sizes, "greedy"),
         "selection_mip": bench_selection(mip_sizes, "mip"),
+        "solve_greedy_call": bench_solve_greedy(call_sizes),
         "execute_round": bench_execute_round(round_sizes),
     }
     ten_k = [r for r in payload["selection_greedy"]
              if r["n_clients"] == 10000]
     if ten_k:
         payload["greedy_10k_under_5s"] = bool(ten_k[0]["wall_s"] < 5.0)
+    fifty_k = [r for r in payload["solve_greedy_call"]
+               if r["n_clients"] == 50000]
+    if fifty_k:
+        payload["solve_greedy_50k_under_1s"] = bool(
+            fifty_k[0]["wall_s"] < 1.0)
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     print(f"wrote {os.path.abspath(args.out)}")

@@ -10,6 +10,10 @@ where p(c) is the client's total past participation count, α controls
 release speed (paper uses α = 1), and ω is periodically updated to the mean
 participation over all clients so release probabilities do not decay over
 the course of a long training.
+
+The per-round work is batched: ω is one mean over the participation
+values, and the stochastic release is a single vectorized draw over the
+(sorted, hence deterministic) blocked set instead of a per-client loop.
 """
 from __future__ import annotations
 
@@ -39,10 +43,20 @@ class Blocklist:
         """Update ω periodically and stochastically release blocked clients."""
         self._round += 1
         if (self._round - 1) % self._omega_every == 0:
-            self.omega = float(np.mean(list(self.participation.values())))
-        for c in list(self.blocked):
-            if self._rng.random() < self.release_probability(c):
-                self.blocked.discard(c)
+            vals = self.participation.values()
+            self.omega = float(np.fromiter(vals, dtype=float,
+                                           count=len(vals)).mean())
+        if not self.blocked:
+            return
+        names = sorted(self.blocked)  # deterministic draw order
+        excess = np.fromiter((self.participation[c] for c in names),
+                             dtype=float, count=len(names)) - self.omega
+        with np.errstate(divide="ignore", over="ignore", invalid="ignore"):
+            probs = np.where(excess > 0,
+                             np.minimum(1.0, excess ** (-self.alpha)), 1.0)
+        released = self._rng.random(len(names)) < probs
+        self.blocked.difference_update(
+            n for n, r in zip(names, released) if r)
 
     def record_participation(self, clients: Iterable[str]):
         for c in clients:

@@ -16,14 +16,19 @@ near-identical quality at O(C·d + C log C) cost — used by the scalability
 benchmark beyond the exact-MIP comfort zone and validated against the MIP
 in tests.
 
-Implementation notes (10k+-client scale): all per-client work is batched
+Implementation notes (50k+-client scale): all per-client work is batched
 NumPy over structure-of-arrays client data (see ``SelectionInputs.arrays``)
 — no per-client Python loops or dict lookups remain in the eligibility
 filter or the greedy hot path. A per-call :class:`_ProbeCache` shares the
-expensive intermediates (SoA gather, cumulative reachability/excess sums,
-the m_spare upper-bound slab) across the O(log d_max) binary-search probes,
-so each probe only slices cached arrays instead of rebuilding its COO
-constraint triplets from scratch.
+expensive intermediates (SoA gather, cumulative reachability/excess sums)
+across the O(log d_max) binary-search probes: greedy scoring reads the
+cached reachability cumsum directly, and the MIP only slices cached arrays
+instead of rebuilding its COO constraint triplets from scratch. Greedy
+admissions are committed in batched chunk passes over the rank queue
+(clients of different power domains never contend, so drains accumulate
+per domain) — see :func:`_solve_greedy`; the per-client sequential commit
+loop survives as :func:`_solve_greedy_sequential`, the bit-exact reference
+that the property/parity suite pins the batched variant against.
 """
 from __future__ import annotations
 
@@ -82,11 +87,19 @@ class _ProbeCache:
     def __init__(self, inp: SelectionInputs):
         delta, m_min, m_max, dom = inp.arrays()
         self.delta, self.m_min, self.m_max, self.dom = delta, m_min, m_max, dom
+        self._inp = inp
         self.excess_cum = np.cumsum(inp.r_excess, axis=1)
         self.reach_cum = np.cumsum(
             np.minimum(inp.m_spare, inp.r_excess[dom] / delta[:, None]),
             axis=1)
-        self.ub = np.maximum(inp.m_spare, 0.0)
+        self._ub = None
+
+    @property
+    def ub(self) -> np.ndarray:
+        """Clipped m_spare slab — only the MIP needs it, built lazily."""
+        if self._ub is None:
+            self._ub = np.maximum(self._inp.m_spare, 0.0)
+        return self._ub
 
 
 def _eligible(inp: SelectionInputs, d: int,
@@ -182,33 +195,45 @@ def _solve_mip(inp: SelectionInputs, d: int, n: int, eligible: List[int],
     return el[sel].tolist(), batches
 
 
-def _solve_greedy(inp: SelectionInputs, d: int, n: int, eligible: List[int],
-                  cache: Optional[_ProbeCache] = None):
-    """Greedy heuristic: rank clients by σ_c × energy-feasible batches, then
-    admit in rank order while water-filling each domain's per-step budget.
+def _rank_candidates(inp: SelectionInputs, d: int, el: np.ndarray,
+                     cache: _ProbeCache):
+    """Shared greedy scoring pass: feasible candidates in rank order.
 
-    The scoring pass runs against the untouched budget, so it is one batched
-    [k, d] min/cumsum; only the commit loop (≈n iterations, O(d) each) is
-    sequential because every admission drains its domain's budget.
+    The achievable-batch total against the untouched budget is exactly the
+    cached cumulative reachability (``reach_cum``), so scoring is three
+    gathers and a lexsort — no per-probe [k, d] slab. Rank is descending
+    score with ties broken by descending client row (matches sorting
+    (score, row) tuples in reverse).
+    """
+    delta, m_min, m_max = cache.delta[el], cache.m_min[el], cache.m_max[el]
+    dom = cache.dom[el]
+    dd = min(d, cache.reach_cum.shape[1])
+    if dd <= 0:
+        return np.empty(0, dtype=int), (delta, m_min, m_max, dom)
+    total = np.minimum(cache.reach_cum[el, dd - 1], m_max)
+    feas = total >= m_min
+    score = inp.sigma[el] * total
+    cand = np.nonzero(feas)[0]
+    cand = cand[np.lexsort((-el[cand], -score[cand]))]
+    return cand, (delta, m_min, m_max, dom)
+
+
+def _solve_greedy_sequential(inp: SelectionInputs, d: int, n: int,
+                             eligible: List[int],
+                             cache: Optional[_ProbeCache] = None):
+    """Reference greedy: admit in rank order, one commit per admitted
+    client, water-filling each domain's per-step budget.
+
+    Kept as the semantic pin for :func:`_solve_greedy` (see
+    tests/test_greedy_properties.py) and for instances small enough that
+    batching doesn't pay.
     """
     if cache is None:
         cache = _ProbeCache(inp)
     el = np.asarray(eligible, dtype=int)
-    k = el.size
-    budget = inp.r_excess[:, :d].copy()  # remaining energy per domain/step
-    delta, m_min, m_max = cache.delta[el], cache.m_min[el], cache.m_max[el]
-    dom = cache.dom[el]
+    cand, (delta, m_min, m_max, dom) = _rank_candidates(inp, d, el, cache)
     spare = inp.m_spare[el, :d]
-
-    # scoring pass (no commits): achievable total is min(Σ take, m_max)
-    take_all = np.minimum(spare, budget[dom] / delta[:, None])
-    total = np.minimum(take_all.sum(axis=1), m_max) if d else np.zeros(k)
-    feas = total >= m_min
-    score = inp.sigma[el] * total
-    # rank: descending score, ties broken by descending client row (matches
-    # sorting (score, row) tuples in reverse)
-    cand = np.nonzero(feas)[0]
-    cand = cand[np.lexsort((-el[cand], -score[cand]))]
+    budget = inp.r_excess[:, :d].copy()  # remaining energy per domain/step
 
     chosen, batches = [], []
     for j in cand:
@@ -227,6 +252,87 @@ def _solve_greedy(inp: SelectionInputs, d: int, n: int, eligible: List[int],
         if len(chosen) == n:
             return chosen, np.array(batches)
     return None
+
+
+def _solve_greedy(inp: SelectionInputs, d: int, n: int, eligible: List[int],
+                  cache: Optional[_ProbeCache] = None):
+    """Greedy heuristic: rank clients by σ_c × energy-feasible batches, then
+    admit in rank order while water-filling per-domain per-step budgets.
+
+    Clients in different power domains never contend for the same budget,
+    so admissions are water-filled with *batched* passes over the rank
+    queue instead of one Python iteration per admitted client: each pass
+    takes a chunk of ~4·n candidates, computes their optimistic takes
+    against their domains' current budgets in one [chunk, d] batch,
+    bulk-rejects rows that cannot reach m_min (their reachable total only
+    shrinks as budgets drain, so rejection against the current budget is
+    exact), and admits the longest prefix whose pre-cap drains stay under
+    their domain budget — accumulated per domain, clients of different
+    domains never interact — by a 1e-9 relative margin. Margin-valid rows
+    are spare/m_max-limited at every step, so their takes are
+    bit-identical to what the sequential commit loop would compute; a
+    budget-limited row at the head of the queue falls back to an exact
+    single admission. Every pass either admits ≥ 1 client or retires a
+    whole chunk, so the result matches :func:`_solve_greedy_sequential`
+    exactly at a worst case of one full batched sweep.
+    """
+    if cache is None:
+        cache = _ProbeCache(inp)
+    el = np.asarray(eligible, dtype=int)
+    cand, (delta, m_min, m_max, dom) = _rank_candidates(inp, d, el, cache)
+    if cand.size < n:
+        return None
+
+    budgets = inp.r_excess[:, :d].copy()   # [P, d] remaining energy
+    el_rows = el[cand]                     # registry-aligned rows, rank order
+    dom_c = dom[cand]
+    chunk_size = max(4 * n, 64)
+    chosen, batches = [], []
+    rows, drows, srows = cand, dom_c, el_rows
+    while rows.size and len(chosen) < n:
+        nc = min(chunk_size, rows.size)
+        r, dr = rows[:nc], drows[:nc]
+        take = np.minimum(inp.m_spare[srows[:nc], :d],
+                          budgets[dr] / delta[r, None])
+        cum = np.cumsum(take, axis=1)
+        total = np.minimum(cum[:, -1], m_max[r])
+        feas = total >= m_min[r]
+        if not feas.any():
+            rows, drows, srows = rows[nc:], drows[nc:], srows[nc:]
+            chunk_size *= 2  # unproductive pass: sweep faster
+            continue
+        keep = np.nonzero(feas)[0]
+        r, dr = r[keep], dr[keep]
+        take, cum = take[keep], cum[keep]
+        overshoot = cum - m_max[r, None]
+        capped = np.where(overshoot > 0,
+                          np.maximum(take - overshoot, 0.0), take)
+        # per-domain cumulative pre-cap drains within the chunk; rows of a
+        # domain with ±ulp-negative budget residue degrade to sequential
+        drain = take * delta[r, None]
+        ok = np.empty(r.size, dtype=bool)
+        for pi in np.unique(dr):
+            mask = dr == pi
+            if (budgets[pi] >= 0.0).all():
+                cd = np.cumsum(drain[mask], axis=0)
+                ok[mask] = (cd <= budgets[pi][None, :]
+                            * (1.0 - 1e-9)).all(axis=1)
+            else:
+                ok[mask] = False
+        bad = np.nonzero(~ok)[0]
+        npfx = int(bad[0]) if bad.size else r.size
+        npfx = max(1, min(npfx, n - len(chosen)))
+        for i in range(npfx):  # ≤ n tiny [d] commits, same arithmetic as
+            budgets[dr[i]] -= capped[i] * delta[r[i]]  # the sequential loop
+            chosen.append(int(el[r[i]]))
+            batches.append(capped[i])
+        survivors = keep[npfx:]
+        rows = np.concatenate([r[npfx:], rows[nc:]])
+        drows = np.concatenate([dr[npfx:], drows[nc:]])
+        srows = np.concatenate([srows[:nc][survivors], srows[nc:]])
+    if len(chosen) < n:
+        return None
+    return chosen, np.array(batches)
 
 
 def find_clients_for_duration(inp: SelectionInputs, d: int, n: int,

@@ -99,14 +99,14 @@ class FLSimulation:
             if t >= sc.n_steps:
                 duration = step
                 break
-            spare = sc.spare_at(t)
+            spare_sel = sc.spare_at(t, rows)   # selected clients only: O(n)
             excess = sc.excess_at(t)
             active = computed < m_max
             for pi, group in groups:
                 mem = group[active[group]]
                 if mem.size == 0:
                     continue
-                caps = spare[rows[mem]] * capacity[mem]
+                caps = spare_sel[mem] * capacity[mem]
                 if not constrained:
                     batches = capacity[mem]
                 else:

@@ -42,7 +42,10 @@ class EnvView:
     def client_row(self, name):
         row_of = getattr(self, "_row_of", None)
         if row_of is None:
-            row_of = {c: i for i, c in enumerate(self.client_order)}
+            if self.client_order is self.registry.client_names:
+                row_of = self.registry.row_of  # avoid a per-round dictcomp
+            else:
+                row_of = {c: i for i, c in enumerate(self.client_order)}
             self._row_of = row_of
         return row_of[name]
 

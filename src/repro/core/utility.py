@@ -5,30 +5,85 @@
 
 The per-sample losses come from the client's most recent participation.
 Blocked clients (fairness module) override σ_c = 0 at selection time.
+
+Implementation: structure-of-arrays mirroring ``ClientRegistry`` —
+participation counts, squared-loss means (NaN = never reported) and
+dataset sizes live in flat arrays indexed by a name→row map, so
+``sigmas`` over a 100k-client fleet is three gathers and a ``where``
+instead of a per-client Python loop.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, Iterable, Union
 
 import numpy as np
 
 
 class UtilityTracker:
     def __init__(self, n_samples: Dict[str, int]):
-        self.n_samples = dict(n_samples)
-        self.sq_loss_mean: Dict[str, Optional[float]] = {c: None for c in n_samples}
-        self.participation: Dict[str, int] = {c: 0 for c in n_samples}
+        self.names = list(n_samples)
+        self.row_of = {c: i for i, c in enumerate(self.names)}
+        self.n_samples_arr = np.array([n_samples[c] for c in self.names],
+                                      dtype=float)
+        self.sq_loss_mean_arr = np.full(len(self.names), np.nan)
+        self.participation_arr = np.zeros(len(self.names), dtype=np.int64)
+        # order → row-array cache: strategies pass the same client_order
+        # list every round, so resolve the gather indices once per object
+        self._order_cache: Dict[int, tuple] = {}
 
     def record(self, client: str, sample_losses: np.ndarray):
         """Store the loss statistics reported after a participation."""
-        self.participation[client] += 1
+        row = self.row_of[client]
+        self.participation_arr[row] += 1
         if len(sample_losses):
-            self.sq_loss_mean[client] = float(np.mean(np.square(sample_losses)))
+            self.sq_loss_mean_arr[row] = float(
+                np.mean(np.square(sample_losses)))
+
+    def _rows(self, order) -> Union[slice, np.ndarray]:
+        if order is self.names:
+            return slice(None)
+        hit = self._order_cache.get(id(order))
+        if hit is not None and hit[0] is order:
+            return hit[1]
+        if isinstance(order, list) and order == self.names:
+            rows: Union[slice, np.ndarray] = slice(None)
+        else:
+            rows = np.fromiter((self.row_of[c] for c in order),
+                               dtype=np.int64, count=len(order))
+        if len(self._order_cache) > 32:  # bound id-keyed entries
+            self._order_cache.clear()
+        self._order_cache[id(order)] = (order, rows)
+        return rows
 
     def sigma(self, client: str) -> float:
-        if self.participation[client] < 1 or self.sq_loss_mean[client] is None:
+        row = self.row_of[client]
+        sq = self.sq_loss_mean_arr[row]
+        if self.participation_arr[row] < 1 or np.isnan(sq):
             return 1.0
-        return self.n_samples[client] * float(np.sqrt(self.sq_loss_mean[client]))
+        return float(self.n_samples_arr[row] * np.sqrt(sq))
 
-    def sigmas(self, order) -> np.ndarray:
-        return np.array([self.sigma(c) for c in order])
+    def sigmas(self, order: Iterable[str]) -> np.ndarray:
+        """[len(order)] σ per client — vectorized, returns a fresh array."""
+        rows = self._rows(order)
+        sq = self.sq_loss_mean_arr[rows]
+        seen = (self.participation_arr[rows] >= 1) & ~np.isnan(sq)
+        return np.where(seen,
+                        self.n_samples_arr[rows]
+                        * np.sqrt(np.where(np.isnan(sq), 0.0, sq)),
+                        1.0)
+
+    # -- dict-style views kept for introspection/back-compat --------------
+    @property
+    def n_samples(self) -> Dict[str, int]:
+        return {c: int(self.n_samples_arr[i]) for i, c in enumerate(self.names)}
+
+    @property
+    def participation(self) -> Dict[str, int]:
+        return {c: int(self.participation_arr[i])
+                for i, c in enumerate(self.names)}
+
+    @property
+    def sq_loss_mean(self) -> Dict[str, float]:
+        return {c: (None if np.isnan(self.sq_loss_mean_arr[i])
+                    else float(self.sq_loss_mean_arr[i]))
+                for i, c in enumerate(self.names)}

@@ -15,15 +15,20 @@ seeded synthetic equivalents:
   lead time (≈5 % nowcast → ≈25 % day-ahead), matching the "realistic
   error" setting; `error="none"` gives the paper's *w/o error* ablation.
 
+Everything is generated in batched NumPy draws — there are no per-row
+Python RNG constructions anywhere on the 10k+-client path.
+
 Drop-in replacement: any real trace with the same array shapes can be
 loaded into ``ScenarioData`` directly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+from scipy.signal import lfilter
 
 # (name, utc_offset_hours, typical cloudiness in [0,1])
 GLOBAL_CITIES = [
@@ -40,6 +45,13 @@ CO_LOCATED_CITIES = [  # ten largest German cities — aligned diurnal phase
     ("essen", 1, 0.48),
 ]
 
+# stable ids for counter-based forecast seeding (``hash(str)`` is salted
+# per process and would make forecasts irreproducible across runs)
+_KIND_IDS = {"excess": 1, "load": 2}
+
+# memoized forecast slabs kept per ScenarioData instance
+_FORECAST_CACHE_SIZE = 16
+
 
 def solar_curve(t_min: np.ndarray, utc_offset: float, peak_w: float,
                 cloud: np.ndarray) -> np.ndarray:
@@ -51,32 +63,57 @@ def solar_curve(t_min: np.ndarray, utc_offset: float, peak_w: float,
     return peak_w * clear * cloud
 
 
-def _ar1_cloud(rng, n, base_cloudiness, rho=0.97):
-    """AR(1) attenuation in (0, 1]: 1 = clear sky."""
-    eps = rng.normal(0, 1, n)
-    z = np.zeros(n)
-    for i in range(1, n):
-        z[i] = rho * z[i - 1] + np.sqrt(1 - rho ** 2) * eps[i]
-    atten = 1.0 - base_cloudiness * (1 / (1 + np.exp(-z)))  # in [1-c, 1]
+def _ar1_cloud(rng, n, base_cloudiness, rho=0.97, rows: int = 1):
+    """AR(1) attenuation in (0, 1]: 1 = clear sky. Batched over ``rows``
+    independent series (one [rows, n] draw, recurrence via ``lfilter``)."""
+    eps = rng.normal(0, 1, (rows, n))
+    eps[:, 0] = 0.0  # z starts at 0 like the scalar recurrence
+    z = lfilter([np.sqrt(1 - rho ** 2)], [1.0, -rho], eps, axis=1)
+    base = np.asarray(base_cloudiness, dtype=float).reshape(-1, 1)
+    atten = 1.0 - base * (1 / (1 + np.exp(-z)))  # in [1-c, 1]
     return np.clip(atten, 0.05, 1.0)
 
 
-def _load_trace(rng, n_steps):
-    """Regime-switching GPU utilisation in [0, 1] (Alibaba-like)."""
-    util = np.zeros(n_steps)
-    state = rng.random() < 0.5  # busy?
-    level = rng.uniform(0.5, 0.95) if state else rng.uniform(0.0, 0.3)
-    for i in range(n_steps):
-        if rng.random() < (1 / 180.0):  # regime switch ~ every 3 h
-            state = not state
-            level = rng.uniform(0.5, 0.95) if state else rng.uniform(0.0, 0.3)
-        util[i] = np.clip(level + rng.normal(0, 0.05), 0.0, 1.0)
-    return util
+def _load_traces(rng, n_clients, n_steps):
+    """Regime-switching GPU utilisation in [0, 1] (Alibaba-like), batched:
+    one [C, T] draw for regime switches + noise, per-segment busy/idle
+    levels gathered from a [C, S] level table."""
+    switch = rng.random((n_clients, n_steps)) < (1 / 180.0)  # ~ every 3 h
+    switch[:, 0] = False
+    seg = np.cumsum(switch, axis=1)            # [C, T] segment index per step
+    n_seg = int(seg[:, -1].max()) + 1 if n_steps else 1
+    busy0 = rng.random(n_clients) < 0.5        # initial regime per client
+    level_u = rng.random((n_clients, n_seg))   # one uniform per segment
+    busy = busy0[:, None] ^ (np.arange(n_seg)[None, :] % 2 == 1)
+    levels = np.where(busy, 0.5 + 0.45 * level_u, 0.3 * level_u)
+    level_t = np.take_along_axis(levels, seg, axis=1)
+    util = level_t + rng.normal(0, 0.05, (n_clients, n_steps))
+    return np.clip(util, 0.0, 1.0)
 
 
 @dataclasses.dataclass
 class ScenarioData:
-    """Actual + forecastable time series for one experiment scenario."""
+    """Actual + forecastable time series for one experiment scenario.
+
+    Forecast contract (batched + memoized)
+    --------------------------------------
+    ``excess_forecast``/``spare_forecast`` return ``actual × noise`` slabs
+    of shape ``[P, horizon]`` / ``[C, horizon]`` where the multiplicative
+    log-normal error is drawn in **one batched RNG call** per
+    ``(kind, now)``: the generator is seeded counter-style from
+    ``(seed, kind, now)`` so any ``(now, horizon)`` request is reproducible
+    in isolation (no dependence on call order), and the rows of a slab are
+    independent error streams. Results are memoized per
+    ``(kind, now, horizon)`` in a small LRU, so repeated ``EnvView`` builds
+    within a round are free; the cached arrays are returned **read-only**
+    (the identical object every time) — copy before mutating.
+
+    Drop-in real traces: load arrays with the same shapes into this class
+    directly; if you mutate ``excess``/``util`` after construction (e.g.
+    the night-time ablations in the tests do), call
+    ``clear_forecast_cache()`` so memoized forecasts don't go stale —
+    construction-time mutation needs no care since the cache starts empty.
+    """
 
     excess: np.ndarray          # [P, T] W of excess power, 1-min steps
     util: np.ndarray            # [C, T] fraction of client capacity in use
@@ -87,58 +124,100 @@ class ScenarioData:
     carbon: Optional[np.ndarray] = None  # [P, T] grid gCO2/kWh (fallback mode)
 
     def __post_init__(self):
-        self._rng_cache: Dict[int, np.ndarray] = {}
-        for name in self.unlimited_domains:
-            i = self.domain_names.index(name)
-            self.excess[i, :] = 1e9
+        self._forecast_cache: "OrderedDict[Tuple, np.ndarray]" = OrderedDict()
+        if self.unlimited_domains:
+            # never clobber the caller's array (regression: the input trace
+            # must survive scenario construction unchanged)
+            self.excess = self.excess.copy()
+            for name in self.unlimited_domains:
+                i = self.domain_names.index(name)
+                self.excess[i, :] = 1e9
 
     @property
     def n_steps(self):
         return self.excess.shape[1]
 
     # ---- forecasts ----------------------------------------------------
-    def _noise(self, kind: str, now: int, idx: int, horizon: int) -> np.ndarray:
-        """Deterministic multiplicative forecast error for lead times 1..h."""
+    def clear_forecast_cache(self):
+        """Drop memoized forecast slabs (call after mutating actuals)."""
+        self._forecast_cache.clear()
+
+    def _noise(self, kind: str, now: int, rows: int,
+               horizon: int) -> Optional[np.ndarray]:
+        """[rows, horizon] multiplicative forecast error for lead 1..h.
+
+        One batched draw per call, counter-seeded from ``(seed, kind,
+        now)`` — row r is the r-th independent error stream of that
+        instant, whatever the batch shape.
+        """
         if self.error == "none":
-            return np.ones(horizon)
+            return np.ones((rows, horizon))
         if kind == "load" and self.error == "no_load":
             return None  # no load forecast available
         rng = np.random.default_rng(
-            (self.seed * 1_000_003 + hash(kind) % 65521) * 131 + now * 17 + idx)
-        lead = np.arange(1, horizon + 1)
+            (self.seed & 0xFFFFFFFF, _KIND_IDS[kind], now))
+        lead = np.arange(1, horizon + 1, dtype=np.float32)
         std = 0.05 + 0.20 * np.minimum(lead / 1440.0, 1.0)
-        return np.exp(rng.normal(0, std))
+        # float32 is plenty for a 5–25 % multiplicative error and halves
+        # the per-round RNG cost on 10k+-client fleets
+        z = rng.standard_normal((rows, horizon), dtype=np.float32)
+        z *= std.astype(np.float32)
+        return np.exp(z, out=z)
+
+    def _forecast(self, kind: str, source: np.ndarray, now: int,
+                  horizon: int, invert: bool) -> np.ndarray:
+        """Memoized ``actual × noise`` slab; ``invert`` turns a utilisation
+        slice into spare fraction (1 − util) before applying the error."""
+        key = (kind, now, horizon)
+        cached = self._forecast_cache.get(key)
+        if cached is not None:
+            self._forecast_cache.move_to_end(key)
+            return cached
+        R = source.shape[0]
+        actual = source[:, now + 1: now + 1 + horizon]
+        if invert:
+            actual = 1.0 - actual
+        n = actual.shape[1]
+        noise = self._noise(kind, now, R, horizon)
+        if n == horizon:
+            out = actual.copy() if noise is None else actual * noise
+        else:  # end of trace: zero-pad the short window
+            out = np.zeros((R, horizon))
+            out[:, :n] = actual if noise is None else actual * noise[:, :n]
+        if invert:
+            np.clip(out, 0.0, 1.0, out=out)
+        out.flags.writeable = False
+        self._forecast_cache[key] = out
+        if len(self._forecast_cache) > _FORECAST_CACHE_SIZE:
+            self._forecast_cache.popitem(last=False)
+        return out
 
     def excess_forecast(self, now: int, horizon: int) -> np.ndarray:
         """[P, horizon] forecast of excess power for steps now+1..now+horizon."""
-        P = self.excess.shape[0]
-        out = np.zeros((P, horizon))
-        for p in range(P):
-            actual = self.excess[p, now + 1 : now + 1 + horizon]
-            n = len(actual)
-            out[p, :n] = actual * self._noise("excess", now, p, horizon)[:n]
-        return out
+        return self._forecast("excess", self.excess, now, horizon, invert=False)
 
     def spare_forecast(self, now: int, horizon: int) -> Optional[np.ndarray]:
         """[C, horizon] forecast of *fraction* of capacity free; None if the
         no-load-forecast ablation is active."""
         if self.error == "no_load":
             return None
-        C = self.util.shape[0]
-        out = np.zeros((C, horizon))
-        for c in range(C):
-            actual = 1.0 - self.util[c, now + 1 : now + 1 + horizon]
-            n = len(actual)
-            nz = self._noise("load", now, c, horizon)[:n]
-            out[c, :n] = np.clip(actual * nz, 0.0, 1.0)
-        return out
+        return self._forecast("load", self.util, now, horizon, invert=True)
 
     # ---- actuals -------------------------------------------------------
     def excess_at(self, step: int) -> np.ndarray:
         return self.excess[:, min(step, self.n_steps - 1)]
 
-    def spare_at(self, step: int) -> np.ndarray:
-        return 1.0 - self.util[:, min(step, self.n_steps - 1)]
+    def spare_at(self, step: int, rows: Optional[np.ndarray] = None) -> np.ndarray:
+        """[C] (or [len(rows)]) fraction of capacity free at ``step``.
+
+        Pass ``rows`` to gather just a client subset — the simulation step
+        loop asks for only the selected clients, which turns an O(C)
+        strided column read into an O(n_selected) gather.
+        """
+        t = min(step, self.n_steps - 1)
+        if rows is None:
+            return 1.0 - self.util[:, t]
+        return 1.0 - self.util[rows, t]
 
     def carbon_at(self, step: int) -> np.ndarray:
         """[P] grid carbon intensity (gCO2/kWh) — used only by the
@@ -151,31 +230,36 @@ class ScenarioData:
 def make_scenario(name: str, n_clients: int = 100, days: int = 7, seed: int = 0,
                   peak_w: float = 800.0, error: str = "realistic",
                   unlimited_domains: tuple = ()) -> ScenarioData:
-    """name: 'global' or 'co_located' (paper Fig. 2)."""
+    """name: 'global' or 'co_located' (paper Fig. 2).
+
+    Generation is fully batched: solar/cloud, client load and carbon each
+    come from one seeded multi-row draw, so 10k-client multi-day scenarios
+    build in a couple of seconds.
+    """
     cities = GLOBAL_CITIES if name == "global" else CO_LOCATED_CITIES
-    rng = np.random.default_rng(seed)
     T = days * 24 * 60
     t_min = np.arange(T)
+    P = len(cities)
 
-    excess = np.zeros((len(cities), T))
-    for i, (cname, offset, cloudiness) in enumerate(cities):
-        crng = np.random.default_rng(seed * 7919 + i)
-        cloud_5min = _ar1_cloud(crng, T // 5 + 1, cloudiness)
-        cloud = np.repeat(cloud_5min, 5)[:T]  # 5-min resolution held constant
-        excess[i] = solar_curve(t_min, offset, peak_w, cloud)
-        # hold in 5-minute blocks like the Solcast data
-        excess[i] = np.repeat(excess[i][::5], 5)[:T]
+    crng = np.random.default_rng(seed * 7919 + 1)
+    cloud_5min = _ar1_cloud(crng, T // 5 + 1,
+                            [c[2] for c in cities], rows=P)
+    cloud = np.repeat(cloud_5min, 5, axis=1)[:, :T]  # 5-min blocks
+    excess = np.stack([
+        solar_curve(t_min, offset, peak_w, cloud[i])
+        for i, (cname, offset, _) in enumerate(cities)])
+    # hold in 5-minute blocks like the Solcast data
+    excess = np.repeat(excess[:, ::5], 5, axis=1)[:, :T]
 
-    util = np.stack([_load_trace(np.random.default_rng(seed * 104729 + c), T)
-                     for c in range(n_clients)])
+    util = _load_traces(np.random.default_rng(seed * 104729 + 1),
+                        n_clients, T)
     # grid carbon intensity: anti-correlated with solar (fossil peakers at
     # night), AR(1) noise — used only when the grid fallback is enabled
-    carbon = np.zeros((len(cities), T))
-    for i, (cname, offset, _) in enumerate(cities):
-        local_h = (t_min / 60.0 + offset) % 24.0
-        base = 450.0 - 250.0 * np.exp(-((local_h - 13.0) ** 2) / 18.0)
-        crng = np.random.default_rng(seed * 31337 + i)
-        carbon[i] = np.clip(base + crng.normal(0, 25, T), 80.0, 700.0)
+    local_h = (t_min[None, :] / 60.0
+               + np.array([c[1] for c in cities])[:, None]) % 24.0
+    base = 450.0 - 250.0 * np.exp(-((local_h - 13.0) ** 2) / 18.0)
+    krng = np.random.default_rng(seed * 31337 + 1)
+    carbon = np.clip(base + krng.normal(0, 25, (P, T)), 80.0, 700.0)
     return ScenarioData(excess=excess, util=util,
                         domain_names=[c[0] for c in cities], seed=seed,
                         error=error, unlimited_domains=unlimited_domains,

@@ -7,6 +7,37 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import pytest
 
+_JAX_CACHE_DIR = os.path.join(os.path.dirname(__file__), ".jax_cache")
+
+
+@pytest.fixture(scope="session", autouse=True)
+def jax_kernel_compilation_cache():
+    """Persist XLA compilations of the jitted interpret-mode kernels.
+
+    The Pallas kernel tests dominate suite wall-time, and most of that is
+    XLA re-compiling the same interpreter graphs for every (shape, block,
+    dtype) parametrization on every run. Pointing JAX's persistent
+    compilation cache at a repo-local directory makes every
+    parametrization compile once ever: repeat runs (and other test
+    modules reusing a kernel shape) load the executable from disk.
+    Disable with REPRO_NO_JAX_CACHE=1.
+    """
+    if os.environ.get("REPRO_NO_JAX_CACHE"):
+        yield
+        return
+    try:  # scheduling-core tests are pure NumPy — don't require jax
+        import jax
+    except ImportError:
+        yield
+        return
+
+    jax.config.update("jax_compilation_cache_dir", _JAX_CACHE_DIR)
+    # interpret-mode kernels compile on CPU in well under the default
+    # 1s/64KB thresholds — cache everything
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    yield
+
 
 @pytest.fixture
 def rng():

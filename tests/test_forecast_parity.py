@@ -1,0 +1,157 @@
+"""Parity/regression tests for the batched, memoized forecast pipeline.
+
+The vectorized ``ScenarioData._noise`` replaced a per-row
+``np.random.default_rng`` construction per call; the slab is a different
+(counter-seeded) realization, so parity is *distributional*: per lead
+time, the log-error mean/std must match both the generating model
+(N(0, std_lead)) and a faithful reimplementation of the old per-row
+generator. Exact modes stay exact: ``error="none"`` is identity and
+``error="no_load"`` has no load forecast at all.
+"""
+import numpy as np
+import pytest
+
+from repro.data.traces import ScenarioData, make_scenario
+
+
+def _lead_std(horizon):
+    lead = np.arange(1, horizon + 1)
+    return 0.05 + 0.20 * np.minimum(lead / 1440.0, 1.0)
+
+
+def legacy_noise_rows(seed, kind_salt, now, n_rows, horizon):
+    """The seed implementation: one fresh RNG per row (kind hashing
+    replaced by a fixed salt — ``hash(str)`` was process-salted anyway)."""
+    std = _lead_std(horizon)
+    out = np.empty((n_rows, horizon))
+    for idx in range(n_rows):
+        rng = np.random.default_rng(
+            (seed * 1_000_003 + kind_salt) * 131 + now * 17 + idx)
+        out[idx] = np.exp(rng.normal(0, std))
+    return out
+
+
+def flat_scenario(n_clients=400, T=2000, seed=0, **kw):
+    """Constant actuals so forecast/actual ratios isolate the noise."""
+    P = 4
+    return ScenarioData(
+        excess=np.full((P, T), 100.0), util=np.full((n_clients, T), 0.5),
+        domain_names=[f"d{i}" for i in range(P)], seed=seed, **kw)
+
+
+# ---------------------------------------------------------------------------
+# distributional parity with the per-row-RNG generator
+
+
+@pytest.mark.parametrize("now,horizon", [(0, 60), (500, 240), (100, 1500)])
+def test_noise_distribution_matches_legacy(now, horizon):
+    sc = flat_scenario(n_clients=600, T=horizon + now + 2, seed=3)
+    fc = sc.spare_forecast(now, horizon)
+    ratio = np.asarray(fc) / 0.5            # recover the noise slab
+    log_noise = np.log(ratio)
+    std = _lead_std(horizon)
+
+    legacy = legacy_noise_rows(3, 17, now, 600, horizon)
+    log_legacy = np.log(legacy)
+
+    # per-lead-time moments: new vs model and new vs legacy (600 samples
+    # per lead; tolerances sized for that)
+    se = std / np.sqrt(600)
+    assert np.all(np.abs(log_noise.mean(axis=0)) < 5 * se)
+    assert np.all(np.abs(log_legacy.mean(axis=0)) < 5 * se)
+    np.testing.assert_allclose(log_noise.std(axis=0), std, rtol=0.25)
+    np.testing.assert_allclose(log_noise.std(axis=0),
+                               log_legacy.std(axis=0), rtol=0.35)
+
+
+def test_noise_rows_are_independent_streams():
+    sc = flat_scenario(n_clients=50, T=200, seed=0)
+    fc = np.asarray(sc.spare_forecast(0, 100))
+    # no two rows of one slab identical, and different `now` differs
+    assert np.unique(fc, axis=0).shape[0] == 50
+    sc2 = flat_scenario(n_clients=50, T=200, seed=0)
+    fc2 = np.asarray(sc2.spare_forecast(1, 100))
+    assert not np.allclose(fc[:, 1:], fc2[:, :-1])
+
+
+def test_noise_reproducible_across_instances():
+    """Counter-based seeding: same (seed, now, horizon) -> same slab,
+    regardless of what was requested before."""
+    a = flat_scenario(seed=7)
+    b = flat_scenario(seed=7)
+    a.excess_forecast(0, 30)  # perturb call order on `a` only
+    a.spare_forecast(3, 11)
+    np.testing.assert_array_equal(np.asarray(a.spare_forecast(5, 60)),
+                                  np.asarray(b.spare_forecast(5, 60)))
+
+
+# ---------------------------------------------------------------------------
+# exact modes
+
+
+def test_error_none_is_exact_identity():
+    sc = make_scenario("global", n_clients=8, days=1, seed=1, error="none")
+    now, H = 300, 90
+    fc = sc.excess_forecast(now, H)
+    np.testing.assert_array_equal(np.asarray(fc),
+                                  sc.excess[:, now + 1: now + 1 + H])
+    sfc = sc.spare_forecast(now, H)
+    np.testing.assert_array_equal(np.asarray(sfc),
+                                  1.0 - sc.util[:, now + 1: now + 1 + H])
+
+
+def test_error_no_load_returns_none_but_excess_forecasts():
+    sc = make_scenario("global", n_clients=8, days=1, seed=1, error="no_load")
+    assert sc.spare_forecast(100, 60) is None
+    assert sc.excess_forecast(100, 60).shape == (10, 60)
+
+
+def test_forecast_zero_pads_past_trace_end():
+    sc = flat_scenario(n_clients=5, T=100, seed=0)
+    fc = np.asarray(sc.excess_forecast(90, 60))
+    assert fc.shape == (4, 60)
+    assert (fc[:, :9] > 0).all()
+    assert (fc[:, 9:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# memoization
+
+
+def test_forecast_memoized_identical_object():
+    sc = flat_scenario(seed=2)
+    a = sc.excess_forecast(10, 60)
+    assert sc.excess_forecast(10, 60) is a          # same object, free
+    assert sc.spare_forecast(10, 60) is sc.spare_forecast(10, 60)
+    assert sc.excess_forecast(11, 60) is not a      # different key
+    assert not a.flags.writeable                     # shared -> read-only
+    with pytest.raises(ValueError):
+        a[0, 0] = 1.0
+
+
+def test_forecast_cache_bounded_and_clearable():
+    sc = flat_scenario(seed=2)
+    for now in range(40):
+        sc.excess_forecast(now, 10)
+    assert len(sc._forecast_cache) <= 16
+    a = sc.excess_forecast(0, 10)
+    sc.clear_forecast_cache()
+    assert sc.excess_forecast(0, 10) is not a       # recomputed...
+    np.testing.assert_array_equal(np.asarray(sc.excess_forecast(0, 10)),
+                                  np.asarray(a))    # ...to the same values
+
+
+# ---------------------------------------------------------------------------
+# constructor regression (satellite): unlimited_domains must not clobber
+# the caller's excess array
+
+
+def test_unlimited_domains_do_not_mutate_input():
+    excess = np.full((3, 50), 7.0)
+    before = excess.copy()
+    sc = ScenarioData(excess=excess, util=np.zeros((2, 50)),
+                      domain_names=["a", "b", "c"],
+                      unlimited_domains=("b",))
+    np.testing.assert_array_equal(excess, before)   # input survived
+    assert (sc.excess[1] >= 1e8).all()              # scenario sees 1e9
+    assert (sc.excess[0] == 7.0).all()

@@ -1,0 +1,140 @@
+"""Property + parity tests for the chunked per-domain greedy solver.
+
+Invariants checked over randomized registries (hypothesis):
+  * per-domain per-step energy budget is never exceeded,
+  * every admitted client reaches m_min and never exceeds m_max,
+  * the result has exactly n clients or is None,
+and the batched chunked variant must reproduce the sequential commit
+loop's selections (clients bit-identical, batches allclose) on seeded
+instances, including tight-budget and infeasible regimes.
+"""
+import numpy as np
+import pytest
+
+try:  # property tests need hypothesis; the seeded pins below do not
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import ClientRegistry, ClientSpec, PowerDomain, SelectionInputs
+from repro.core.selection import (_ProbeCache, _eligible, _solve_greedy,
+                                  _solve_greedy_sequential)
+
+
+def build_inputs(seed, n_clients, n_domains, horizon, budget_scale):
+    rng = np.random.default_rng(seed)
+    domains = [PowerDomain(name=f"d{i}") for i in range(n_domains)]
+    clients = [ClientSpec(
+        name=f"c{i:03d}", domain=f"d{i % n_domains}",
+        m_max_capacity=float(rng.uniform(1.0, 6.0)),
+        delta=float(rng.uniform(0.5, 3.0)),
+        n_samples=int(rng.integers(50, 400)),
+        batches_per_epoch=int(rng.integers(2, 12)),
+        min_epochs=1.0, max_epochs=float(rng.uniform(1.0, 5.0)))
+        for i in range(n_clients)]
+    reg = ClientRegistry(clients, domains)
+    return SelectionInputs(
+        registry=reg,
+        m_spare=rng.uniform(0.0, 5.0, (n_clients, horizon)),
+        r_excess=rng.uniform(0.0, 80.0 * budget_scale, (n_domains, horizon)),
+        sigma=rng.uniform(0.1, 2.0, n_clients),
+        client_order=[c.name for c in clients],
+        domain_order=[d.name for d in domains])
+
+
+def check_invariants(inp, d, n, result):
+    reg = inp.registry
+    if result is None:
+        return
+    chosen, batches = result
+    assert len(chosen) == n                      # exactly-n or None
+    assert len(set(chosen)) == n                 # no duplicates
+    dd = min(d, inp.m_spare.shape[1])
+    assert batches.shape == (n, dd)
+    delta, m_min, m_max, dom = (
+        reg.delta_arr, reg.m_min_arr, reg.m_max_arr,
+        reg.domain_rows(inp.domain_order))
+    rows = reg.rows(inp.client_order)[chosen]
+    totals = batches.sum(axis=1)
+    assert np.all(totals >= m_min[rows] - 1e-9)  # reaches m_min
+    assert np.all(totals <= m_max[rows] + 1e-9)  # never exceeds m_max
+    assert np.all(batches >= -1e-12)
+    # per-domain per-step budget
+    for p in range(inp.r_excess.shape[0]):
+        members = [i for i, r in enumerate(rows) if dom[r] == p]
+        if not members:
+            continue
+        drain = (batches[members] * delta[rows[members], None]).sum(axis=0)
+        assert np.all(drain <= inp.r_excess[p, :dd] + 1e-6)
+
+
+def _invariants_and_parity(seed, n_clients, n_domains, horizon, n,
+                           budget_scale):
+    inp = build_inputs(seed, n_clients, n_domains, horizon, budget_scale)
+    cache = _ProbeCache(inp)
+    for d in {1, max(1, horizon // 2), horizon}:
+        eligible = _eligible(inp, d, cache)
+        batched = _solve_greedy(inp, d, n, eligible, cache)
+        sequential = _solve_greedy_sequential(inp, d, n, eligible, cache)
+        check_invariants(inp, d, n, batched)
+        check_invariants(inp, d, n, sequential)
+        assert (batched is None) == (sequential is None)
+        if batched is not None:
+            assert batched[0] == sequential[0]
+            np.testing.assert_allclose(batched[1], sequential[1],
+                                       rtol=1e-12, atol=1e-12)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           n_clients=st.integers(4, 40),
+           n_domains=st.integers(1, 5),
+           horizon=st.integers(1, 24),
+           n=st.integers(1, 8),
+           budget_scale=st.sampled_from([0.0, 0.02, 0.2, 1.0]))
+    def test_greedy_invariants_and_batched_parity(seed, n_clients, n_domains,
+                                                  horizon, n, budget_scale):
+        _invariants_and_parity(seed, n_clients, n_domains, horizon, n,
+                               budget_scale)
+else:
+    @pytest.mark.parametrize("seed", range(25))
+    def test_greedy_invariants_and_batched_parity(seed):
+        """Fallback sweep when hypothesis is unavailable."""
+        rng = np.random.default_rng(seed + 999)
+        _invariants_and_parity(
+            seed, n_clients=int(rng.integers(4, 41)),
+            n_domains=int(rng.integers(1, 6)),
+            horizon=int(rng.integers(1, 25)), n=int(rng.integers(1, 9)),
+            budget_scale=float(rng.choice([0.0, 0.02, 0.2, 1.0])))
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_batched_matches_sequential_seeded(seed):
+    """Fixed-seed pin incl. probes beyond the horizon and tight budgets."""
+    scale = [1.0, 0.05, 0.0][seed % 3]
+    inp = build_inputs(seed, n_clients=30, n_domains=4, horizon=20,
+                       budget_scale=scale)
+    cache = _ProbeCache(inp)
+    for d in (1, 7, 20, 33):
+        for n in (1, 5, 12):
+            eligible = _eligible(inp, d, cache)
+            a = _solve_greedy(inp, d, n, eligible, cache)
+            b = _solve_greedy_sequential(inp, d, n, eligible, cache)
+            assert (a is None) == (b is None)
+            if a is not None:
+                assert a[0] == b[0]
+                np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_greedy_m_max_cap_respected_under_abundance():
+    """With huge budgets every admitted client is m_max/spare-limited."""
+    inp = build_inputs(5, n_clients=12, n_domains=2, horizon=16,
+                       budget_scale=1.0)
+    inp.r_excess[:, :] = 1e9
+    cache = _ProbeCache(inp)
+    eligible = _eligible(inp, 16, cache)
+    res = _solve_greedy(inp, 16, 6, eligible, cache)
+    check_invariants(inp, 16, 6, res)
+    assert res is not None

@@ -1,0 +1,57 @@
+"""Seed-determinism guard for the memoized-forecast simulation path.
+
+Two independently constructed ``FLSimulation.run`` invocations with the
+same seed must produce *identical* ``summary()`` dicts — if any component
+(counter-seeded forecast slabs, blocklist release draws, strategy RNG,
+utility tracking) coupled to call order or leaked state across instances,
+round counts/energy/participation would drift.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (FLSimulation, ProxyTrainer, make_paper_registry,
+                        make_strategy)
+from repro.data.traces import make_scenario
+
+
+def run_once(strategy_name, seed, hours=8, n_clients=50, **strat_kw):
+    sc = make_scenario("global", n_clients=n_clients, days=1, seed=seed)
+    reg = make_paper_registry(n_clients=n_clients, seed=seed,
+                              domain_names=sc.domain_names)
+    strat = make_strategy(strategy_name, reg, n=5, d_max=60, seed=seed,
+                          **strat_kw)
+    trainer = ProxyTrainer(reg.client_names,
+                           {c: reg.clients[c].n_samples
+                            for c in reg.client_names}, k=0.0005, seed=seed)
+    sim = FLSimulation(reg, sc, strat, trainer, eval_every=2, seed=seed)
+    return sim.run(until_step=hours * 60)
+
+
+def assert_identical_summaries(a, b):
+    assert set(a) == set(b)
+    for key in a:
+        va, vb = a[key], b[key]
+        if isinstance(va, float) and np.isnan(va):
+            assert np.isnan(vb), key
+        else:
+            assert va == vb, key
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("fedzero", {"solver": "greedy"}),
+    ("fedzero", {"solver": "mip"}),
+    ("oort", {}),
+])
+def test_same_seed_identical_summary(name, kw):
+    s1 = run_once(name, seed=11, **kw)
+    s2 = run_once(name, seed=11, **kw)
+    assert s1["rounds"] >= 1  # the guard is vacuous on an idle run
+    assert_identical_summaries(s1, s2)
+
+
+def test_different_seed_diverges():
+    """Sanity check that the guard can fail: other seeds change the run."""
+    s1 = run_once("fedzero", seed=11, solver="greedy")
+    s2 = run_once("fedzero", seed=12, solver="greedy")
+    assert (s1["rounds"], s1["total_energy_wh"]) != \
+        (s2["rounds"], s2["total_energy_wh"])
