@@ -29,10 +29,7 @@ def run(days: float = 2.0, alphas=(0.25, 0.5, 1.0, 2.0, 4.0), seed=0):
         reg = make_paper_registry(n_clients=100, seed=seed,
                                   domain_names=sc.domain_names)
         strat = FedZeroStrategy(reg, n=10, d_max=60, seed=seed, alpha=alpha)
-        trainer = ProxyTrainer(reg.client_names,
-                               {c: reg.clients[c].n_samples
-                                for c in reg.client_names}, k=0.0004,
-                               seed=seed)
+        trainer = ProxyTrainer(len(reg), k=0.0004, seed=seed)
         sim = FLSimulation(reg, sc, strat, trainer, eval_every=1, seed=seed)
         s = sim.run(until_step=int(days * 24 * 60) - 61)
         part = np.array(list(s["participation"].values()), float)

@@ -39,16 +39,13 @@ def run_strategy(strategy_name: str, scenario_name: str = "global",
     if strategy_name == "fedzero":
         kw["solver"] = solver
     strat = make_strategy(strategy_name, reg, **kw)
-    trainer = ProxyTrainer(
-        reg.client_names,
-        {c: reg.clients[c].n_samples for c in reg.client_names},
-        k=proxy_k, seed=seed)
+    trainer = ProxyTrainer(len(reg), k=proxy_k, seed=seed)
     sim = FLSimulation(reg, sc, strat, trainer, eval_every=1, seed=seed)
     t0 = time.time()
     summary = sim.run(until_step=int(days * 24 * 60) - d_max - 1,
                       max_rounds=max_rounds)
     summary["wall_s"] = time.time() - t0
     summary["participation_by_domain"] = {
-        dom: [sim.participation[c] for c in reg.domains[dom].clients]
+        dom: sim.participation[reg.rows(reg.domains[dom].clients)].tolist()
         for dom in reg.domains}
     return sim, summary

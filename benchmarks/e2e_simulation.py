@@ -1,64 +1,97 @@
-"""End-to-end multi-day 10k-client simulation benchmark (paper §5.6).
+"""End-to-end fleet-scale FedZero simulation benchmark (paper §5.6).
 
 Unlike ``benchmarks/scalability.py`` — which times one ``select_clients``
 call and one executor round in isolation — this runs the *whole* FedZero
-loop at fleet scale: scenario generation (batched trace synthesis),
-per-round forecasts (memoized batched noise slabs), Algorithm 1 with the
-chunked greedy solver, the SoA round executor, utility/fairness updates
-and the proxy trainer, for ≥3 simulated days over 10k clients. Emits
-``BENCH_e2e_simulation.json`` at the repo root; CI runs it on every push
-and the ``under_60s`` flag is the regression tripwire for the
-"tens of thousands of clients in seconds" claim.
+loop at fleet scale: lazy chunked ScenarioStore synthesis, per-round
+forecasts (noise drawn only for eligible rows), Algorithm 1 with the
+chunked greedy solver, the row-indexed SoA round executor, utility/
+fairness updates and the proxy trainer. Two configurations are measured,
+each in its own subprocess so peak RSS is attributable:
+
+* ``10k_3day``  — 10k clients, 3 simulated days; the ``under_60s`` wall
+  budget is the regression tripwire for the "tens of thousands of
+  clients in seconds" claim;
+* ``100k_1day`` — 100k clients over a **7-day** ScenarioStore, one
+  simulated day; its ``peak_rss_mb`` must stay under 1.5 GB — the whole
+  point of the chunked float32 store (the old eager float64 ``util``
+  slab alone was ~2.8 GB at this size).
+
+Emits ``BENCH_e2e_simulation.json`` at the repo root. CI runs the
+benchmark on every push (a failing run or a blown budget fails the job)
+and ``--check`` verifies the *committed* JSON is not stale: schema and
+configuration set must match this script.
 
 Usage:
-    python benchmarks/e2e_simulation.py [--clients 10000] [--days 3] [--quick]
+    python benchmarks/e2e_simulation.py [--quick] [--check [PATH]]
+    python benchmarks/e2e_simulation.py --single 100k_1day   (internal)
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (FLSimulation, ProxyTrainer, make_paper_registry,
-                        make_strategy)
-from repro.data.traces import make_scenario
-
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_e2e_simulation.json")
 
+SCHEMA = 2
+CONFIGS = {
+    "10k_3day": {"clients": 10_000, "scenario_days": 3, "sim_days": 3,
+                 "budget_wall_s": 60.0},
+    "100k_1day": {"clients": 100_000, "scenario_days": 7, "sim_days": 1,
+                  "budget_wall_s": 600.0, "budget_rss_mb": 1536.0},
+}
 
-def run_e2e(n_clients: int, days: int, n: int = 10, d_max: int = 60,
-            seed: int = 0, solver: str = "greedy"):
+
+def _peak_rss_mb() -> float:
+    """Process-lifetime peak RSS in MB; NaN where unsupported (Windows)."""
+    try:
+        import resource
+    except ImportError:
+        return float("nan")
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    # ru_maxrss is KiB on Linux but bytes on macOS
+    return peak / (1 << 20) if sys.platform == "darwin" else peak / 1024.0
+
+
+def run_e2e(n_clients: int, scenario_days: int, sim_days: int, n: int = 10,
+            d_max: int = 60, seed: int = 0, solver: str = "greedy"):
+    from repro.core import (FLSimulation, ProxyTrainer, make_paper_registry,
+                            make_strategy)
+    from repro.data.traces import make_scenario
+
     t0 = time.perf_counter()
-    sc = make_scenario("global", n_clients=n_clients, days=days, seed=seed)
+    sc = make_scenario("global", n_clients=n_clients, days=scenario_days,
+                       seed=seed)
     reg = make_paper_registry(n_clients=n_clients, seed=seed,
                               domain_names=sc.domain_names)
     strat = make_strategy("fedzero", reg, n=n, d_max=d_max, seed=seed,
                           solver=solver)
-    trainer = ProxyTrainer(reg.client_names,
-                           {c: reg.clients[c].n_samples
-                            for c in reg.client_names},
-                           k=0.0004, seed=seed)
+    trainer = ProxyTrainer(len(reg), k=0.0004, seed=seed)
     sim = FLSimulation(reg, sc, strat, trainer, eval_every=5, seed=seed)
     t_setup = time.perf_counter() - t0
 
     t1 = time.perf_counter()
-    summary = sim.run(until_step=days * 24 * 60 - d_max - 1)
+    summary = sim.run(until_step=sim_days * 24 * 60 - d_max - 1)
     t_sim = time.perf_counter() - t1
 
+    peak_rss_mb = _peak_rss_mb()
     return {
         "n_clients": n_clients,
-        "days": days,
+        "scenario_days": scenario_days,
+        "sim_days": sim_days,
         "n_per_round": n,
         "d_max": d_max,
         "solver": solver,
         "setup_s": t_setup,
         "sim_s": t_sim,
         "wall_s": t_setup + t_sim,
+        "peak_rss_mb": peak_rss_mb,
         "rounds": summary["rounds"],
         "sim_minutes": summary["sim_minutes"],
         "total_energy_wh": summary["total_energy_wh"],
@@ -70,29 +103,102 @@ def run_e2e(n_clients: int, days: int, n: int = 10, d_max: int = 60,
     }
 
 
+def _evaluate(key: str, row: dict) -> dict:
+    cfg = CONFIGS[key]
+    row["within_wall_budget"] = bool(row["wall_s"] < cfg["budget_wall_s"])
+    if "budget_rss_mb" in cfg:
+        rss = row["peak_rss_mb"]
+        # NaN = platform cannot measure RSS; only CI's Linux gate enforces
+        row["within_rss_budget"] = bool(rss < cfg["budget_rss_mb"]) \
+            if rss == rss else True
+    row["ok"] = all(v for k, v in row.items() if k.startswith("within_"))
+    return row
+
+
+def check_committed(path: str) -> int:
+    """Exit code 0 iff the committed JSON matches this script's schema and
+    configuration set with passing budgets — the CI staleness gate."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[e2e --check] cannot read {path}: {e}")
+        return 1
+    if payload.get("schema") != SCHEMA:
+        print(f"[e2e --check] stale schema {payload.get('schema')} != {SCHEMA}")
+        return 1
+    configs = payload.get("configs", {})
+    if set(configs) != set(CONFIGS):
+        print(f"[e2e --check] stale config set {sorted(configs)} != "
+              f"{sorted(CONFIGS)}")
+        return 1
+    for key, cfg in CONFIGS.items():
+        row = configs[key]
+        for field in ("clients", "scenario_days", "sim_days"):
+            want = cfg[field]
+            # the JSON rows use "n_clients" where CONFIGS uses "clients"
+            got = row.get("n_clients" if field == "clients" else field)
+            if got != want:
+                print(f"[e2e --check] {key}.{field}: {got} != {want}")
+                return 1
+        if not row.get("ok"):
+            print(f"[e2e --check] {key} recorded as failing its budget")
+            return 1
+    print(f"[e2e --check] {path} is fresh")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--clients", type=int, default=10000)
-    ap.add_argument("--days", type=int, default=3)
     ap.add_argument("--quick", action="store_true",
-                    help="small run for smoke-testing the harness")
+                    help="small in-process run for smoke-testing the harness")
+    ap.add_argument("--single", metavar="KEY",
+                    help="run one configuration and print its JSON row")
+    ap.add_argument("--check", nargs="?", const=OUT_PATH, metavar="PATH",
+                    help="validate a committed JSON against this script")
     ap.add_argument("--out", default=OUT_PATH)
     args = ap.parse_args()
 
-    if args.quick:
-        args.clients, args.days = 1000, 1
+    if args.check:
+        sys.exit(check_committed(args.check))
 
-    row = run_e2e(args.clients, args.days)
-    row["under_60s"] = bool(row["wall_s"] < 60.0)
-    print(f"[e2e] C={row['n_clients']}  days={row['days']}  "
-          f"setup={row['setup_s']:.1f}s  sim={row['sim_s']:.1f}s  "
-          f"rounds={row['rounds']}  "
-          f"{row['ms_per_round'] and round(row['ms_per_round'], 1)}ms/round  "
-          f"under_60s={row['under_60s']}")
+    if args.single:
+        cfg = CONFIGS[args.single]
+        row = run_e2e(cfg["clients"], cfg["scenario_days"], cfg["sim_days"])
+        print(json.dumps(_evaluate(args.single, row), default=float))
+        return
+
+    if args.quick:
+        row = run_e2e(1000, 1, 1)
+        print(f"[e2e quick] rounds={row['rounds']} wall={row['wall_s']:.1f}s "
+              f"rss={row['peak_rss_mb']:.0f}MB")
+        if not row["rounds"]:
+            sys.exit(1)
+        return
+
+    payload = {"schema": SCHEMA, "configs": {}}
+    failed = False
+    for key in CONFIGS:
+        # each configuration in a fresh subprocess: ru_maxrss measures it
+        # alone, and a blown heap in one run cannot mask another's
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--single", key],
+            capture_output=True, text=True)
+        if proc.returncode != 0:
+            print(f"[e2e] {key} FAILED:\n{proc.stderr[-2000:]}")
+            failed = True
+            continue
+        row = json.loads(proc.stdout.strip().splitlines()[-1])
+        payload["configs"][key] = row
+        print(f"[e2e] {key}: C={row['n_clients']}  "
+              f"setup={row['setup_s']:.1f}s  sim={row['sim_s']:.1f}s  "
+              f"rounds={row['rounds']}  rss={row['peak_rss_mb']:.0f}MB  "
+              f"ok={row['ok']}")
+        failed = failed or not row["ok"]
     with open(args.out, "w") as f:
-        json.dump(row, f, indent=1, default=float)
+        json.dump(payload, f, indent=1, default=float)
     print(f"wrote {os.path.abspath(args.out)}")
-    if not args.quick and not row["under_60s"]:
+    if failed:
         sys.exit(1)
 
 

@@ -38,8 +38,8 @@ def make_instance(n_clients, n_domains, horizon, seed=0):
         m_spare=rng.uniform(0, 6, (n_clients, horizon)),
         r_excess=rng.uniform(0, 60, (n_domains, horizon)),
         sigma=rng.uniform(0.1, 10, n_clients),
-        client_order=[c.name for c in clients],
-        domain_order=[d.name for d in domains])
+        rows=np.arange(n_clients),
+        dom=reg.domain_rows([d.name for d in domains]))
 
 
 def run(quick: bool = False):

@@ -50,8 +50,8 @@ def synth_inputs(n_clients: int, n_domains: int = 10, horizon: int = 60,
         m_spare=rng.uniform(0.0, 6.0, (n_clients, horizon)),
         r_excess=rng.uniform(0.0, 8.0 * per_dom, (n_domains, horizon)),
         sigma=rng.uniform(0.1, 2.0, n_clients),
-        client_order=reg.client_names,
-        domain_order=[d.name for d in domains])
+        rows=np.arange(n_clients),
+        dom=reg.domain_rows([d.name for d in domains]))
     return reg, inp
 
 
@@ -103,13 +103,11 @@ def bench_execute_round(sizes, d_max: int = 60, seed: int = 0):
         sc = ScenarioData(
             excess=rng.uniform(0.0, 8.0 * size / 10, (10, T)),
             util=rng.uniform(0.0, 1.0, (size, T)),
-            domain_names=inp.domain_order, seed=seed)
+            domain_names=[f"d{i}" for i in range(10)], seed=seed)
         strat = make_strategy("random", reg, n=size, d_max=d_max, seed=seed)
-        trainer = ProxyTrainer(reg.client_names,
-                               {c: reg.clients[c].n_samples
-                                for c in reg.client_names})
+        trainer = ProxyTrainer(len(reg))
         sim = FLSimulation(reg, sc, strat, trainer, d_max=d_max)
-        sel = Selection(clients=reg.client_names, expected_duration=d_max)
+        sel = Selection(rows=np.arange(size), expected_duration=d_max)
         t0 = time.perf_counter()
         rr = sim._execute_round(sel)
         wall = time.perf_counter() - t0

@@ -32,9 +32,7 @@ def main():
         reg = make_paper_registry(n_clients=100, seed=args.seed,
                                   domain_names=sc.domain_names)
         strat = make_strategy(name, reg, n=args.n, d_max=60, seed=args.seed)
-        trainer = ProxyTrainer(reg.client_names,
-                               {c: reg.clients[c].n_samples
-                                for c in reg.client_names}, k=0.0006)
+        trainer = ProxyTrainer(len(reg), k=0.0006)
         sim = FLSimulation(reg, sc, strat, trainer, eval_every=1)
         s = sim.run(until_step=int(args.days * 24 * 60) - 61)
         t_half = next((t / 60 for t, m, _ in s["metric_curve"] if m >= 0.5),

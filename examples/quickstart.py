@@ -22,9 +22,7 @@ registry = make_paper_registry(n_clients=100, seed=0,
 strategy = make_strategy("fedzero", registry, n=10, d_max=60, seed=0)
 
 # 4. run one simulated day
-trainer = ProxyTrainer(registry.client_names,
-                       {c: registry.clients[c].n_samples
-                        for c in registry.client_names}, k=0.001)
+trainer = ProxyTrainer(len(registry), k=0.001)
 sim = FLSimulation(registry, scenario, strategy, trainer, eval_every=1)
 summary = sim.run(until_step=23 * 60, verbose=True)
 

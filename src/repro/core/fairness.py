@@ -1,4 +1,4 @@
-"""Fair-participation blocklist (paper §4.4).
+"""Fair-participation blocklist (paper §4.4) — registry-row arrays.
 
 Clients enter the blocklist after participating in a round; at the start of
 each round a blocked client c is released with probability
@@ -11,57 +11,58 @@ release speed (paper uses α = 1), and ω is periodically updated to the mean
 participation over all clients so release probabilities do not decay over
 the course of a long training.
 
-The per-round work is batched: ω is one mean over the participation
-values, and the stochastic release is a single vectorized draw over the
-(sorted, hence deterministic) blocked set instead of a per-client loop.
+State is two flat arrays indexed by registry row (``participation`` int64,
+``blocked`` bool): ω refresh is one vectorized mean and the stochastic
+release is a single batched draw over the blocked rows in ascending row
+order. (The pre-row-ID implementation drew over the *sorted-name* order,
+which differs from row order once names stop sorting lexicographically —
+the release draws are therefore distributionally, not bitwise, equivalent;
+see tests/test_rowid_parity.py.)
 """
 from __future__ import annotations
-
-from typing import Dict, Iterable, Set
 
 import numpy as np
 
 
 class Blocklist:
-    def __init__(self, clients: Iterable[str], alpha: float = 1.0, seed: int = 0,
+    def __init__(self, n_clients: int, alpha: float = 1.0, seed: int = 0,
                  omega_update_every: int = 1):
         self.alpha = alpha
-        self.blocked: Set[str] = set()
-        self.participation: Dict[str, int] = {c: 0 for c in clients}
+        self.blocked = np.zeros(n_clients, dtype=bool)
+        self.participation = np.zeros(n_clients, dtype=np.int64)
         self.omega = 0.0
         self._round = 0
         self._omega_every = omega_update_every
         self._rng = np.random.default_rng(seed)
 
-    def release_probability(self, client: str) -> float:
-        excess = self.participation[client] - self.omega
+    def release_probability(self, row: int) -> float:
+        excess = self.participation[row] - self.omega
         if excess <= 0:
             return 1.0
         return float(min(1.0, excess ** (-self.alpha)))
 
+    def blocked_rows(self) -> np.ndarray:
+        """Currently-blocked registry rows, ascending."""
+        return np.nonzero(self.blocked)[0]
+
     def start_round(self):
-        """Update ω periodically and stochastically release blocked clients."""
+        """Update ω periodically and stochastically release blocked rows."""
         self._round += 1
         if (self._round - 1) % self._omega_every == 0:
-            vals = self.participation.values()
-            self.omega = float(np.fromiter(vals, dtype=float,
-                                           count=len(vals)).mean())
-        if not self.blocked:
+            self.omega = float(self.participation.mean())
+        rows = np.nonzero(self.blocked)[0]
+        if not rows.size:
             return
-        names = sorted(self.blocked)  # deterministic draw order
-        excess = np.fromiter((self.participation[c] for c in names),
-                             dtype=float, count=len(names)) - self.omega
+        excess = self.participation[rows] - self.omega
         with np.errstate(divide="ignore", over="ignore", invalid="ignore"):
             probs = np.where(excess > 0,
                              np.minimum(1.0, excess ** (-self.alpha)), 1.0)
-        released = self._rng.random(len(names)) < probs
-        self.blocked.difference_update(
-            n for n, r in zip(names, released) if r)
+        released = self._rng.random(rows.size) < probs
+        self.blocked[rows[released]] = False
 
-    def record_participation(self, clients: Iterable[str]):
-        for c in clients:
-            self.participation[c] += 1
-            self.blocked.add(c)
+    def record_participation(self, rows: np.ndarray):
+        self.participation[rows] += 1
+        self.blocked[rows] = True
 
-    def is_blocked(self, client: str) -> bool:
-        return client in self.blocked
+    def is_blocked(self, row: int) -> bool:
+        return bool(self.blocked[row])

@@ -16,19 +16,24 @@ near-identical quality at O(C·d + C log C) cost — used by the scalability
 benchmark beyond the exact-MIP comfort zone and validated against the MIP
 in tests.
 
-Implementation notes (50k+-client scale): all per-client work is batched
-NumPy over structure-of-arrays client data (see ``SelectionInputs.arrays``)
-— no per-client Python loops or dict lookups remain in the eligibility
-filter or the greedy hot path. A per-call :class:`_ProbeCache` shares the
-expensive intermediates (SoA gather, cumulative reachability/excess sums)
-across the O(log d_max) binary-search probes: greedy scoring reads the
-cached reachability cumsum directly, and the MIP only slices cached arrays
-instead of rebuilding its COO constraint triplets from scratch. Greedy
-admissions are committed in batched chunk passes over the rank queue
-(clients of different power domains never contend, so drains accumulate
-per domain) — see :func:`_solve_greedy`; the per-client sequential commit
-loop survives as :func:`_solve_greedy_sequential`, the bit-exact reference
-that the property/parity suite pins the batched variant against.
+Implementation notes (100k-client scale): identity is registry rows
+throughout — :class:`SelectionInputs` carries a ``rows`` array (registry
+row per candidate) and ``dom`` (domain row per candidate); no client
+names or name-keyed dicts appear anywhere in this module. All per-client
+work is batched NumPy over the registry's structure-of-arrays mirrors.
+A per-call :class:`_ProbeCache` shares the expensive intermediates
+(SoA gather, cumulative reachability/excess sums) across the O(log d_max)
+binary-search probes. The MIP path builds **one** HiGHS model at the
+largest probe duration and re-solves it per probe with only variable
+bounds changed (m vars beyond the probe's ``d`` pinned to 0) — the
+constraint matrix is never reassembled (:class:`_WarmMip`). Greedy
+probes run **feasibility-only** (stop at ``n`` admissions, no batch
+schedule materialization); the full schedule is built once at the
+minimal feasible ``d``. Greedy admissions are committed in batched chunk
+passes over the rank queue — see :func:`_solve_greedy`; the per-client
+sequential commit loop survives as :func:`_solve_greedy_sequential`, the
+bit-exact reference that the property/parity suite pins the batched
+variant against.
 """
 from __future__ import annotations
 
@@ -44,28 +49,30 @@ from .types import ClientRegistry, Selection
 
 @dataclasses.dataclass
 class SelectionInputs:
-    """Per-round inputs to the optimizer (forecasts + utility weights)."""
+    """Per-round inputs to the optimizer (forecasts + utility weights).
+
+    Candidate identity is positional: row k of ``m_spare``/``sigma`` is
+    candidate k, whose registry row is ``rows[k]`` and whose power domain
+    is row ``dom[k]`` of ``r_excess``.
+    """
 
     registry: ClientRegistry
-    m_spare: np.ndarray        # [C, H] forecast spare capacity (batches/step)
+    m_spare: np.ndarray        # [K, H] forecast spare capacity (batches/step)
     r_excess: np.ndarray       # [P, H] forecast excess energy (Wmin/step)
-    sigma: np.ndarray          # [C] statistical utility (0 = blocked)
-    client_order: List[str]    # row order of m_spare/sigma
-    domain_order: List[str]    # row order of r_excess
+    sigma: np.ndarray          # [K] statistical utility (0 = blocked)
+    rows: np.ndarray           # [K] registry row per candidate
+    dom: np.ndarray            # [K] domain row (into r_excess) per candidate
 
     def arrays(self):
-        """SoA client data aligned with ``client_order`` (cached).
+        """SoA client data gathered for the candidate rows (cached).
 
-        Returns ``(delta[C], m_min[C], m_max[C], dom[C])`` where ``dom``
-        maps each client row to its domain's row in ``domain_order``.
+        Returns ``(delta[K], m_min[K], m_max[K], dom[K])``.
         """
         cached = getattr(self, "_soa", None)
         if cached is None:
             reg = self.registry
-            rows = reg.rows(self.client_order)
-            cached = (reg.delta_arr[rows], reg.m_min_arr[rows],
-                      reg.m_max_arr[rows],
-                      reg.domain_rows(self.domain_order)[rows])
+            cached = (reg.delta_arr[self.rows], reg.m_min_arr[self.rows],
+                      reg.m_max_arr[self.rows], self.dom)
             self._soa = cached
         return cached
 
@@ -77,11 +84,10 @@ class _ProbeCache:
     everything that is d-independent — or a cumulative sum that any ``d``
     can slice — is computed once here:
 
-    * ``reach_cum[C, H]``: cumulative Σ_t min(m_spare, r_excess/δ), so the
+    * ``reach_cum[K, H]``: cumulative Σ_t min(m_spare, r_excess/δ), so the
       Alg. 1 line-11 reachability test at duration d is ``reach_cum[:, d-1]``;
     * ``excess_cum[P, H]``: cumulative domain excess for the line-6 filter;
-    * ``ub[C, H]``: clipped m_spare slab, sliced per probe for the MIP
-      variable upper bounds.
+    * ``ub[K, H]``: clipped m_spare slab for the MIP variable upper bounds.
     """
 
     def __init__(self, inp: SelectionInputs):
@@ -104,7 +110,7 @@ class _ProbeCache:
 
 def _eligible(inp: SelectionInputs, d: int,
               cache: Optional[_ProbeCache] = None) -> List[int]:
-    """Pre-filters of Algorithm 1 (lines 6, 8, 11) — vectorized over C."""
+    """Pre-filters of Algorithm 1 (lines 6, 8, 11) — vectorized over K."""
     if cache is None:
         cache = _ProbeCache(inp)
     # clamp to the forecast horizon: a probe beyond H sees the same windows
@@ -122,77 +128,109 @@ def _eligible(inp: SelectionInputs, d: int,
     return np.nonzero(mask)[0].tolist()
 
 
+class _WarmMip:
+    """One HiGHS model reused across all binary-search probes.
+
+    The model is assembled **once** at ``d_cap`` (the largest duration any
+    probe can see) over the eligible set at ``d_cap`` — a superset of
+    every smaller probe's eligible set. A probe at duration ``d`` then
+    only swaps variable bounds: the upper bound of every m[c, t] with
+    ``t ≥ d`` is pinned to 0, which (a) zeroes those steps out of the
+    objective and the budget rows and (b) lets HiGHS presolve drop them.
+    Candidates unable to reach m_min within ``d`` need no explicit
+    exclusion — constraint (1) already forces their b_c to 0, because the
+    reachability test optimistically grants each client the whole domain
+    budget. Constraint rows (budgets for t ≥ d) are trivially satisfied
+    by the pinned variables, so lo/hi never change.
+    """
+
+    def __init__(self, inp: SelectionInputs, cache: _ProbeCache, n: int):
+        self.d_cap = cache.reach_cum.shape[1]
+        self.el = np.asarray(_eligible(inp, self.d_cap, cache), dtype=int)
+        k, d = self.el.size, self.d_cap
+        self.k = k
+        if k < n:
+            return  # no probe can ever succeed; solve() never called
+        el = self.el
+        delta, m_min, m_max = cache.delta[el], cache.m_min[el], cache.m_max[el]
+        dom = cache.dom[el]
+        nv = k + k * d  # b vars then m vars (client-major)
+        c_obj = np.zeros(nv)
+        c_obj[k:] = -np.repeat(inp.sigma[el], d)  # maximize
+        jj = np.arange(k)
+        j_rep = np.repeat(jj, d)                  # [k*d] local client per m var
+        t_rep = np.tile(np.arange(d), k)          # [k*d] step per m var
+        mcols = k + j_rep * d + t_rep
+        # (1) m_min·b ≤ Σ m  and  Σ m ≤ m_max·b   (rows 2j, 2j+1)
+        rows1 = np.concatenate([2 * j_rep, 2 * j_rep + 1, 2 * jj, 2 * jj + 1])
+        cols1 = np.concatenate([mcols, mcols, jj, jj])
+        vals1 = np.concatenate([np.ones(2 * k * d), -m_min, -m_max])
+        lo1 = np.tile([0.0, -np.inf], k)
+        hi1 = np.tile([np.inf, 0.0], k)
+        # (2) per-domain per-step energy budget, domains ranked by first
+        # appearance among the eligible candidates
+        uniq, first, inv = np.unique(dom, return_index=True,
+                                     return_inverse=True)
+        by_first = np.argsort(first, kind="stable")
+        rank_of = np.empty(uniq.size, dtype=int)
+        rank_of[by_first] = np.arange(uniq.size)
+        rank = rank_of[inv]                       # [k] domain rank per client
+        rows2 = 2 * k + rank[j_rep] * d + t_rep
+        vals2 = delta[j_rep]
+        lo2 = np.full(uniq.size * d, -np.inf)
+        hi2 = inp.r_excess[uniq[by_first], :d].ravel()
+        # (3) exactly n clients
+        r3 = 2 * k + uniq.size * d
+        rows = np.concatenate([rows1, rows2, np.full(k, r3)])
+        cols = np.concatenate([cols1, mcols, jj])
+        vals = np.concatenate([vals1, vals2, np.ones(k)])
+        self.A = sp.csr_matrix((vals, (rows, cols)), shape=(r3 + 1, nv))
+        self.lo = np.concatenate([lo1, lo2, [float(n)]])
+        self.hi = np.concatenate([hi1, hi2, [float(n)]])
+        self.c_obj = c_obj
+        self.integrality = np.zeros(nv)
+        self.integrality[:k] = 1
+        self.ub_full = np.ones(nv)
+        self.ub_full[k:] = cache.ub[el, :d].ravel()
+        self.n = n
+
+    def solve(self, d: int, time_limit: float):
+        """Probe at duration ``d``: bounds swap + re-solve, no rebuild."""
+        k, d_cap = self.k, self.d_cap
+        dd = min(d, d_cap)
+        ub = self.ub_full.copy()
+        if dd < d_cap:
+            ub[k:].reshape(k, d_cap)[:, dd:] = 0.0
+        res = milp(c=self.c_obj,
+                   constraints=LinearConstraint(self.A, self.lo, self.hi),
+                   bounds=Bounds(np.zeros_like(ub), ub),
+                   integrality=self.integrality,
+                   options={"time_limit": time_limit, "presolve": True})
+        if not res.success or res.x is None:
+            return None
+        b = res.x[:k] > 0.5
+        if b.sum() != self.n:
+            return None
+        sel = np.nonzero(b)[0]
+        batches = res.x[k:].reshape(k, d_cap)[sel][:, :dd]
+        return self.el[sel].tolist(), batches
+
+
 def _solve_mip(inp: SelectionInputs, d: int, n: int, eligible: List[int],
                time_limit: float = 60.0,
-               cache: Optional[_ProbeCache] = None):
-    """Exact MIP via HiGHS. Returns (selected client rows, batches [k,d]) or None.
-
-    The constraint matrix is assembled from flat index arithmetic on the
-    cached SoA arrays (one O(nnz) slice/gather per probe, no Python loops):
-    rows [0, 2k) are the per-client min/max rows (1), rows [2k, 2k+P·d) the
-    per-domain per-step budgets (2) in order of first domain appearance,
-    and the last row is the cardinality constraint (3).
-    """
+               cache: Optional[_ProbeCache] = None,
+               model: Optional[_WarmMip] = None):
+    """Exact MIP via HiGHS. Returns (selected candidate rows,
+    batches [n, d]) or None. ``model`` carries the warm (pre-assembled)
+    probe model across binary-search probes; without one, a single-use
+    model is built."""
     if cache is None:
         cache = _ProbeCache(inp)
-    el = np.asarray(eligible, dtype=int)
-    k = el.size
-    nv = k + k * d  # b vars then m vars (client-major)
-    delta, m_min, m_max = cache.delta[el], cache.m_min[el], cache.m_max[el]
-    dom = cache.dom[el]
-
-    c_obj = np.zeros(nv)
-    c_obj[k:] = -np.repeat(inp.sigma[el], d)  # maximize
-
-    jj = np.arange(k)
-    j_rep = np.repeat(jj, d)                  # [k*d] local client per m var
-    t_rep = np.tile(np.arange(d), k)          # [k*d] step per m var
-    mcols = k + j_rep * d + t_rep
-    # (1) m_min·b ≤ Σ m  and  Σ m ≤ m_max·b   (rows 2j, 2j+1)
-    rows1 = np.concatenate([2 * j_rep, 2 * j_rep + 1, 2 * jj, 2 * jj + 1])
-    cols1 = np.concatenate([mcols, mcols, jj, jj])
-    vals1 = np.concatenate([np.ones(2 * k * d), -m_min, -m_max])
-    lo1 = np.tile([0.0, -np.inf], k)
-    hi1 = np.tile([np.inf, 0.0], k)
-    # (2) per-domain per-step energy budget, domains ranked by first
-    # appearance among the eligible clients (matches the dict-based builder)
-    uniq, first, inv = np.unique(dom, return_index=True, return_inverse=True)
-    by_first = np.argsort(first, kind="stable")
-    rank_of = np.empty(uniq.size, dtype=int)
-    rank_of[by_first] = np.arange(uniq.size)
-    rank = rank_of[inv]                       # [k] domain rank per client
-    rows2 = 2 * k + rank[j_rep] * d + t_rep
-    vals2 = delta[j_rep]
-    lo2 = np.full(uniq.size * d, -np.inf)
-    hi2 = inp.r_excess[uniq[by_first], :d].ravel()
-    # (3) exactly n clients
-    r3 = 2 * k + uniq.size * d
-    nrows = r3 + 1
-
-    rows = np.concatenate([rows1, rows2, np.full(k, r3)])
-    cols = np.concatenate([cols1, mcols, jj])
-    vals = np.concatenate([vals1, vals2, np.ones(k)])
-    lo = np.concatenate([lo1, lo2, [float(n)]])
-    hi = np.concatenate([hi1, hi2, [float(n)]])
-
-    A = sp.csr_matrix((vals, (rows, cols)), shape=(nrows, nv))
-    ub = np.ones(nv)
-    ub[k:] = cache.ub[el, :d].ravel()
-    integrality = np.zeros(nv)
-    integrality[:k] = 1
-    res = milp(c=c_obj,
-               constraints=LinearConstraint(A, lo, hi),
-               bounds=Bounds(np.zeros(nv), ub),
-               integrality=integrality,
-               options={"time_limit": time_limit, "presolve": True})
-    if not res.success or res.x is None:
+    if model is None:
+        model = _WarmMip(inp, cache, n)
+    if model.k < n or len(eligible) < n:
         return None
-    b = res.x[:k] > 0.5
-    if b.sum() != n:
-        return None
-    sel = np.nonzero(b)[0]
-    batches = res.x[k:].reshape(k, d)[sel]
-    return el[sel].tolist(), batches
+    return model.solve(d, time_limit)
 
 
 def _rank_candidates(inp: SelectionInputs, d: int, el: np.ndarray,
@@ -202,7 +240,7 @@ def _rank_candidates(inp: SelectionInputs, d: int, el: np.ndarray,
     The achievable-batch total against the untouched budget is exactly the
     cached cumulative reachability (``reach_cum``), so scoring is three
     gathers and a lexsort — no per-probe [k, d] slab. Rank is descending
-    score with ties broken by descending client row (matches sorting
+    score with ties broken by descending candidate row (matches sorting
     (score, row) tuples in reverse).
     """
     delta, m_min, m_max = cache.delta[el], cache.m_min[el], cache.m_max[el]
@@ -255,26 +293,32 @@ def _solve_greedy_sequential(inp: SelectionInputs, d: int, n: int,
 
 
 def _solve_greedy(inp: SelectionInputs, d: int, n: int, eligible: List[int],
-                  cache: Optional[_ProbeCache] = None):
+                  cache: Optional[_ProbeCache] = None,
+                  feasibility_only: bool = False):
     """Greedy heuristic: rank clients by σ_c × energy-feasible batches, then
     admit in rank order while water-filling per-domain per-step budgets.
 
     Clients in different power domains never contend for the same budget,
     so admissions are water-filled with *batched* passes over the rank
     queue instead of one Python iteration per admitted client: each pass
-    takes a chunk of ~4·n candidates, computes their optimistic takes
-    against their domains' current budgets in one [chunk, d] batch,
-    bulk-rejects rows that cannot reach m_min (their reachable total only
-    shrinks as budgets drain, so rejection against the current budget is
-    exact), and admits the longest prefix whose pre-cap drains stay under
-    their domain budget — accumulated per domain, clients of different
-    domains never interact — by a 1e-9 relative margin. Margin-valid rows
-    are spare/m_max-limited at every step, so their takes are
-    bit-identical to what the sequential commit loop would compute; a
-    budget-limited row at the head of the queue falls back to an exact
-    single admission. Every pass either admits ≥ 1 client or retires a
-    whole chunk, so the result matches :func:`_solve_greedy_sequential`
-    exactly at a worst case of one full batched sweep.
+    takes a chunk of candidates, computes their optimistic takes against
+    their domains' current budgets in one [chunk, d] batch, bulk-rejects
+    rows that cannot reach m_min (their reachable total only shrinks as
+    budgets drain, so rejection against the current budget is exact), and
+    admits the longest prefix whose pre-cap drains stay under their
+    domain budget — accumulated per domain, clients of different domains
+    never interact — by a 1e-9 relative margin. Margin-valid rows are
+    spare/m_max-limited at every step, so their takes are bit-identical
+    to what the sequential commit loop would compute; a budget-limited
+    row at the head of the queue falls back to an exact single admission.
+    Every pass either admits ≥ 1 client or retires a whole chunk, so the
+    result matches :func:`_solve_greedy_sequential` exactly.
+
+    ``feasibility_only`` is the binary-search probe mode: identical
+    admission decisions (so feasibility answers match the full solve
+    bit-exactly), but chunks start at ``n`` rows instead of ``4n`` and no
+    batch schedule is materialized — the caller re-solves fully once at
+    the minimal feasible duration. Returns ``(chosen, None)``.
     """
     if cache is None:
         cache = _ProbeCache(inp)
@@ -284,9 +328,11 @@ def _solve_greedy(inp: SelectionInputs, d: int, n: int, eligible: List[int],
         return None
 
     budgets = inp.r_excess[:, :d].copy()   # [P, d] remaining energy
-    el_rows = el[cand]                     # registry-aligned rows, rank order
+    el_rows = el[cand]                     # candidate rows, rank order
     dom_c = dom[cand]
-    chunk_size = max(4 * n, 64)
+    # probes only need the first n admissions, so feasibility mode sweeps
+    # with the smallest exact chunk; the full solve keeps a deeper queue
+    chunk_size = max(n, 16) if feasibility_only else max(4 * n, 64)
     chosen, batches = [], []
     rows, drows, srows = cand, dom_c, el_rows
     while rows.size and len(chosen) < n:
@@ -325,27 +371,31 @@ def _solve_greedy(inp: SelectionInputs, d: int, n: int, eligible: List[int],
         for i in range(npfx):  # ≤ n tiny [d] commits, same arithmetic as
             budgets[dr[i]] -= capped[i] * delta[r[i]]  # the sequential loop
             chosen.append(int(el[r[i]]))
-            batches.append(capped[i])
+            if not feasibility_only:
+                batches.append(capped[i])
         survivors = keep[npfx:]
         rows = np.concatenate([r[npfx:], rows[nc:]])
         drows = np.concatenate([dr[npfx:], drows[nc:]])
         srows = np.concatenate([srows[:nc][survivors], srows[nc:]])
     if len(chosen) < n:
         return None
-    return chosen, np.array(batches)
+    return chosen, (None if feasibility_only else np.array(batches))
 
 
 def find_clients_for_duration(inp: SelectionInputs, d: int, n: int,
                               solver: str = "mip", time_limit: float = 60.0,
-                              cache: Optional[_ProbeCache] = None):
+                              cache: Optional[_ProbeCache] = None,
+                              model: Optional[_WarmMip] = None,
+                              feasibility_only: bool = False):
     if cache is None:
         cache = _ProbeCache(inp)
     eligible = _eligible(inp, d, cache)
     if len(eligible) < n:  # Alg. 1 line 13
         return None
     if solver == "greedy":
-        return _solve_greedy(inp, d, n, eligible, cache)
-    return _solve_mip(inp, d, n, eligible, time_limit, cache)
+        return _solve_greedy(inp, d, n, eligible, cache,
+                             feasibility_only=feasibility_only)
+    return _solve_mip(inp, d, n, eligible, time_limit, cache, model)
 
 
 def select_clients(inp: SelectionInputs, n: int, d_max: int,
@@ -355,14 +405,23 @@ def select_clients(inp: SelectionInputs, n: int, d_max: int,
 
     ``search='binary'`` exploits the monotonicity of feasibility in d
     (paper §4.3: O(log d_max)); ``'linear'`` matches the pseudo-code
-    literally. All probes share one :class:`_ProbeCache`.
+    literally. All probes share one :class:`_ProbeCache`; MIP probes
+    additionally share one :class:`_WarmMip` model (bounds-swap re-solve)
+    and greedy probes run feasibility-only with one full solve at the
+    minimal feasible duration.
     """
     cache = _ProbeCache(inp)
+    model = None
+    if solver == "mip":
+        model = _WarmMip(inp, cache, n)
+        if model.k < n:
+            return None
 
-    def attempt(d):
-        return find_clients_for_duration(inp, d, n, solver, time_limit, cache)
+    def attempt(d, feasibility_only=False):
+        return find_clients_for_duration(
+            inp, d, n, solver, time_limit, cache, model,
+            feasibility_only=feasibility_only and solver == "greedy")
 
-    best = None
     if search == "linear":
         for d in range(1, d_max + 1):
             best = attempt(d)
@@ -370,10 +429,9 @@ def select_clients(inp: SelectionInputs, n: int, d_max: int,
                 return _to_selection(inp, best, d)
         return None
     lo_d, hi_d, found, found_d = 1, d_max, None, None
-    # exponential probe then bisect on feasibility
     while lo_d <= hi_d:
         mid = (lo_d + hi_d) // 2
-        res = attempt(mid)
+        res = attempt(mid, feasibility_only=True)
         if res is not None:
             found, found_d = res, mid
             hi_d = mid - 1
@@ -381,14 +439,15 @@ def select_clients(inp: SelectionInputs, n: int, d_max: int,
             lo_d = mid + 1
     if found is None:
         return None
+    if found[1] is None:  # feasibility-only probe: build the schedule once
+        found = attempt(found_d)
     return _to_selection(inp, found, found_d)
 
 
 def _to_selection(inp: SelectionInputs, result, d: int) -> Selection:
-    rows, batches = result
-    names = [inp.client_order[ci] for ci in rows]
+    chosen, batches = result
     return Selection(
-        clients=names,
+        rows=inp.rows[np.asarray(chosen, dtype=int)],
         expected_duration=d,
-        expected_batches={nm: float(b.sum()) for nm, b in zip(names, batches)},
+        expected_batches=batches.sum(axis=1),
     )

@@ -7,21 +7,25 @@ capacity, and idle windows (no feasible selection) are skipped
 event-style. Energy accounting covers *all* selected clients, including
 stragglers whose work is discarded (paper §4.5).
 
-Scale: per-round client state is structure-of-arrays NumPy (vectors indexed
-by selection position, registry rows gathered once per round), so a
-simulated minute costs a few array ops per power domain rather than
-per-client Python work — 10k-client rounds execute in well under 100 ms
-(see benchmarks/scalability.py).
+Scale architecture: client identity is the **registry row** end to end —
+selections arrive as row arrays, per-round state is structure-of-arrays
+NumPy indexed by selection position, participation is one [C] counter
+array, and the scenario is a chunked float32 :class:`ScenarioStore` whose
+columns are gathered per step for just the selected rows. Client names
+appear exactly once, in ``summary()`` (the reporting boundary) and at the
+trainer's dataset lookup. A simulated minute costs a few array ops per
+power domain rather than per-client Python work — 10k-client rounds
+execute in well under 100 ms (see benchmarks/scalability.py) and 100k
+clients over a simulated day fit in well under 1.5 GB
+(benchmarks/e2e_simulation.py).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.data.traces import ScenarioData
+from repro.data.traces import ScenarioStore
 
 from .power import share_power
 from .strategies import BaseStrategy, EnvView
@@ -29,7 +33,7 @@ from .types import ClientRegistry, RoundResult, Selection
 
 
 class FLSimulation:
-    def __init__(self, registry: ClientRegistry, scenario: ScenarioData,
+    def __init__(self, registry: ClientRegistry, scenario: ScenarioStore,
                  strategy: BaseStrategy, trainer, d_max: int = 60,
                  eval_every: int = 5, seed: int = 0):
         self.registry = registry
@@ -41,10 +45,8 @@ class FLSimulation:
         self.now = 0
         self.round_idx = 0
         self.results: List[RoundResult] = []
-        self.client_order = registry.client_names
-        self.domain_order = scenario.domain_names
-        self._dom_rows = registry.domain_rows(self.domain_order)
-        self.participation: Dict[str, int] = {c: 0 for c in self.client_order}
+        self._dom_rows = registry.domain_rows(scenario.domain_names)
+        self.participation = np.zeros(len(registry), dtype=np.int64)
         self.rng = np.random.default_rng(seed)
 
     # ------------------------------------------------------------------
@@ -54,10 +56,8 @@ class FLSimulation:
             registry=self.registry, now=self.now,
             excess_now=sc.excess_at(self.now),
             spare_now=sc.spare_at(self.now),
-            excess_fc=sc.excess_forecast(self.now, self.d_max),
-            spare_fc=sc.spare_forecast(self.now, self.d_max),
-            client_order=self.client_order,
-            domain_order=self.domain_order,
+            scenario=sc, horizon=self.d_max,
+            dom_rows=self._dom_rows,
         )
 
     # ------------------------------------------------------------------
@@ -66,18 +66,17 @@ class FLSimulation:
 
         All per-client round state (``computed``, ``energy_used``,
         ``done_min``, ``finished_at``) lives in vectors indexed by position
-        in ``sel.clients``; client→registry-row and client→domain maps are
-        gathered once per round, so the per-minute loop does pure array
-        ops (no name lookups). Semantically identical to the dict-of-
-        ``ClientRoundState`` implementation it replaced (see
-        tests/test_vectorized_parity.py).
+        in ``sel.rows``; spec fields and domain rows are gathered once per
+        round, so the per-minute loop does pure array ops (no identity
+        lookups of any kind). Semantically identical to the dict-of-state
+        implementation it replaced (see tests/test_vectorized_parity.py).
         """
         reg = self.registry
         sc = self.scenario
         grid = bool(getattr(sel, "grid", False))
         constrained = self.strategy.needs_energy_constraints and not grid
-        n_sel = len(sel.clients)
-        rows = reg.rows(sel.clients)               # registry row per client
+        rows = np.asarray(sel.rows, dtype=int)     # registry row per client
+        n_sel = rows.size
         dom = self._dom_rows[rows]                 # scenario domain row
         delta = reg.delta_arr[rows]
         capacity = reg.capacity_arr[rows]
@@ -122,7 +121,7 @@ class FLSimulation:
                 step_e = nb * delta[mem]
                 energy_used[mem] += step_e
                 if grid:
-                    ci = sc.carbon_at(t)[pi]
+                    ci = float(sc.carbon_at(t)[pi])
                     # Wmin -> kWh: /60/1000
                     carbon_g += float(step_e.sum()) / 60e3 * ci
                 newly = mem[~done_min[mem] & (computed[mem] >= m_min[mem])]
@@ -132,20 +131,25 @@ class FLSimulation:
                 duration = step + 1
                 break
 
-        finished = sorted((int(finished_at[i]), sel.clients[i])
-                          for i in np.nonzero(done_min)[0])
-        contributors = [c for _, c in finished[: max(self.strategy.n, need_done)]]
-        contrib_set = set(contributors)
-        stragglers = [c for c in sel.clients if c not in contrib_set]
+        done_pos = np.nonzero(done_min)[0]
+        # finish order, ties broken by registry row (matches the old
+        # name-sorted order wherever names sort like rows)
+        finish_order = done_pos[np.lexsort((rows[done_pos],
+                                            finished_at[done_pos]))]
+        limit = max(self.strategy.n, need_done)
+        contrib_idx = finish_order[:limit]
+        straggler_mask = np.ones(n_sel, dtype=bool)
+        straggler_mask[contrib_idx] = False
         total_e = float(energy_used.sum())
         return RoundResult(
             round_idx=self.round_idx, start_step=self.now, duration=duration,
-            participants=list(sel.clients), contributors=contributors,
-            stragglers=stragglers,
+            participants=rows, contributors=rows[contrib_idx],
+            contributor_idx=contrib_idx,
+            stragglers=rows[straggler_mask],
             energy_used=total_e,
             grid_energy=total_e if grid else 0.0,
             carbon_g=carbon_g,
-            batches={c: float(computed[i]) for i, c in enumerate(sel.clients)},
+            batches=computed,
         )
 
     # ------------------------------------------------------------------
@@ -157,23 +161,23 @@ class FLSimulation:
                 break
             env = self._env_view()
             sel = self.strategy.select(env)
-            if sel is None or not sel.clients:
+            if sel is None or not len(sel.rows):
                 self.now += self.strategy.wait_for()  # idle fast-forward
                 continue
             rr = self._execute_round(sel)
             # local training + aggregation for contributors
-            sample_losses = {}
-            if rr.contributors:
+            sample_losses: List[np.ndarray] = []
+            if rr.contributors.size:
                 updates = []
-                for c in rr.contributors:
-                    upd = self.trainer.local_update(c, rr.batches[c])
-                    sample_losses[c] = upd["sample_losses"]
+                for pos in rr.contributor_idx:
+                    upd = self.trainer.local_update(int(rr.participants[pos]),
+                                                    float(rr.batches[pos]))
+                    sample_losses.append(upd["sample_losses"])
                     updates.append(upd)
                 rr.train_loss = float(np.mean(
                     [u["mean_loss"] for u in updates]))
                 self.trainer.aggregate(updates)
-                for c in rr.contributors:
-                    self.participation[c] += 1
+                self.participation[rr.contributors] += 1
             self.strategy.record_round(rr.contributors, rr.participants,
                                        sample_losses)
             if self.eval_every and self.round_idx % self.eval_every == 0:
@@ -194,6 +198,9 @@ class FLSimulation:
 
     # ------------------------------------------------------------------
     def summary(self) -> Dict:
+        """Aggregate run statistics — the reporting boundary where row
+        counters are translated back to client names (schema unchanged
+        across the row-ID refactor)."""
         total_energy = sum(r.energy_used for r in self.results)
         metrics, cum_e = [], 0.0
         for r in self.results:
@@ -215,7 +222,9 @@ class FLSimulation:
             "metric_curve": metrics,
             "mean_round_duration": float(np.mean(durations)) if durations else 0,
             "std_round_duration": float(np.std(durations)) if durations else 0,
-            "participation": dict(self.participation),
+            "participation": {name: int(count) for name, count in
+                              zip(self.registry.client_names,
+                                  self.participation)},
         }
 
     def time_energy_to_metric(self, target: float):

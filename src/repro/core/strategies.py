@@ -9,14 +9,18 @@
                              clients not expected to reach m_min within d_max
 * ``UpperBoundStrategy``   — random selection, no energy/capacity constraints
 
-All strategies see the same environment interface; only FedZero consumes
-the full forecast horizon and solves the MIP.
+All strategies see the same :class:`EnvView`; client identity is registry
+rows everywhere (``Selection.rows``), and forecasts are **pulled lazily**
+through the view: ``spare_fc(rows)`` gathers the candidate rows *before*
+the per-round noise draw, so a strategy that has pre-filtered its
+candidates pays [k, H] — not [C, H] — noise cost, and strategies that
+never consume forecasts (plain Random/Oort) draw none at all.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 
@@ -28,34 +32,34 @@ from .utility import UtilityTracker
 
 @dataclasses.dataclass
 class EnvView:
-    """What a strategy may observe at round start."""
+    """What a strategy may observe at round start.
+
+    ``excess_now``/``spare_now`` are actuals; forecasts come from the
+    lazy ``excess_fc()``/``spare_fc(rows)`` accessors (memoized by the
+    scenario store, so repeated calls within a round are free).
+    ``dom_rows[c]`` maps registry row c to its domain's row in the
+    scenario's ``excess``/``excess_fc`` panels.
+    """
 
     registry: ClientRegistry
     now: int
     excess_now: np.ndarray          # [P] W actual right now
     spare_now: np.ndarray           # [C] fraction of capacity free right now
-    excess_fc: np.ndarray           # [P, H] forecast
-    spare_fc: Optional[np.ndarray]  # [C, H] forecast fraction (None: no load fc)
-    client_order: List[str]
-    domain_order: List[str]
+    scenario: object                # ScenarioStore (forecast source)
+    horizon: int                    # forecast horizon (d_max)
+    dom_rows: np.ndarray            # [C] registry row -> scenario domain row
 
-    def client_row(self, name):
-        row_of = getattr(self, "_row_of", None)
-        if row_of is None:
-            if self.client_order is self.registry.client_names:
-                row_of = self.registry.row_of  # avoid a per-round dictcomp
-            else:
-                row_of = {c: i for i, c in enumerate(self.client_order)}
-            self._row_of = row_of
-        return row_of[name]
+    def excess_fc(self) -> np.ndarray:
+        """[P, H] excess-power forecast."""
+        return self.scenario.excess_forecast(self.now, self.horizon)
 
-    def client_rows(self) -> np.ndarray:
-        """Registry row per entry of ``client_order`` (vectorized gather)."""
-        return self.registry.rows(self.client_order)
-
-    def domain_rows(self) -> np.ndarray:
-        """[C] each client's domain row within ``domain_order``."""
-        return self.registry.domain_rows(self.domain_order)[self.client_rows()]
+    def spare_fc(self, rows: Optional[np.ndarray] = None
+                 ) -> Optional[np.ndarray]:
+        """[C, H] (or [len(rows), H]) spare-fraction forecast; None under
+        the no-load-forecast ablation. Pass candidate rows to gather
+        before the noise draw."""
+        return self.scenario.spare_forecast(self.now, self.horizon,
+                                            rows=rows)
 
 
 class BaseStrategy:
@@ -71,8 +75,7 @@ class BaseStrategy:
         self.over_select = over_select
         self.use_forecast_filter = use_forecast_filter
         self.rng = np.random.default_rng(seed)
-        self.utility = UtilityTracker(
-            {c.name: c.n_samples for c in registry.clients.values()})
+        self.utility = UtilityTracker(registry.n_samples_arr)
 
     # -- hooks -----------------------------------------------------------
     def n_to_select(self):
@@ -82,38 +85,39 @@ class BaseStrategy:
         """Steps to fast-forward when no selection is possible."""
         return 5
 
-    def record_round(self, contributors: List[str], selected: List[str],
-                     sample_losses: Dict[str, np.ndarray]):
-        for c in contributors:
-            self.utility.record(c, sample_losses.get(c, np.array([])))
+    def record_round(self, contributors: np.ndarray, selected: np.ndarray,
+                     sample_losses: List[np.ndarray]):
+        """``contributors``/``selected`` are registry rows;
+        ``sample_losses`` aligns with ``contributors``."""
+        for row, losses in zip(contributors, sample_losses):
+            self.utility.record(int(row), losses)
 
     # -- availability ------------------------------------------------------
-    def _available(self, env: EnvView) -> List[int]:
-        """Clients with access to excess energy + spare capacity right now."""
+    def _available(self, env: EnvView) -> np.ndarray:
+        """Rows with access to excess energy + spare capacity right now."""
         reg = self.registry
-        reg_rows = env.client_rows()
-        dom = env.domain_rows()
-        ok = ((env.excess_now[dom] > 0)
-              & (env.spare_now * reg.capacity_arr[reg_rows] > 0))
-        return np.nonzero(ok)[0].tolist()
+        ok = ((env.excess_now[env.dom_rows] > 0)
+              & (env.spare_now * reg.capacity_arr > 0))
+        return np.nonzero(ok)[0]
 
-    def _forecast_filter(self, env: EnvView, rows: List[int]) -> List[int]:
-        """Drop clients not expected to reach m_min within d_max (fc baselines)."""
-        if not len(rows):
-            return []
-        reg = self.registry
+    def _forecast_filter(self, env: EnvView, rows: np.ndarray) -> np.ndarray:
+        """Drop rows not expected to reach m_min within d_max (fc
+        baselines). Forecast noise is drawn only for ``rows``."""
         rows = np.asarray(rows, dtype=int)
-        reg_rows = env.client_rows()[rows]
-        dom = env.domain_rows()[rows]
-        H = env.excess_fc.shape[1]
-        cap = reg.capacity_arr[reg_rows]
-        if env.spare_fc is None:
+        if not rows.size:
+            return rows
+        reg = self.registry
+        excess_fc = env.excess_fc()
+        H = excess_fc.shape[1]
+        cap = reg.capacity_arr[rows]
+        spare_fc = env.spare_fc(rows)
+        if spare_fc is None:
             spare = np.broadcast_to(cap[:, None], (rows.size, H))
         else:
-            spare = env.spare_fc[rows] * cap[:, None]
-        energy = env.excess_fc[dom] / reg.delta_arr[reg_rows, None]
+            spare = spare_fc * cap[:, None]
+        energy = excess_fc[env.dom_rows[rows]] / reg.delta_arr[rows, None]
         reach = np.minimum(spare, energy).sum(axis=1)
-        return rows[reach >= reg.m_min_arr[reg_rows]].tolist()
+        return rows[reach >= reg.m_min_arr[rows]]
 
     def select(self, env: EnvView) -> Optional[Selection]:
         raise NotImplementedError
@@ -127,10 +131,10 @@ class RandomStrategy(BaseStrategy):
         if self.use_forecast_filter:
             rows = self._forecast_filter(env, rows)
         k = self.n_to_select()
-        if len(rows) < k:
+        if rows.size < k:
             return None
         chosen = self.rng.choice(rows, size=k, replace=False)
-        return Selection(clients=[env.client_order[i] for i in chosen],
+        return Selection(rows=np.asarray(chosen, dtype=int),
                          expected_duration=self.d_max)
 
 
@@ -151,14 +155,13 @@ class OortStrategy(BaseStrategy):
     def _scores(self, env: EnvView, rows: np.ndarray) -> np.ndarray:
         """Utility per candidate row — batched over all candidates."""
         reg = self.registry
-        reg_rows = env.client_rows()[rows]
-        dom = env.domain_rows()[rows]
-        stat = self.utility.sigmas([env.client_order[i] for i in rows])
+        stat = self.utility.sigmas(rows)
         # achievable batches/step right now given energy + capacity
-        rate = np.minimum(env.spare_now[rows] * reg.capacity_arr[reg_rows],
-                          env.excess_now[dom] / reg.delta_arr[reg_rows])
+        rate = np.minimum(env.spare_now[rows] * reg.capacity_arr[rows],
+                          env.excess_now[env.dom_rows[rows]]
+                          / reg.delta_arr[rows])
         with np.errstate(divide="ignore"):
-            est_dur = np.where(rate > 0, reg.m_min_arr[reg_rows]
+            est_dur = np.where(rate > 0, reg.m_min_arr[rows]
                                / np.maximum(rate, 1e-300), np.inf)
         sys_factor = np.where(est_dur > self.pref_duration,
                               (self.pref_duration
@@ -166,15 +169,12 @@ class OortStrategy(BaseStrategy):
                               1.0)
         return np.where(rate > 0, stat * sys_factor, 0.0)
 
-    def _score(self, env: EnvView, ci: int) -> float:
-        return float(self._scores(env, np.array([ci]))[0])
-
     def select(self, env: EnvView) -> Optional[Selection]:
         rows = self._available(env)
         if self.use_forecast_filter:
             rows = self._forecast_filter(env, rows)
         k = self.n_to_select()
-        if len(rows) < k:
+        if rows.size < k:
             return None
         rows = np.asarray(rows, dtype=int)
         n_explore = int(round(self.epsilon * k))
@@ -188,7 +188,7 @@ class OortStrategy(BaseStrategy):
         chosen = [int(x) for x in exploit] + [int(x) for x in explore]
         if len(chosen) < k:
             return None
-        return Selection(clients=[env.client_order[i] for i in chosen],
+        return Selection(rows=np.asarray(chosen, dtype=int),
                          expected_duration=self.d_max)
 
 
@@ -200,9 +200,9 @@ class UpperBoundStrategy(BaseStrategy):
     needs_energy_constraints = False
 
     def select(self, env: EnvView) -> Optional[Selection]:
-        rows = list(range(len(env.client_order)))
+        rows = np.arange(len(self.registry))
         chosen = self.rng.choice(rows, size=self.n, replace=False)
-        return Selection(clients=[env.client_order[i] for i in chosen],
+        return Selection(rows=np.asarray(chosen, dtype=int),
                          expected_duration=self.d_max)
 
 
@@ -223,7 +223,7 @@ class FedZeroStrategy(BaseStrategy):
                  search: str = "binary", exclusion_factor: float = 1.0,
                  fallback: str = "wait", grid_cooldown: int = 10, **kw):
         super().__init__(*a, **kw)
-        self.blocklist = Blocklist(self.registry.client_names, alpha=alpha,
+        self.blocklist = Blocklist(len(self.registry), alpha=alpha,
                                    seed=kw.get("seed", 0) + 7)
         self.solver = solver
         self.search = search
@@ -235,36 +235,40 @@ class FedZeroStrategy(BaseStrategy):
 
     def _grid_fallback(self, env: EnvView) -> Optional[Selection]:
         """Weakened constraints: capacity-only selection on grid energy."""
-        sigma = self.utility.sigmas(env.client_order)
-        cap = self.registry.capacity_arr[env.client_rows()]
-        unblocked = np.array([not self.blocklist.is_blocked(c)
-                              for c in env.client_order])
-        rows = np.nonzero(unblocked & (env.spare_now * cap > 0))[0]
+        sigma = self.utility.sigmas()
+        cap = self.registry.capacity_arr
+        ok = ~self.blocklist.blocked & (env.spare_now * cap > 0)
+        rows = np.nonzero(ok)[0]
         if rows.size < self.n:
             rows = np.nonzero(env.spare_now > 0)[0]
         if rows.size < self.n:
             return None
-        chosen = sorted(rows.tolist(), key=lambda i: -sigma[i])[: self.n]
-        return Selection(clients=[env.client_order[i] for i in chosen],
-                         expected_duration=self.d_max, grid=True)
+        chosen = rows[np.lexsort((rows, -sigma[rows]))][: self.n]
+        return Selection(rows=chosen, expected_duration=self.d_max, grid=True)
 
     def select(self, env: EnvView) -> Optional[Selection]:
         self.blocklist.start_round()
-        sigma = self.utility.sigmas(env.client_order)
-        for cname in self.blocklist.blocked:  # typically ≪ C entries
-            sigma[env.client_row(cname)] = 0.0  # §4.4: blocked get σ_c = 0
-        cap = self.registry.capacity_arr[env.client_rows()]
-        if env.spare_fc is not None:
-            m_spare = env.spare_fc * cap[:, None]
-        else:
-            m_spare = np.ones((len(env.client_order),
-                               env.excess_fc.shape[1])) * cap[:, None]
-        inp = SelectionInputs(
-            registry=self.registry, m_spare=m_spare, r_excess=env.excess_fc,
-            sigma=sigma, client_order=env.client_order,
-            domain_order=env.domain_order)
-        sel = select_clients(inp, self.n, self.d_max, solver=self.solver,
-                             search=self.search)
+        sigma = self.utility.sigmas()
+        sigma[self.blocklist.blocked] = 0.0  # §4.4: blocked get σ_c = 0
+        excess_fc = env.excess_fc()
+        # cheap pre-filter (σ > 0, domain has excess in the window) so the
+        # spare-forecast noise draw below is [k, H] for eligible rows only
+        dom_ok = excess_fc.sum(axis=1) > 0
+        cand = np.nonzero((sigma > 0) & dom_ok[env.dom_rows])[0]
+        sel = None
+        if cand.size >= self.n:
+            cap = self.registry.capacity_arr[cand]
+            spare_fc = env.spare_fc(cand)
+            if spare_fc is not None:
+                m_spare = spare_fc * cap[:, None]
+            else:
+                m_spare = np.broadcast_to(
+                    cap[:, None], (cand.size, excess_fc.shape[1])).copy()
+            inp = SelectionInputs(
+                registry=self.registry, m_spare=m_spare, r_excess=excess_fc,
+                sigma=sigma[cand], rows=cand, dom=env.dom_rows[cand])
+            sel = select_clients(inp, self.n, self.d_max, solver=self.solver,
+                                 search=self.search)
         if sel is not None:
             self._rounds_since_grid += 1
             return sel
@@ -278,9 +282,9 @@ class FedZeroStrategy(BaseStrategy):
 
     def record_round(self, contributors, selected, sample_losses):
         super().record_round(contributors, selected, sample_losses)
-        blocked = [c for c in contributors
-                   if self.rng.random() < self.exclusion_factor]
-        self.blocklist.record_participation(blocked)
+        contributors = np.asarray(contributors, dtype=int)
+        enter = self.rng.random(contributors.size) < self.exclusion_factor
+        self.blocklist.record_participation(contributors[enter])
 
 
 def make_strategy(name: str, registry: ClientRegistry, **kw) -> BaseStrategy:

@@ -8,10 +8,15 @@
   the object of study. Calibrated to show diminishing returns per client
   (re-selecting the same clients helps less — the mechanism behind the
   paper's fairness/convergence coupling).
+
+Both take **registry rows** in ``local_update`` (row-ID-first identity).
+The JaxTrainer maps row → dataset shard through a positional name list —
+the dataset is the one place client names legitimately live — while the
+ProxyTrainer is pure flat arrays.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -27,9 +32,14 @@ class JaxTrainer:
                  batch_size: int = 10, prox_mu: float = 0.1,
                  momentum: float = 0.0, weight_decay: float = 0.0,
                  seed: int = 0, max_steps_per_round: int = 50,
-                 eval_batch: int = 512):
+                 eval_batch: int = 512,
+                 client_names: Optional[List[str]] = None):
         self.model = model
         self.data = data
+        # row -> dataset shard key; defaults to dataset insertion order,
+        # which builders align with the registry's row order
+        self._names = list(client_names if client_names is not None
+                           else data.client_data)
         self.batch_size = batch_size
         self.max_steps = max_steps_per_round
         self.eval_batch = eval_batch
@@ -64,7 +74,8 @@ class JaxTrainer:
 
         self._sample_losses = sample_losses_fn
 
-    def local_update(self, client: str, n_batches: float) -> Dict:
+    def local_update(self, row: int, n_batches: float) -> Dict:
+        client = self._names[row]
         steps = int(min(max(1, round(n_batches)), self.max_steps))
         params = self.params
         opt_state = self.opt.init(params)
@@ -78,7 +89,7 @@ class JaxTrainer:
         probe = self.data.sample_batch(client, 4 * self.batch_size, self.rng)
         probe = {k: jnp.asarray(v) for k, v in probe.items()}
         sample_losses = np.asarray(self._sample_losses(params, probe))
-        return {"client": client, "params": params,
+        return {"row": row, "params": params,
                 "weight": float(steps * self.batch_size),
                 "sample_losses": sample_losses,
                 "mean_loss": float(np.mean(losses))}
@@ -110,27 +121,25 @@ class ProxyTrainer:
     that over-select the same energy-rich clients converge slower — the
     effect the paper measures. Per-sample losses fed back to Oort/FedZero
     utility are proportional to the remaining loss with client-specific
-    offsets."""
+    offsets. State is flat arrays indexed by registry row."""
 
-    def __init__(self, client_names: List[str], n_samples: Dict[str, int],
-                 acc_max: float = 0.9, k: float = 0.003, seed: int = 0):
+    def __init__(self, n_clients: int, acc_max: float = 0.9,
+                 k: float = 0.003, seed: int = 0):
         self.acc_max = acc_max
         self.k = k
         self.progress = 0.0
-        self.counts = {c: 0 for c in client_names}
-        self.n_samples = n_samples
+        self.counts = np.zeros(n_clients, dtype=np.int64)
         rng = np.random.default_rng(seed)
-        self.client_hardness = {c: float(rng.uniform(0.7, 1.3))
-                                for c in client_names}
+        self.client_hardness = rng.uniform(0.7, 1.3, n_clients)
 
-    def local_update(self, client: str, n_batches: float) -> Dict:
-        self.counts[client] += 1
-        novelty = 1.0 / np.sqrt(self.counts[client])
+    def local_update(self, row: int, n_batches: float) -> Dict:
+        self.counts[row] += 1
+        novelty = 1.0 / np.sqrt(self.counts[row])
         gain = np.sqrt(max(n_batches, 0.0)) * novelty
         acc = self.evaluate()
         loss_level = max(1e-3, -np.log(max(1e-6, acc / self.acc_max + 1e-3)))
-        losses = np.full(16, loss_level * self.client_hardness[client])
-        return {"client": client, "params": None, "weight": n_batches,
+        losses = np.full(16, loss_level * self.client_hardness[row])
+        return {"row": row, "params": None, "weight": n_batches,
                 "sample_losses": losses,
                 "mean_loss": float(losses.mean()), "_gain": gain}
 

@@ -1,8 +1,18 @@
-"""Core data types for the FedZero scheduling system (paper Table 1)."""
+"""Core data types for the FedZero scheduling system (paper Table 1).
+
+Identity convention (row-ID-first): the **registry row index** is the
+sole identity currency on the scheduling path. Client names exist only at
+the I/O boundary — registry construction and ``FLSimulation.summary()``
+— where :class:`ClientRegistry` owns the canonical name↔row maps.
+Everything downstream (:class:`Selection`, :class:`RoundResult`, the
+blocklist, the utility tracker, the solvers and the round executor)
+carries integer row arrays and indexes the registry's structure-of-arrays
+mirrors; no name-keyed dict is ever touched per round.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -39,51 +49,56 @@ class PowerDomain:
 
 
 @dataclasses.dataclass
-class ClientRoundState:
-    """Mutable per-round runtime state of a participating client."""
-
-    spec: ClientSpec
-    computed: float = 0.0         # m_c^comp batches done this round
-    energy_used: float = 0.0      # Wmin this round
-    done_min: bool = False        # reached m_min (notified server)
-    finished_at: Optional[int] = None  # timestep index when m_min reached
-
-
-@dataclasses.dataclass
 class Selection:
-    """Output of a client-selection strategy for one round."""
+    """Output of a client-selection strategy for one round.
 
-    clients: List[str]
+    ``rows`` are registry row indices in selection order;
+    ``expected_batches`` (if the solver planned them) aligns with
+    ``rows``.
+    """
+
+    rows: np.ndarray
     expected_duration: int                    # d (timesteps)
-    expected_batches: Dict[str, float] = dataclasses.field(default_factory=dict)
+    expected_batches: Optional[np.ndarray] = None
     grid: bool = False   # grid-fallback round (carbon-accounted, not zero)
 
 
 @dataclasses.dataclass
 class RoundResult:
+    """Per-round outcome; all client identity is registry row arrays.
+
+    ``contributor_idx`` gives each contributor's position within
+    ``participants`` (and therefore within ``batches``), so callers never
+    need a reverse lookup.
+    """
+
     round_idx: int
     start_step: int
     duration: int                  # actual timesteps used
-    participants: List[str]        # selected
-    contributors: List[str]        # reached m_min and were aggregated
-    stragglers: List[str]          # selected but discarded
+    participants: np.ndarray       # selected registry rows (selection order)
+    contributors: np.ndarray       # rows that reached m_min, finish order
+    contributor_idx: np.ndarray    # positions of contributors in participants
+    stragglers: np.ndarray         # selected rows whose work was discarded
     energy_used: float             # Wmin, all selected clients (incl. discarded)
     grid_energy: float = 0.0       # Wmin drawn from the grid (fallback rounds)
     carbon_g: float = 0.0          # gCO2 emitted (fallback rounds only)
-    batches: Dict[str, float] = dataclasses.field(default_factory=dict)
+    batches: Optional[np.ndarray] = None   # [len(participants)] batches done
     train_loss: float = float("nan")
     eval_metric: float = float("nan")
 
 
 class ClientRegistry:
-    """Holds the static client/domain structure and derived lookups.
+    """Owns the canonical name↔row maps and the SoA spec mirrors.
 
-    Besides the name-keyed dicts, the registry exposes structure-of-arrays
-    mirrors of the per-client spec fields (``delta_arr``, ``capacity_arr``,
-    ``m_min_arr``, ``m_max_arr``), aligned with ``client_names``. The
-    simulation step loop and the selection solvers index these with integer
-    row arrays instead of doing per-client attribute/dict lookups, which is
-    what makes 10k+-client rounds tractable.
+    Rows are assigned by construction order and never change; the
+    scheduling stack identifies clients exclusively by these rows. The
+    structure-of-arrays mirrors (``delta_arr``, ``capacity_arr``,
+    ``m_min_arr``, ``m_max_arr``, ``n_samples_arr``) align with
+    ``client_names``; the simulation step loop and the selection solvers
+    index them with integer row arrays instead of doing per-client
+    attribute/dict lookups, which is what makes 100k-client rounds
+    tractable. Name-based accessors (``rows``, ``row_of``, ``name_of``)
+    are the I/O boundary — construction and reporting only.
     """
 
     def __init__(self, clients: List[ClientSpec], domains: List[PowerDomain]):
@@ -110,6 +125,7 @@ class ClientRegistry:
                 np.array([s.m_max_capacity for s in specs], dtype=float),
                 np.array([s.m_min_batches for s in specs], dtype=float),
                 np.array([s.m_max_batches for s in specs], dtype=float),
+                np.array([s.n_samples for s in specs], dtype=float),
             )
         return self._soa
 
@@ -129,15 +145,26 @@ class ClientRegistry:
     def m_max_arr(self) -> np.ndarray:
         return self._arrays()[3]
 
+    @property
+    def n_samples_arr(self) -> np.ndarray:
+        return self._arrays()[4]
+
     def refresh_arrays(self):
         """Invalidate the cached SoA mirrors after mutating ClientSpecs."""
         self._soa = None
 
-    def rows(self, names: List[str]) -> np.ndarray:
-        """Registry row index per name (vectorized gather key)."""
+    # -- name↔row boundary (construction / reporting only) ---------------
+    def rows(self, names: Sequence[str]) -> np.ndarray:
+        """Registry row index per name (I/O boundary gather key)."""
         if names is self.client_names:
             return np.arange(len(self.client_names))
         return np.array([self.row_of[n] for n in names], dtype=int)
+
+    def name_of(self, row: int) -> str:
+        return self.client_names[int(row)]
+
+    def names_of(self, rows: Sequence[int]) -> List[str]:
+        return [self.client_names[int(r)] for r in rows]
 
     def domain_rows(self, domain_order: List[str]) -> np.ndarray:
         """[C] index of each client's domain within ``domain_order``.

@@ -6,84 +6,45 @@
 The per-sample losses come from the client's most recent participation.
 Blocked clients (fairness module) override σ_c = 0 at selection time.
 
-Implementation: structure-of-arrays mirroring ``ClientRegistry`` —
+Implementation: flat structure-of-arrays indexed by registry row —
 participation counts, squared-loss means (NaN = never reported) and
-dataset sizes live in flat arrays indexed by a name→row map, so
-``sigmas`` over a 100k-client fleet is three gathers and a ``where``
-instead of a per-client Python loop.
+dataset sizes — so ``sigmas`` over a 100k-client fleet is three gathers
+and a ``where``. No names enter this module; callers pass registry rows.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Union
+from typing import Optional
 
 import numpy as np
 
 
 class UtilityTracker:
-    def __init__(self, n_samples: Dict[str, int]):
-        self.names = list(n_samples)
-        self.row_of = {c: i for i, c in enumerate(self.names)}
-        self.n_samples_arr = np.array([n_samples[c] for c in self.names],
-                                      dtype=float)
-        self.sq_loss_mean_arr = np.full(len(self.names), np.nan)
-        self.participation_arr = np.zeros(len(self.names), dtype=np.int64)
-        # order → row-array cache: strategies pass the same client_order
-        # list every round, so resolve the gather indices once per object
-        self._order_cache: Dict[int, tuple] = {}
+    def __init__(self, n_samples: np.ndarray):
+        self.n_samples_arr = np.asarray(n_samples, dtype=float)
+        n = len(self.n_samples_arr)
+        self.sq_loss_mean_arr = np.full(n, np.nan)
+        self.participation_arr = np.zeros(n, dtype=np.int64)
 
-    def record(self, client: str, sample_losses: np.ndarray):
+    def record(self, row: int, sample_losses: np.ndarray):
         """Store the loss statistics reported after a participation."""
-        row = self.row_of[client]
         self.participation_arr[row] += 1
         if len(sample_losses):
             self.sq_loss_mean_arr[row] = float(
                 np.mean(np.square(sample_losses)))
 
-    def _rows(self, order) -> Union[slice, np.ndarray]:
-        if order is self.names:
-            return slice(None)
-        hit = self._order_cache.get(id(order))
-        if hit is not None and hit[0] is order:
-            return hit[1]
-        if isinstance(order, list) and order == self.names:
-            rows: Union[slice, np.ndarray] = slice(None)
-        else:
-            rows = np.fromiter((self.row_of[c] for c in order),
-                               dtype=np.int64, count=len(order))
-        if len(self._order_cache) > 32:  # bound id-keyed entries
-            self._order_cache.clear()
-        self._order_cache[id(order)] = (order, rows)
-        return rows
-
-    def sigma(self, client: str) -> float:
-        row = self.row_of[client]
+    def sigma(self, row: int) -> float:
         sq = self.sq_loss_mean_arr[row]
         if self.participation_arr[row] < 1 or np.isnan(sq):
             return 1.0
         return float(self.n_samples_arr[row] * np.sqrt(sq))
 
-    def sigmas(self, order: Iterable[str]) -> np.ndarray:
-        """[len(order)] σ per client — vectorized, returns a fresh array."""
-        rows = self._rows(order)
-        sq = self.sq_loss_mean_arr[rows]
-        seen = (self.participation_arr[rows] >= 1) & ~np.isnan(sq)
+    def sigmas(self, rows: Optional[np.ndarray] = None) -> np.ndarray:
+        """σ per registry row (all rows when ``rows`` is None) —
+        vectorized, returns a fresh array."""
+        idx = slice(None) if rows is None else rows
+        sq = self.sq_loss_mean_arr[idx]
+        seen = (self.participation_arr[idx] >= 1) & ~np.isnan(sq)
         return np.where(seen,
-                        self.n_samples_arr[rows]
+                        self.n_samples_arr[idx]
                         * np.sqrt(np.where(np.isnan(sq), 0.0, sq)),
                         1.0)
-
-    # -- dict-style views kept for introspection/back-compat --------------
-    @property
-    def n_samples(self) -> Dict[str, int]:
-        return {c: int(self.n_samples_arr[i]) for i, c in enumerate(self.names)}
-
-    @property
-    def participation(self) -> Dict[str, int]:
-        return {c: int(self.participation_arr[i])
-                for i, c in enumerate(self.names)}
-
-    @property
-    def sq_loss_mean(self) -> Dict[str, float]:
-        return {c: (None if np.isnan(self.sq_loss_mean_arr[i])
-                    else float(self.sq_loss_mean_arr[i]))
-                for i, c in enumerate(self.names)}

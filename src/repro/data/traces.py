@@ -1,4 +1,4 @@
-"""Synthetic energy/load traces statistically matched to the paper's setup.
+"""Chunked float32 scenario store + synthetic trace synthesis.
 
 The paper uses Solcast solar (+forecast) data for two scenarios — ten
 globally distributed cities and ten co-located German cities — plus 100
@@ -15,15 +15,30 @@ seeded synthetic equivalents:
   lead time (≈5 % nowcast → ≈25 % day-ahead), matching the "realistic
   error" setting; `error="none"` gives the paper's *w/o error* ablation.
 
-Everything is generated in batched NumPy draws — there are no per-row
-Python RNG constructions anywhere on the 10k+-client path.
+Storage architecture (:class:`ScenarioStore`)
+---------------------------------------------
+Traces are float32 **columns served in time chunks**, not monolithic
+float64 slabs. Each field (``excess`` [P, T], ``util`` [C, T], ``carbon``
+[P, T]) is either backed by a caller-provided array (drop-in real traces)
+or synthesized lazily one chunk at a time from counter-seeded generators:
+chunk *i* of a field is a pure function of ``(seed, field, i)`` plus a
+tiny per-chunk boundary state (AR(1) cloud state, load-regime state) that
+is computed once, pinned, and lets evicted chunks be regenerated
+bit-identically. Client-heavy ``util`` chunks live in an element-budgeted
+LRU, so a 7-day 100k-client scenario costs a few hundred MB of resident
+chunks instead of a ~2.8 GB eager slab; ``excess``/``carbon`` are tiny
+([P, T]) and stay resident. ``excess_at``/``spare_at``/``*_forecast``
+serve views/gathers straight from the chunk cache, and ``spare_at``/
+``spare_forecast`` accept a registry-row array to gather only a client
+subset — identity is integer rows end to end; client names never enter
+this module.
 
-Drop-in replacement: any real trace with the same array shapes can be
-loaded into ``ScenarioData`` directly.
+Everything is generated in batched NumPy draws — there are no per-row
+Python RNG constructions anywhere on the 100k-client path.
 """
 from __future__ import annotations
 
-import dataclasses
+import math
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
@@ -45,17 +60,29 @@ CO_LOCATED_CITIES = [  # ten largest German cities — aligned diurnal phase
     ("essen", 1, 0.48),
 ]
 
-# stable ids for counter-based forecast seeding (``hash(str)`` is salted
-# per process and would make forecasts irreproducible across runs)
+# stable ids for counter-based seeding (``hash(str)`` is salted per
+# process and would make draws irreproducible across runs)
 _KIND_IDS = {"excess": 1, "load": 2}
+_FIELD_SALTS = {"excess": 101, "util": 102, "carbon": 103, "util_init": 104}
 
-# memoized forecast slabs kept per ScenarioData instance
+# forecast memo: bounded both by entry count and by total elements so a
+# 100k-client fleet cannot pin hundreds of MB of [C, H] slabs
 _FORECAST_CACHE_SIZE = 16
+_FORECAST_CACHE_ELEMS = 1 << 25
+
+# default synthesis chunking: client-heavy util chunks sized so one chunk
+# is ~64 MB of float32 at any fleet size; [P, T] fields use day chunks
+_UTIL_CHUNK_ELEMS = 1 << 24
+_DAY_STEPS = 24 * 60
 
 
-def solar_curve(t_min: np.ndarray, utc_offset: float, peak_w: float,
+def solar_curve(t_min: np.ndarray, utc_offset, peak_w: float,
                 cloud: np.ndarray) -> np.ndarray:
-    """Clear-sky diurnal curve in W at local solar time, × cloud factor."""
+    """Clear-sky diurnal curve in W at local solar time, × cloud factor.
+
+    Broadcasts: ``t_min`` [n] with ``utc_offset``/``cloud`` of shape
+    [P, 1] / [P, n] yields the whole [P, n] panel in one call.
+    """
     local_h = (t_min / 60.0 + utc_offset) % 24.0
     sunrise, sunset = 6.0, 20.0
     x = (local_h - sunrise) / (sunset - sunrise)
@@ -63,81 +90,274 @@ def solar_curve(t_min: np.ndarray, utc_offset: float, peak_w: float,
     return peak_w * clear * cloud
 
 
-def _ar1_cloud(rng, n, base_cloudiness, rho=0.97, rows: int = 1):
-    """AR(1) attenuation in (0, 1]: 1 = clear sky. Batched over ``rows``
-    independent series (one [rows, n] draw, recurrence via ``lfilter``)."""
-    eps = rng.normal(0, 1, (rows, n))
-    eps[:, 0] = 0.0  # z starts at 0 like the scalar recurrence
-    z = lfilter([np.sqrt(1 - rho ** 2)], [1.0, -rho], eps, axis=1)
-    base = np.asarray(base_cloudiness, dtype=float).reshape(-1, 1)
-    atten = 1.0 - base * (1 / (1 + np.exp(-z)))  # in [1-c, 1]
-    return np.clip(atten, 0.05, 1.0)
+class ScenarioStore:
+    """Chunked float32 store of actual + forecastable scenario series.
 
+    Construct either from explicit arrays (``excess``/``util``/``carbon``
+    — drop-in real traces, any dtype; stored as float32 copies) or from a
+    synthesis spec via :func:`make_scenario` (lazy chunked generation).
 
-def _load_traces(rng, n_clients, n_steps):
-    """Regime-switching GPU utilisation in [0, 1] (Alibaba-like), batched:
-    one [C, T] draw for regime switches + noise, per-segment busy/idle
-    levels gathered from a [C, S] level table."""
-    switch = rng.random((n_clients, n_steps)) < (1 / 180.0)  # ~ every 3 h
-    switch[:, 0] = False
-    seg = np.cumsum(switch, axis=1)            # [C, T] segment index per step
-    n_seg = int(seg[:, -1].max()) + 1 if n_steps else 1
-    busy0 = rng.random(n_clients) < 0.5        # initial regime per client
-    level_u = rng.random((n_clients, n_seg))   # one uniform per segment
-    busy = busy0[:, None] ^ (np.arange(n_seg)[None, :] % 2 == 1)
-    levels = np.where(busy, 0.5 + 0.45 * level_u, 0.3 * level_u)
-    level_t = np.take_along_axis(levels, seg, axis=1)
-    util = level_t + rng.normal(0, 0.05, (n_clients, n_steps))
-    return np.clip(util, 0.0, 1.0)
-
-
-@dataclasses.dataclass
-class ScenarioData:
-    """Actual + forecastable time series for one experiment scenario.
+    Field access
+    ------------
+    * ``excess_at(step)`` → [P] view; ``spare_at(step, rows=None)`` → [C]
+      (or [len(rows)] gather) fraction of capacity free;
+    * ``excess_forecast(now, h)`` → [P, h]; ``spare_forecast(now, h,
+      rows=None)`` → [C or len(rows), h] — pass the currently-eligible
+      registry rows so the per-round noise draw is [k, h] instead of
+      [C, h];
+    * the ``excess``/``util``/``carbon`` properties materialize the full
+      [R, T] float32 array once and pin it (chunks become views into it),
+      so in-place mutation — e.g. the night-time ablations in the tests —
+      behaves exactly like the old eager slabs. Avoid them on 100k-client
+      fleets; the chunked accessors above are the hot path.
 
     Forecast contract (batched + memoized)
     --------------------------------------
     ``excess_forecast``/``spare_forecast`` return ``actual × noise`` slabs
-    of shape ``[P, horizon]`` / ``[C, horizon]`` where the multiplicative
-    log-normal error is drawn in **one batched RNG call** per
-    ``(kind, now)``: the generator is seeded counter-style from
-    ``(seed, kind, now)`` so any ``(now, horizon)`` request is reproducible
-    in isolation (no dependence on call order), and the rows of a slab are
-    independent error streams. Results are memoized per
-    ``(kind, now, horizon)`` in a small LRU, so repeated ``EnvView`` builds
-    within a round are free; the cached arrays are returned **read-only**
-    (the identical object every time) — copy before mutating.
-
-    Drop-in real traces: load arrays with the same shapes into this class
-    directly; if you mutate ``excess``/``util`` after construction (e.g.
-    the night-time ablations in the tests do), call
-    ``clear_forecast_cache()`` so memoized forecasts don't go stale —
-    construction-time mutation needs no care since the cache starts empty.
+    where the multiplicative log-normal error is drawn in **one batched
+    RNG call** per ``(kind, now, rows)``: the generator is counter-seeded
+    from ``(seed, kind, now)`` so any request is reproducible in isolation
+    (no dependence on call order), and the rows of a slab are independent
+    error streams. Results are memoized in a small element-budgeted LRU,
+    so repeated ``EnvView`` builds within a round are free; cached arrays
+    are returned **read-only** (the identical object every time) — copy
+    before mutating. If you mutate ``excess``/``util`` after construction,
+    call ``clear_forecast_cache()`` so memoized forecasts don't go stale.
     """
 
-    excess: np.ndarray          # [P, T] W of excess power, 1-min steps
-    util: np.ndarray            # [C, T] fraction of client capacity in use
-    domain_names: List[str]
-    seed: int = 0
-    error: str = "realistic"    # realistic | none | no_load
-    unlimited_domains: tuple = ()  # domain names with unlimited energy
-    carbon: Optional[np.ndarray] = None  # [P, T] grid gCO2/kWh (fallback mode)
+    def __init__(self, excess: Optional[np.ndarray] = None,
+                 util: Optional[np.ndarray] = None,
+                 domain_names: Optional[List[str]] = None, seed: int = 0,
+                 error: str = "realistic", unlimited_domains: tuple = (),
+                 carbon: Optional[np.ndarray] = None, *,
+                 synth: Optional[dict] = None,
+                 util_chunk_elems: int = _UTIL_CHUNK_ELEMS):
+        self.domain_names = list(domain_names or [])
+        self.seed = seed
+        self.error = error                # realistic | none | no_load
+        self.unlimited_domains = tuple(unlimited_domains)
+        self._synth = synth
+        self._forecast_cache: "OrderedDict[Tuple, Tuple]" = OrderedDict()
 
-    def __post_init__(self):
-        self._forecast_cache: "OrderedDict[Tuple, np.ndarray]" = OrderedDict()
-        if self.unlimited_domains:
-            # never clobber the caller's array (regression: the input trace
-            # must survive scenario construction unchanged)
-            self.excess = self.excess.copy()
+        if synth is not None:
+            self._n_clients = int(synth["n_clients"])
+            self._n_steps = int(synth["n_steps"])
+            self._has_carbon = True
+        else:
+            if excess is None or util is None:
+                raise ValueError("provide excess+util arrays or a synth spec")
+            self._n_clients = util.shape[0]
+            self._n_steps = excess.shape[1]
+            self._has_carbon = carbon is not None
+
+        P = len(self.domain_names)
+        T = self._n_steps
+        cs_pt = min(T, _DAY_STEPS) or 1
+        cs_util = max(64, min(T, _DAY_STEPS,
+                              util_chunk_elems // max(self._n_clients, 1))) \
+            if T else 1
+        self._cs = {"excess": cs_pt, "util": cs_util, "carbon": cs_pt}
+        self._cache: Dict[str, OrderedDict] = {
+            f: OrderedDict() for f in self._cs}
+        self._elems = {f: 0 for f in self._cs}
+        # only client-heavy synthesized util chunks are eviction-managed
+        self._budget = {"excess": 0, "carbon": 0,
+                        "util": 4 * self._n_clients * cs_util}
+        self._states: Dict[str, list] = {}
+
+        def _adopt(field, arr):
+            a = np.array(arr, dtype=np.float32)  # private float32 copy
+            if a.shape[1] != T:
+                raise ValueError(f"{field} has {a.shape[1]} steps, "
+                                 f"expected {T}")
+            return a
+
+        if synth is not None:
+            self._backing = {f: None for f in self._cs}
+            z0 = np.zeros(P)
+            busy0, lvl0 = self._util_init_state()
+            self._states = {"excess": [z0], "util": [(busy0, lvl0)],
+                            "carbon": [None]}
+        else:
+            self._backing = {
+                "excess": _adopt("excess", excess),
+                "util": _adopt("util", util),
+                "carbon": _adopt("carbon", carbon) if self._has_carbon
+                else None,
+            }
             for name in self.unlimited_domains:
                 i = self.domain_names.index(name)
-                self.excess[i, :] = 1e9
+                self._backing["excess"][i, :] = 1e9
+
+    # ---- shape ---------------------------------------------------------
+    @property
+    def n_steps(self) -> int:
+        return self._n_steps
 
     @property
-    def n_steps(self):
-        return self.excess.shape[1]
+    def n_clients(self) -> int:
+        return self._n_clients
 
-    # ---- forecasts ----------------------------------------------------
+    # ---- chunk machinery -----------------------------------------------
+    def _chunk(self, field: str, i: int) -> np.ndarray:
+        cache = self._cache[field]
+        hit = cache.get(i)
+        if hit is not None:
+            cache.move_to_end(i)
+            return hit
+        backing = self._backing[field]
+        cs = self._cs[field]
+        if backing is not None:
+            view = backing[:, i * cs:(i + 1) * cs]
+            cache[i] = view  # views are free: no budget accounting
+            return view
+        gen = {"excess": self._excess_chunk, "util": self._util_chunk,
+               "carbon": self._carbon_chunk}[field]
+        states = self._states[field]
+        while len(states) <= i:  # walk boundary states forward
+            j = len(states) - 1
+            data, nxt = gen(j, states[j])
+            states.append(nxt)
+            self._put(field, j, data)
+        data, nxt = gen(i, states[i])
+        if len(states) == i + 1:
+            states.append(nxt)
+        self._put(field, i, data)
+        return data
+
+    def _put(self, field: str, i: int, data: np.ndarray):
+        data.flags.writeable = False  # shared via cache: copy to mutate
+        cache = self._cache[field]
+        cache[i] = data
+        self._elems[field] += data.size
+        budget = self._budget[field]
+        while budget and self._elems[field] > budget and len(cache) > 2:
+            _, old = cache.popitem(last=False)
+            self._elems[field] -= old.size
+
+    def _window(self, field: str, start: int, stop: int,
+                rows: Optional[np.ndarray] = None) -> np.ndarray:
+        """[R, stop-start] assembled from ≤ a few chunks; with ``rows``,
+        gathers just those rows from each chunk (O(len(rows)·width))."""
+        cs = self._cs[field]
+        parts = []
+        for i in range(start // cs, (stop - 1) // cs + 1):
+            c0 = i * cs
+            lo, hi = max(start, c0) - c0, min(stop, c0 + cs) - c0
+            ch = self._chunk(field, i)
+            parts.append(ch[rows, lo:hi] if rows is not None
+                         else ch[:, lo:hi])
+        return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=1)
+
+    def _materialize(self, field: str) -> np.ndarray:
+        """Assemble the full [R, T] array once, pin it, and redirect the
+        chunk cache to views of it so in-place mutation stays visible."""
+        backing = self._backing[field]
+        if backing is None:
+            cs = self._cs[field]
+            n_chunks = max(1, math.ceil(self._n_steps / cs))
+            backing = np.concatenate(
+                [self._chunk(field, i) for i in range(n_chunks)], axis=1)
+            self._backing[field] = backing
+            self._cache[field].clear()
+            self._elems[field] = 0
+            self._budget[field] = 0
+        return backing
+
+    # eager full-array views — I/O/test boundary, not the round hot path
+    @property
+    def excess(self) -> np.ndarray:
+        return self._materialize("excess")
+
+    @property
+    def util(self) -> np.ndarray:
+        return self._materialize("util")
+
+    @property
+    def carbon(self) -> Optional[np.ndarray]:
+        return self._materialize("carbon") if self._has_carbon else None
+
+    # ---- chunk generators (pure in (seed, field, chunk, state)) --------
+    def _rng(self, salt: int, i: int) -> np.random.Generator:
+        return np.random.default_rng((self.seed & 0xFFFFFFFF, salt, i))
+
+    def _excess_chunk(self, i: int, z_state: np.ndarray):
+        """Solar excess [P, n]: diurnal curve × AR(1) cloud attenuation,
+        held in 5-minute blocks like the Solcast data. ``z_state`` is the
+        AR(1) latent at the chunk boundary."""
+        sp = self._synth
+        cities, peak_w, rho = sp["cities"], sp["peak_w"], 0.97
+        P = len(cities)
+        c0 = i * self._cs["excess"]
+        n = min(self._cs["excess"], self._n_steps - c0)
+        n5 = -(-n // 5)
+        eps = self._rng(_FIELD_SALTS["excess"], i).standard_normal((P, n5))
+        if i == 0:
+            eps[:, 0] = 0.0  # z starts at the boundary state exactly
+        zi = (rho * z_state)[:, None]
+        z, _ = lfilter([np.sqrt(1 - rho ** 2)], [1.0, -rho], eps,
+                       axis=1, zi=zi)
+        base = np.array([c[2] for c in cities])[:, None]
+        atten = np.clip(1.0 - base * (1 / (1 + np.exp(-z))), 0.05, 1.0)
+        t5 = c0 + 5.0 * np.arange(n5)
+        offsets = np.array([c[1] for c in cities], dtype=float)[:, None]
+        ex5 = solar_curve(t5, offsets, peak_w, atten)
+        ex = np.repeat(ex5, 5, axis=1)[:, :n].astype(np.float32)
+        for name in self.unlimited_domains:
+            ex[self.domain_names.index(name), :] = 1e9
+        return ex, z[:, -1]
+
+    def _util_init_state(self):
+        rng = self._rng(_FIELD_SALTS["util_init"], 0)
+        busy = rng.random(self._n_clients) < 0.5
+        u = rng.random(self._n_clients, dtype=np.float32)
+        level = np.where(busy, 0.5 + 0.45 * u, 0.3 * u).astype(np.float32)
+        return busy, level
+
+    def _util_chunk(self, i: int, state):
+        """Regime-switching GPU utilisation in [0, 1] (Alibaba-like),
+        float32 throughout: per-chunk switch/level/noise draws, with the
+        (busy regime, current level) per client carried across chunks."""
+        busy, level = state
+        C = self._n_clients
+        c0 = i * self._cs["util"]
+        n = min(self._cs["util"], self._n_steps - c0)
+        rng = self._rng(_FIELD_SALTS["util"], i)
+        switch = rng.random((C, n), dtype=np.float32) < (1 / 180.0)
+        if i == 0:
+            switch[:, 0] = False  # step 0 stays in the initial regime
+        seg = np.cumsum(switch, axis=1, dtype=np.int32)
+        n_seg = int(seg[:, -1].max()) + 1 if n else 1
+        u = rng.random((C, n_seg), dtype=np.float32)
+        parity = (np.arange(n_seg)[None, :] % 2) == 1
+        busy_tab = busy[:, None] ^ parity
+        levels = np.where(busy_tab, 0.5 + 0.45 * u, 0.3 * u).astype(np.float32)
+        levels[:, 0] = level  # segment 0 continues the carried level
+        util = np.take_along_axis(levels, seg, axis=1)
+        noise = rng.standard_normal((C, n), dtype=np.float32)
+        noise *= np.float32(0.05)
+        util += noise
+        np.clip(util, 0.0, 1.0, out=util)
+        last = seg[:, -1] if n else np.zeros(C, np.int32)
+        nxt = (busy ^ (last % 2 == 1), levels[np.arange(C), last])
+        return util, nxt
+
+    def _carbon_chunk(self, i: int, _state):
+        """Grid carbon intensity (gCO2/kWh): anti-correlated with solar
+        (fossil peakers at night) + noise — grid-fallback mode only."""
+        sp = self._synth
+        cities = sp["cities"]
+        P = len(cities)
+        c0 = i * self._cs["carbon"]
+        n = min(self._cs["carbon"], self._n_steps - c0)
+        t = c0 + np.arange(n)
+        local_h = (t[None, :] / 60.0
+                   + np.array([c[1] for c in cities])[:, None]) % 24.0
+        base = 450.0 - 250.0 * np.exp(-((local_h - 13.0) ** 2) / 18.0)
+        noise = self._rng(_FIELD_SALTS["carbon"], i).normal(0, 25, (P, n))
+        return np.clip(base + noise, 80.0, 700.0).astype(np.float32), None
+
+    # ---- forecasts -----------------------------------------------------
     def clear_forecast_cache(self):
         """Drop memoized forecast slabs (call after mutating actuals)."""
         self._forecast_cache.clear()
@@ -146,121 +366,129 @@ class ScenarioData:
                horizon: int) -> Optional[np.ndarray]:
         """[rows, horizon] multiplicative forecast error for lead 1..h.
 
-        One batched draw per call, counter-seeded from ``(seed, kind,
-        now)`` — row r is the r-th independent error stream of that
-        instant, whatever the batch shape.
+        One batched float32 draw per call, counter-seeded from ``(seed,
+        kind, now)`` — row r is the r-th independent error stream of that
+        instant, whatever the batch shape. Callers that pass a gathered
+        row subset therefore draw only ``len(rows)`` streams.
         """
         if self.error == "none":
-            return np.ones((rows, horizon))
+            return None  # exact forecast: no draw at all
         if kind == "load" and self.error == "no_load":
             return None  # no load forecast available
         rng = np.random.default_rng(
             (self.seed & 0xFFFFFFFF, _KIND_IDS[kind], now))
         lead = np.arange(1, horizon + 1, dtype=np.float32)
         std = 0.05 + 0.20 * np.minimum(lead / 1440.0, 1.0)
-        # float32 is plenty for a 5–25 % multiplicative error and halves
-        # the per-round RNG cost on 10k+-client fleets
         z = rng.standard_normal((rows, horizon), dtype=np.float32)
         z *= std.astype(np.float32)
         return np.exp(z, out=z)
 
-    def _forecast(self, kind: str, source: np.ndarray, now: int,
-                  horizon: int, invert: bool) -> np.ndarray:
-        """Memoized ``actual × noise`` slab; ``invert`` turns a utilisation
-        slice into spare fraction (1 − util) before applying the error."""
-        key = (kind, now, horizon)
-        cached = self._forecast_cache.get(key)
-        if cached is not None:
-            self._forecast_cache.move_to_end(key)
-            return cached
-        R = source.shape[0]
-        actual = source[:, now + 1: now + 1 + horizon]
+    def _forecast(self, kind: str, field: str, now: int, horizon: int,
+                  invert: bool, rows: Optional[np.ndarray] = None
+                  ) -> np.ndarray:
+        """Memoized ``actual × noise`` float32 slab; ``invert`` turns a
+        utilisation window into spare fraction (1 − util) first."""
+        key = (kind, now, horizon, -1 if rows is None else len(rows))
+        hit = self._forecast_cache.get(key)
+        if hit is not None:
+            crows, slab = hit
+            if (rows is None and crows is None) or \
+                    (rows is not None and crows is not None
+                     and np.array_equal(rows, crows)):
+                self._forecast_cache.move_to_end(key)
+                return slab
+        stop = min(now + 1 + horizon, self._n_steps)
+        R = len(rows) if rows is not None else \
+            (self._n_clients if field == "util" else len(self.domain_names))
+        if stop <= now + 1:
+            actual = np.zeros((R, 0), dtype=np.float32)
+        else:
+            actual = self._window(field, now + 1, stop, rows=rows)
         if invert:
-            actual = 1.0 - actual
+            actual = np.float32(1.0) - actual
         n = actual.shape[1]
         noise = self._noise(kind, now, R, horizon)
         if n == horizon:
             out = actual.copy() if noise is None else actual * noise
         else:  # end of trace: zero-pad the short window
-            out = np.zeros((R, horizon))
+            out = np.zeros((R, horizon), dtype=np.float32)
             out[:, :n] = actual if noise is None else actual * noise[:, :n]
         if invert:
             np.clip(out, 0.0, 1.0, out=out)
         out.flags.writeable = False
-        self._forecast_cache[key] = out
-        if len(self._forecast_cache) > _FORECAST_CACHE_SIZE:
-            self._forecast_cache.popitem(last=False)
+        self._forecast_cache[key] = (
+            None if rows is None else np.array(rows, copy=True), out)
+        total = sum(v[1].size for v in self._forecast_cache.values())
+        while len(self._forecast_cache) > 1 and (
+                len(self._forecast_cache) > _FORECAST_CACHE_SIZE
+                or total > _FORECAST_CACHE_ELEMS):
+            _, (_, old) = self._forecast_cache.popitem(last=False)
+            total -= old.size
         return out
 
     def excess_forecast(self, now: int, horizon: int) -> np.ndarray:
-        """[P, horizon] forecast of excess power for steps now+1..now+horizon."""
-        return self._forecast("excess", self.excess, now, horizon, invert=False)
+        """[P, horizon] forecast of excess power for steps now+1..now+h."""
+        return self._forecast("excess", "excess", now, horizon, invert=False)
 
-    def spare_forecast(self, now: int, horizon: int) -> Optional[np.ndarray]:
-        """[C, horizon] forecast of *fraction* of capacity free; None if the
-        no-load-forecast ablation is active."""
+    def spare_forecast(self, now: int, horizon: int,
+                       rows: Optional[np.ndarray] = None
+                       ) -> Optional[np.ndarray]:
+        """[C, horizon] (or [len(rows), horizon]) forecast *fraction* of
+        capacity free; None under the no-load-forecast ablation. Pass the
+        currently-eligible registry rows to gather before the noise draw."""
         if self.error == "no_load":
             return None
-        return self._forecast("load", self.util, now, horizon, invert=True)
+        return self._forecast("load", "util", now, horizon, invert=True,
+                              rows=rows)
 
     # ---- actuals -------------------------------------------------------
     def excess_at(self, step: int) -> np.ndarray:
-        return self.excess[:, min(step, self.n_steps - 1)]
+        t = min(step, self._n_steps - 1)
+        cs = self._cs["excess"]
+        return self._chunk("excess", t // cs)[:, t % cs]
 
-    def spare_at(self, step: int, rows: Optional[np.ndarray] = None) -> np.ndarray:
+    def spare_at(self, step: int, rows: Optional[np.ndarray] = None
+                 ) -> np.ndarray:
         """[C] (or [len(rows)]) fraction of capacity free at ``step``.
 
         Pass ``rows`` to gather just a client subset — the simulation step
         loop asks for only the selected clients, which turns an O(C)
-        strided column read into an O(n_selected) gather.
+        column read into an O(n_selected) gather.
         """
-        t = min(step, self.n_steps - 1)
+        t = min(step, self._n_steps - 1)
+        cs = self._cs["util"]
+        col = self._chunk("util", t // cs)
         if rows is None:
-            return 1.0 - self.util[:, t]
-        return 1.0 - self.util[rows, t]
+            return np.float32(1.0) - col[:, t % cs]
+        return np.float32(1.0) - col[rows, t % cs]
 
     def carbon_at(self, step: int) -> np.ndarray:
         """[P] grid carbon intensity (gCO2/kWh) — used only by the
         grid-fallback mode (paper Alg. 1 line 19 / §7 future work)."""
-        if self.carbon is None:
-            return np.full(self.excess.shape[0], 400.0)
-        return self.carbon[:, min(step, self.n_steps - 1)]
+        if not self._has_carbon:
+            return np.full(len(self.domain_names), 400.0)
+        t = min(step, self._n_steps - 1)
+        cs = self._cs["carbon"]
+        return self._chunk("carbon", t // cs)[:, t % cs]
+
+
+# Drop-in name for loading real traces / test fixtures from arrays.
+ScenarioData = ScenarioStore
 
 
 def make_scenario(name: str, n_clients: int = 100, days: int = 7, seed: int = 0,
                   peak_w: float = 800.0, error: str = "realistic",
-                  unlimited_domains: tuple = ()) -> ScenarioData:
+                  unlimited_domains: tuple = ()) -> ScenarioStore:
     """name: 'global' or 'co_located' (paper Fig. 2).
 
-    Generation is fully batched: solar/cloud, client load and carbon each
-    come from one seeded multi-row draw, so 10k-client multi-day scenarios
-    build in a couple of seconds.
+    Returns a lazily-synthesized :class:`ScenarioStore`: nothing is
+    generated until the first access, and generation happens in seeded
+    per-chunk batched draws, so 100k-client multi-day scenarios cost
+    resident-chunk memory (a few hundred MB) rather than eager slabs.
     """
     cities = GLOBAL_CITIES if name == "global" else CO_LOCATED_CITIES
-    T = days * 24 * 60
-    t_min = np.arange(T)
-    P = len(cities)
-
-    crng = np.random.default_rng(seed * 7919 + 1)
-    cloud_5min = _ar1_cloud(crng, T // 5 + 1,
-                            [c[2] for c in cities], rows=P)
-    cloud = np.repeat(cloud_5min, 5, axis=1)[:, :T]  # 5-min blocks
-    excess = np.stack([
-        solar_curve(t_min, offset, peak_w, cloud[i])
-        for i, (cname, offset, _) in enumerate(cities)])
-    # hold in 5-minute blocks like the Solcast data
-    excess = np.repeat(excess[:, ::5], 5, axis=1)[:, :T]
-
-    util = _load_traces(np.random.default_rng(seed * 104729 + 1),
-                        n_clients, T)
-    # grid carbon intensity: anti-correlated with solar (fossil peakers at
-    # night), AR(1) noise — used only when the grid fallback is enabled
-    local_h = (t_min[None, :] / 60.0
-               + np.array([c[1] for c in cities])[:, None]) % 24.0
-    base = 450.0 - 250.0 * np.exp(-((local_h - 13.0) ** 2) / 18.0)
-    krng = np.random.default_rng(seed * 31337 + 1)
-    carbon = np.clip(base + krng.normal(0, 25, (P, T)), 80.0, 700.0)
-    return ScenarioData(excess=excess, util=util,
-                        domain_names=[c[0] for c in cities], seed=seed,
-                        error=error, unlimited_domains=unlimited_domains,
-                        carbon=carbon)
+    return ScenarioStore(
+        domain_names=[c[0] for c in cities], seed=seed, error=error,
+        unlimited_domains=unlimited_domains,
+        synth={"cities": cities, "peak_w": peak_w, "n_clients": n_clients,
+               "n_steps": days * 24 * 60})

@@ -18,29 +18,29 @@ from repro.data.traces import make_scenario
 
 
 def test_blocklist_blocks_and_releases():
-    bl = Blocklist(["a", "b", "c"], alpha=1.0, seed=0)
-    bl.record_participation(["a"])
-    assert bl.is_blocked("a") and not bl.is_blocked("b")
-    # release prob for a: p(a)=1, omega=mean=1/3 -> (1-1/3)^-1 = 1.5 -> 1.0
+    bl = Blocklist(3, alpha=1.0, seed=0)
+    bl.record_participation(np.array([0]))
+    assert bl.is_blocked(0) and not bl.is_blocked(1)
+    # release prob for row 0: p=1, omega=mean=1/3 -> (1-1/3)^-1 = 1.5 -> 1.0
     bl.start_round()
-    assert not bl.is_blocked("a")
+    assert not bl.is_blocked(0)
 
 
 def test_blocklist_high_participation_released_slowly():
-    bl = Blocklist([f"c{i}" for i in range(10)], alpha=1.0, seed=0)
+    bl = Blocklist(10, alpha=1.0, seed=0)
     for _ in range(20):
-        bl.record_participation(["c0"])
-    bl.start_round()  # omega = mean = 2.0; p(c0)-omega = 18 -> P = 1/18
-    assert bl.release_probability("c0") == pytest.approx(1 / 18.0)
+        bl.record_participation(np.array([0]))
+    bl.start_round()  # omega = mean = 2.0; p(row 0)-omega = 18 -> P = 1/18
+    assert bl.release_probability(0) == pytest.approx(1 / 18.0)
 
 
 def test_blocklist_alpha_controls_release():
-    b1 = Blocklist(["x"], alpha=0.5)
-    b2 = Blocklist(["x"], alpha=2.0)
+    b1 = Blocklist(1, alpha=0.5)
+    b2 = Blocklist(1, alpha=2.0)
     for b in (b1, b2):
-        b.participation["x"] = 10
+        b.participation[0] = 10
         b.omega = 1.0
-    assert b1.release_probability("x") > b2.release_probability("x")
+    assert b1.release_probability(0) > b2.release_probability(0)
 
 
 # ---------------------------------------------------------------------------
@@ -48,12 +48,15 @@ def test_blocklist_alpha_controls_release():
 
 
 def test_oort_sigma_formula():
-    ut = UtilityTracker({"a": 50, "b": 100})
-    assert ut.sigma("a") == 1.0  # never participated
-    ut.record("a", np.array([2.0, 2.0, 2.0]))
-    assert ut.sigma("a") == pytest.approx(50 * 2.0)
-    ut.record("b", np.array([1.0, 3.0]))
-    assert ut.sigma("b") == pytest.approx(100 * np.sqrt((1 + 9) / 2))
+    ut = UtilityTracker(np.array([50, 100]))
+    assert ut.sigma(0) == 1.0  # never participated
+    ut.record(0, np.array([2.0, 2.0, 2.0]))
+    assert ut.sigma(0) == pytest.approx(50 * 2.0)
+    ut.record(1, np.array([1.0, 3.0]))
+    assert ut.sigma(1) == pytest.approx(100 * np.sqrt((1 + 9) / 2))
+    np.testing.assert_allclose(
+        ut.sigmas(), [ut.sigma(0), ut.sigma(1)])
+    np.testing.assert_allclose(ut.sigmas(np.array([1])), [ut.sigma(1)])
 
 
 # ---------------------------------------------------------------------------

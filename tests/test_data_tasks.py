@@ -47,8 +47,8 @@ def test_trainer_aggregate_is_weighted_mean():
     model = ConvNet(n_classes=4, channels=(4,), hw=8)
     tr = JaxTrainer(model, fd, lr=0.0)  # lr 0: local params == global
     p0 = jax.tree.map(lambda a: a.copy(), tr.params)
-    u1 = tr.local_update("c0", 3)
-    u2 = tr.local_update("c1", 3)
+    u1 = tr.local_update(0, 3)   # row 0 -> "c0"
+    u2 = tr.local_update(1, 3)
     tr.aggregate([u1, u2])
     # with lr=0, aggregated params must equal the originals exactly
     for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(tr.params)):
@@ -61,6 +61,6 @@ def test_trainer_learns_locally():
     tr = JaxTrainer(model, fd, lr=0.1, prox_mu=0.0, max_steps_per_round=40)
     acc0 = tr.evaluate()
     for rnd in range(4):
-        updates = [tr.local_update(c, 30) for c in NAMES[:4]]
+        updates = [tr.local_update(row, 30) for row in range(4)]
         tr.aggregate(updates)
     assert tr.evaluate() > acc0 + 0.1

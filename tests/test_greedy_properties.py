@@ -39,8 +39,8 @@ def build_inputs(seed, n_clients, n_domains, horizon, budget_scale):
         m_spare=rng.uniform(0.0, 5.0, (n_clients, horizon)),
         r_excess=rng.uniform(0.0, 80.0 * budget_scale, (n_domains, horizon)),
         sigma=rng.uniform(0.1, 2.0, n_clients),
-        client_order=[c.name for c in clients],
-        domain_order=[d.name for d in domains])
+        rows=np.arange(n_clients),
+        dom=reg.domain_rows([d.name for d in domains]))
 
 
 def check_invariants(inp, d, n, result):
@@ -52,10 +52,10 @@ def check_invariants(inp, d, n, result):
     assert len(set(chosen)) == n                 # no duplicates
     dd = min(d, inp.m_spare.shape[1])
     assert batches.shape == (n, dd)
-    delta, m_min, m_max, dom = (
-        reg.delta_arr, reg.m_min_arr, reg.m_max_arr,
-        reg.domain_rows(inp.domain_order))
-    rows = reg.rows(inp.client_order)[chosen]
+    delta, m_min, m_max = reg.delta_arr, reg.m_min_arr, reg.m_max_arr
+    dom = np.zeros(len(reg), dtype=int)
+    dom[inp.rows] = inp.dom
+    rows = inp.rows[np.asarray(chosen)]
     totals = batches.sum(axis=1)
     assert np.all(totals >= m_min[rows] - 1e-9)  # reaches m_min
     assert np.all(totals <= m_max[rows] + 1e-9)  # never exceeds m_max

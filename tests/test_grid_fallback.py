@@ -17,9 +17,7 @@ def build(fallback, kill_sun=True, seed=0):
                               domain_names=sc.domain_names)
     strat = FedZeroStrategy(reg, n=4, d_max=30, seed=seed, fallback=fallback,
                             grid_cooldown=3)
-    trainer = ProxyTrainer(reg.client_names,
-                           {c: reg.clients[c].n_samples
-                            for c in reg.client_names})
+    trainer = ProxyTrainer(len(reg))
     return FLSimulation(reg, sc, strat, trainer, eval_every=1)
 
 

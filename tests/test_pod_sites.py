@@ -41,9 +41,7 @@ def test_fedzero_schedules_pod_sites():
                        peak_w=64 * 250.0 * 1.5)  # grid sized for the sites
     sc.domain_names = list(reg.domains)  # align domain naming
     strat = make_strategy("fedzero", reg, n=5, d_max=60, seed=0)
-    trainer = ProxyTrainer(reg.client_names,
-                           {c: reg.clients[c].n_samples
-                            for c in reg.client_names}, k=0.01)
+    trainer = ProxyTrainer(len(reg), k=0.01)
     sim = FLSimulation(reg, sc, strat, trainer, eval_every=1)
     s = sim.run(until_step=20 * 60)
     assert s["rounds"] >= 1

@@ -37,8 +37,8 @@ def selection_instance(draw):
         m_spare=rng.uniform(0, 5, (n_clients, horizon)),
         r_excess=rng.uniform(0, 30, (n_domains, horizon)),
         sigma=rng.uniform(0.1, 10, n_clients),
-        client_order=[c.name for c in clients],
-        domain_order=[d.name for d in domains])
+        rows=np.arange(n_clients),
+        dom=reg.domain_rows([d.name for d in domains]))
     n = draw(st.integers(1, max(1, n_clients // 2)))
     return inp, n, horizon
 
@@ -51,21 +51,21 @@ def test_selection_respects_all_constraints(case):
     if sel is None:
         return
     reg = inp.registry
-    assert len(set(sel.clients)) == n
-    for c in sel.clients:
-        spec = reg.clients[c]
-        b = sel.expected_batches[c]
-        assert b >= spec.m_min_batches - 1e-5
-        assert b <= spec.m_max_batches + 1e-5
+    assert len(set(sel.rows.tolist())) == n
+    d = sel.expected_duration
+    for k, row in enumerate(sel.rows):
+        b = sel.expected_batches[k]
+        assert b >= reg.m_min_arr[row] - 1e-5
+        assert b <= reg.m_max_arr[row] + 1e-5
         # client can never exceed total forecast spare capacity
-        ci = inp.client_order.index(c)
-        assert b <= inp.m_spare[ci, :sel.expected_duration].sum() + 1e-5
+        assert b <= inp.m_spare[row, :d].sum() + 1e-5
     # per-domain total energy within aggregate budget over the round
-    for p in inp.domain_order:
-        pi = inp.domain_order.index(p)
-        used = sum(sel.expected_batches[c] * reg.clients[c].delta
-                   for c in sel.clients if reg.clients[c].domain == p)
-        assert used <= inp.r_excess[pi, :sel.expected_duration].sum() + 1e-4
+    dom_sel = inp.dom[sel.rows]  # rows == candidate indices here
+    for pi in range(inp.r_excess.shape[0]):
+        members = dom_sel == pi
+        used = float((sel.expected_batches[members]
+                      * reg.delta_arr[sel.rows[members]]).sum())
+        assert used <= inp.r_excess[pi, :d].sum() + 1e-4
 
 
 @given(selection_instance())
@@ -76,11 +76,9 @@ def test_greedy_solution_always_feasible(case):
     if sel is None:
         return
     reg = inp.registry
-    assert len(set(sel.clients)) == n
-    for c in sel.clients:
-        spec = reg.clients[c]
-        assert sel.expected_batches[c] >= spec.m_min_batches - 1e-5
-        assert sel.expected_batches[c] <= spec.m_max_batches + 1e-5
+    assert len(set(sel.rows.tolist())) == n
+    assert np.all(sel.expected_batches >= reg.m_min_arr[sel.rows] - 1e-5)
+    assert np.all(sel.expected_batches <= reg.m_max_arr[sel.rows] + 1e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -149,10 +147,10 @@ def test_dirichlet_partition_exact_cover(n_clients, n_classes, alpha, seed):
 @given(st.integers(0, 500), st.floats(0.1, 3.0))
 @settings(max_examples=30, deadline=None)
 def test_release_probability_in_unit_interval(extra, alpha):
-    bl = Blocklist([f"c{i}" for i in range(5)], alpha=alpha)
-    bl.participation["c0"] = extra
+    bl = Blocklist(5, alpha=alpha)
+    bl.participation[0] = extra
     bl.omega = 2.0
-    p = bl.release_probability("c0")
+    p = bl.release_probability(0)
     assert 0.0 <= p <= 1.0
     if extra <= bl.omega:
         assert p == 1.0

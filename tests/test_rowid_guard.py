@@ -1,0 +1,96 @@
+"""Guard: no name-keyed per-round state may creep back into core/.
+
+The row-ID refactor made registry row indices the only identity on the
+scheduling path. This test enforces it two ways:
+
+1. grep-style source scan — the scheduling modules must not contain the
+   name-keyed idioms the refactor removed (name→row dict lookups,
+   ``fromiter`` over dict values, name-list ``.index`` calls,
+   ``client_order`` threading, ``Dict[str`` round state). ``simulation``
+   may mention ``client_names`` exactly once: the ``summary()``
+   reporting boundary.
+2. runtime checks — after a short run, every piece of per-round state is
+   an integer-row array, not a name-keyed mapping.
+"""
+import os
+import re
+
+import numpy as np
+
+import repro.core.fairness
+import repro.core.selection
+import repro.core.simulation
+import repro.core.strategies
+import repro.core.utility
+from repro.core import (FLSimulation, ProxyTrainer, make_paper_registry,
+                        make_strategy)
+from repro.data.traces import make_scenario
+
+FORBIDDEN = ("fromiter", "row_of", "client_order", ".index(", "Dict[str",
+             "defaultdict")
+SCHED_MODULES = (repro.core.fairness, repro.core.utility,
+                 repro.core.selection, repro.core.strategies,
+                 repro.core.simulation)
+
+
+def _source(mod):
+    with open(mod.__file__) as f:
+        return f.read()
+
+
+def test_no_name_keyed_idioms_in_scheduling_modules():
+    for mod in SCHED_MODULES:
+        src = _source(mod)
+        for pat in FORBIDDEN:
+            assert pat not in src, (
+                f"{os.path.basename(mod.__file__)} contains forbidden "
+                f"name-keyed idiom {pat!r}")
+
+
+def test_client_names_only_at_summary_boundary():
+    # strategies/selection/fairness/utility: zero mentions
+    for mod in SCHED_MODULES[:4]:
+        assert "client_names" not in _source(mod), mod.__name__
+    # simulation: exactly the summary() reporting boundary
+    occurrences = re.findall(r"client_names", _source(repro.core.simulation))
+    assert len(occurrences) <= 1
+
+
+def test_per_round_state_is_row_arrays():
+    sc = make_scenario("global", n_clients=30, days=1, seed=2)
+    reg = make_paper_registry(n_clients=30, seed=2,
+                              domain_names=sc.domain_names)
+    strat = make_strategy("fedzero", reg, n=4, d_max=60, seed=2,
+                          solver="greedy")
+    trainer = ProxyTrainer(len(reg))
+    sim = FLSimulation(reg, sc, strat, trainer, eval_every=1)
+    s = sim.run(until_step=10 * 60)
+    assert s["rounds"] >= 1
+
+    # simulation state
+    assert isinstance(sim.participation, np.ndarray)
+    assert sim.participation.dtype.kind == "i"
+    # blocklist state
+    bl = strat.blocklist
+    assert isinstance(bl.participation, np.ndarray)
+    assert isinstance(bl.blocked, np.ndarray) and bl.blocked.dtype == bool
+    # utility tracker state
+    ut = strat.utility
+    for arr in (ut.participation_arr, ut.sq_loss_mean_arr, ut.n_samples_arr):
+        assert isinstance(arr, np.ndarray)
+    # trainer state
+    assert isinstance(trainer.counts, np.ndarray)
+    # round results carry integer row arrays
+    for rr in sim.results:
+        for field in (rr.participants, rr.contributors, rr.contributor_idx,
+                      rr.stragglers):
+            assert isinstance(field, np.ndarray)
+            assert field.dtype.kind == "i"
+        assert isinstance(rr.batches, np.ndarray)
+    # summary() remains the name boundary with an unchanged schema
+    assert set(s["participation"]) == set(reg.client_names)
+    assert set(s) == {
+        "strategy", "rounds", "sim_minutes", "total_energy_wh",
+        "grid_energy_wh", "carbon_g", "grid_rounds", "best_metric",
+        "metric_curve", "mean_round_duration", "std_round_duration",
+        "participation"}

@@ -1,0 +1,123 @@
+"""Parity pins for the row-ID-first / ScenarioStore refactor.
+
+1. Golden summary parity: ``tests/golden_summary_rowid.json`` holds
+   ``FLSimulation.run`` summaries captured from the **pre-refactor**
+   engine (name-keyed blocklist/participation, eager float64-free f32
+   array scenario, full-fleet noise draws) for configurations whose RNG
+   draw order is provably unchanged by the refactor:
+
+   * scenario traces are explicit float32 arrays, so the chunked
+     ScenarioStore serves bit-identical values;
+   * fedzero runs with ``error="none"`` — no forecast noise is drawn at
+     all, so the eligible-rows-only noise gather cannot shift streams;
+   * oort / random never consume spare forecasts;
+   * 60 zero-padded client names sort exactly like registry rows, so the
+     old sorted-name blocklist release order equals row order.
+
+   The refactored engine must reproduce these summaries exactly.
+
+2. Blocklist release draws are the one place the refactor *did* change
+   RNG order (row order replaces sorted-name order, which differ beyond
+   999 clients): parity there is distributional — empirical release
+   frequencies must match the paper's P(c) = min(1, (p(c) − ω)^(−α)).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (FLSimulation, ProxyTrainer, make_paper_registry,
+                        make_strategy)
+from repro.core.fairness import Blocklist
+from repro.data.traces import ScenarioData
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "golden_summary_rowid.json")
+
+with open(FIXTURE) as f:
+    GOLDEN = json.load(f)
+META = GOLDEN["_meta"]
+C, P, T = META["n_clients"], META["n_domains"], META["T"]
+DOMAINS = [f"d{i}" for i in range(P)]
+
+
+def build_traces():
+    """Deterministic float32 traces — identical pre/post refactor."""
+    t = np.arange(T, dtype=np.float64)
+    local = (t[None, :] / 60.0 + 6.0 * np.arange(P)[:, None]) % 24.0
+    x = (local - 6.0) / 14.0
+    ex = np.where((x > 0) & (x < 1),
+                  800.0 * np.sin(np.pi * np.clip(x, 0.0, 1.0)), 0.0)
+    excess = ex.astype(np.float32)
+    util = (0.8 * np.random.default_rng(12345).random((C, T))
+            ).astype(np.float32)
+    return excess, util
+
+
+def run_once(strategy_name, error, **strat_kw):
+    excess, util = build_traces()
+    sc = ScenarioData(excess=excess, util=util, domain_names=list(DOMAINS),
+                      seed=META["run_seed"], error=error)
+    reg = make_paper_registry(n_clients=C, seed=META["registry_seed"],
+                              domain_names=list(DOMAINS))
+    strat = make_strategy(strategy_name, reg, n=META["n"],
+                          d_max=META["d_max"], seed=META["run_seed"],
+                          **strat_kw)
+    trainer = ProxyTrainer(len(reg), k=META["proxy_k"],
+                           seed=META["run_seed"])
+    sim = FLSimulation(reg, sc, strat, trainer,
+                       eval_every=META["eval_every"], seed=META["run_seed"])
+    return sim.run(until_step=META["until_step"])
+
+
+@pytest.mark.parametrize("key,strategy,error,kw", [
+    ("fedzero_greedy_noerr", "fedzero", "none", {"solver": "greedy"}),
+    ("oort", "oort", "realistic", {}),
+    ("random_1.3n", "random_1.3n", "realistic", {}),
+])
+def test_summary_matches_pre_refactor_engine(key, strategy, error, kw):
+    golden = GOLDEN[key]
+    s = run_once(strategy, error, **kw)
+    s = json.loads(json.dumps(s))  # tuples -> lists, numpy -> python
+    assert set(s) == set(golden)
+    for field in sorted(golden):
+        assert s[field] == golden[field], field
+
+
+# ---------------------------------------------------------------------------
+# blocklist release draws: row order replaced sorted-name order, so parity
+# is distributional — empirical frequency vs the paper's release formula
+# ---------------------------------------------------------------------------
+
+
+def test_release_draw_distribution_matches_formula():
+    n, trials = 40, 3000
+    base_participation = np.concatenate([
+        np.zeros(10), np.full(10, 2), np.full(10, 5), np.full(10, 20)])
+    released_counts = np.zeros(n)
+    omega = None
+    for trial in range(trials):
+        bl = Blocklist(n, alpha=1.0, seed=trial)
+        bl.participation[:] = base_participation
+        bl.blocked[:] = True
+        bl.start_round()
+        omega = bl.omega
+        released_counts += ~bl.blocked
+    expected = np.where(
+        base_participation - omega > 0,
+        np.minimum(1.0, (base_participation - omega) ** -1.0), 1.0)
+    freq = released_counts / trials
+    se = np.sqrt(np.maximum(expected * (1 - expected), 1e-4) / trials)
+    np.testing.assert_array_less(np.abs(freq - expected), 5 * se + 1e-9)
+
+
+def test_release_order_is_row_order_deterministic():
+    """Same seed → identical release pattern regardless of name sorting
+    concerns: the draw is defined over ascending registry rows."""
+    a, b = Blocklist(1500, seed=3), Blocklist(1500, seed=3)
+    for bl in (a, b):
+        bl.participation[:] = np.arange(1500) % 7
+        bl.blocked[:] = True
+        bl.start_round()
+    np.testing.assert_array_equal(a.blocked, b.blocked)
+    assert a.blocked.any() and not a.blocked.all()

@@ -20,9 +20,7 @@ def run_once(strategy_name, seed, hours=8, n_clients=50, **strat_kw):
                               domain_names=sc.domain_names)
     strat = make_strategy(strategy_name, reg, n=5, d_max=60, seed=seed,
                           **strat_kw)
-    trainer = ProxyTrainer(reg.client_names,
-                           {c: reg.clients[c].n_samples
-                            for c in reg.client_names}, k=0.0005, seed=seed)
+    trainer = ProxyTrainer(len(reg), k=0.0005, seed=seed)
     sim = FLSimulation(reg, sc, strat, trainer, eval_every=2, seed=seed)
     return sim.run(until_step=hours * 60)
 

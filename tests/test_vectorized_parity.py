@@ -1,14 +1,17 @@
 """Parity tests for the vectorized scheduling engine.
 
-1. ``FLSimulation._execute_round`` (structure-of-arrays) must reproduce the
-   seed's dict-of-``ClientRoundState`` round executor — the reference
-   implementation below is a line-for-line copy of that seed code.
+1. ``FLSimulation._execute_round`` (structure-of-arrays) must reproduce a
+   per-client reference round executor — the reference below is the seed's
+   dict-of-state implementation, ported to row identity but still looping
+   one Python client at a time.
 2. The vectorized ``selection._eligible`` must match a literal per-client
    loop over Algorithm 1's filters.
 3. Randomized greedy-vs-MIP parity: on solvable instances the heuristic
    must agree on feasibility, respect the constraints, and stay within a
    constant factor of the exact objective.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -17,25 +20,36 @@ from repro.core import (ClientRegistry, ClientSpec, FLSimulation, PowerDomain,
                         make_strategy, select_clients, share_power)
 from repro.core.selection import _eligible
 from repro.core.strategies import FedZeroStrategy
-from repro.core.types import ClientRoundState, RoundResult
+from repro.core.types import RoundResult
 from repro.data.traces import make_scenario
 
 
 # ---------------------------------------------------------------------------
-# reference (seed) round executor
+# reference (seed) round executor: one Python loop iteration per client
 # ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _RefState:
+    row: int
+    computed: float = 0.0
+    energy_used: float = 0.0
+    done_min: bool = False
+    finished_at: int = -1
+
+
 def reference_execute_round(sim, sel) -> RoundResult:
-    """Seed implementation of FLSimulation._execute_round, kept verbatim."""
+    """Seed implementation of FLSimulation._execute_round (dict-of-state,
+    per-client loops), with names replaced by registry rows."""
     reg = sim.registry
     sc = sim.scenario
-    constrained = (sim.strategy.needs_energy_constraints
-                   and not getattr(sel, "grid", False))
-    states = {c: ClientRoundState(spec=reg.clients[c]) for c in sel.clients}
+    grid = bool(getattr(sel, "grid", False))
+    constrained = sim.strategy.needs_energy_constraints and not grid
+    rows = [int(r) for r in sel.rows]
+    states = {r: _RefState(row=r) for r in rows}
+    dom_of = {r: int(sim._dom_rows[r]) for r in rows}
     carbon_g = 0.0
     need_done = (sim.strategy.n if sim.strategy.over_select > 1.0
-                 else len(sel.clients))
+                 else len(rows))
     duration = sim.d_max
-    dom_idx = {p: i for i, p in enumerate(sim.domain_order)}
     for step in range(sim.d_max):
         t = sim.now + step
         if t >= sc.n_steps:
@@ -44,37 +58,34 @@ def reference_execute_round(sim, sel) -> RoundResult:
         spare = sc.spare_at(t)
         excess = sc.excess_at(t)
         by_dom = {}
-        for c, st in states.items():
-            if st.computed < st.spec.m_max_batches:
-                by_dom.setdefault(st.spec.domain, []).append(c)
-        for dom, members in by_dom.items():
-            caps = np.array([
-                spare[sim.client_order.index(c)] *
-                states[c].spec.m_max_capacity for c in members])
+        for r, st in states.items():
+            if st.computed < reg.m_max_arr[r]:
+                by_dom.setdefault(dom_of[r], []).append(r)
+        for pi, members in by_dom.items():
+            caps = np.array([spare[r] * reg.capacity_arr[r] for r in members])
             if not constrained:
-                batches = np.array([states[c].spec.m_max_capacity
-                                    for c in members])
+                batches = np.array([reg.capacity_arr[r] for r in members])
             else:
-                deltas = np.array([states[c].spec.delta for c in members])
-                computed = np.array([states[c].computed for c in members])
-                m_min = np.array([states[c].spec.m_min_batches for c in members])
-                m_max = np.array([states[c].spec.m_max_batches for c in members])
-                budget = float(excess[dom_idx[dom]])
+                deltas = np.array([reg.delta_arr[r] for r in members])
+                computed = np.array([states[r].computed for r in members])
+                m_min = np.array([reg.m_min_arr[r] for r in members])
+                m_max = np.array([reg.m_max_arr[r] for r in members])
+                budget = float(excess[pi])
                 grants = share_power(budget, deltas, computed, m_min,
                                      m_max, caps)
                 batches = np.minimum(grants / deltas, caps)
-            if getattr(sel, "grid", False):
+            if grid:
                 batches = caps
-            for c, nb in zip(members, batches):
-                st = states[c]
-                room = st.spec.m_max_batches - st.computed
+            for r, nb in zip(members, batches):
+                st = states[r]
+                room = reg.m_max_arr[r] - st.computed
                 nb = min(nb, room)
                 st.computed += nb
-                st.energy_used += nb * st.spec.delta
-                if getattr(sel, "grid", False):
-                    ci = sc.carbon_at(t)[dom_idx[dom]]
-                    carbon_g += nb * st.spec.delta / 60e3 * ci
-                if not st.done_min and st.computed >= st.spec.m_min_batches:
+                st.energy_used += nb * reg.delta_arr[r]
+                if grid:
+                    ci = float(sc.carbon_at(t)[pi])
+                    carbon_g += nb * reg.delta_arr[r] / 60e3 * ci
+                if not st.done_min and st.computed >= reg.m_min_arr[r]:
                     st.done_min = True
                     st.finished_at = step
         n_done = sum(1 for st in states.values() if st.done_min)
@@ -82,19 +93,23 @@ def reference_execute_round(sim, sel) -> RoundResult:
             duration = step + 1
             break
 
-    finished = sorted((st.finished_at, c) for c, st in states.items()
+    finished = sorted((st.finished_at, r) for r, st in states.items()
                       if st.done_min)
-    contributors = [c for _, c in finished[: max(sim.strategy.n, need_done)]]
-    stragglers = [c for c in sel.clients if c not in contributors]
+    contributors = [r for _, r in finished[: max(sim.strategy.n, need_done)]]
+    contrib_set = set(contributors)
+    stragglers = [r for r in rows if r not in contrib_set]
+    pos_of = {r: i for i, r in enumerate(rows)}
     total_e = sum(st.energy_used for st in states.values())
     return RoundResult(
         round_idx=sim.round_idx, start_step=sim.now, duration=duration,
-        participants=list(sel.clients), contributors=contributors,
-        stragglers=stragglers,
+        participants=np.array(rows, dtype=int),
+        contributors=np.array(contributors, dtype=int),
+        contributor_idx=np.array([pos_of[r] for r in contributors], dtype=int),
+        stragglers=np.array(stragglers, dtype=int),
         energy_used=total_e,
-        grid_energy=total_e if getattr(sel, "grid", False) else 0.0,
+        grid_energy=total_e if grid else 0.0,
         carbon_g=carbon_g,
-        batches={c: states[c].computed for c in sel.clients},
+        batches=np.array([states[r].computed for r in rows]),
     )
 
 
@@ -106,18 +121,19 @@ class ParitySim(FLSimulation):
         rr_vec = super()._execute_round(sel)
         rr_ref = reference_execute_round(self, sel)
         assert rr_vec.duration == rr_ref.duration
-        assert rr_vec.participants == rr_ref.participants
-        assert rr_vec.contributors == rr_ref.contributors
-        assert rr_vec.stragglers == rr_ref.stragglers
+        np.testing.assert_array_equal(rr_vec.participants, rr_ref.participants)
+        np.testing.assert_array_equal(rr_vec.contributors, rr_ref.contributors)
+        np.testing.assert_array_equal(rr_vec.contributor_idx,
+                                      rr_ref.contributor_idx)
+        np.testing.assert_array_equal(rr_vec.stragglers, rr_ref.stragglers)
         assert rr_vec.energy_used == pytest.approx(rr_ref.energy_used,
                                                    rel=1e-9, abs=1e-9)
         assert rr_vec.grid_energy == pytest.approx(rr_ref.grid_energy,
                                                    rel=1e-9, abs=1e-9)
         assert rr_vec.carbon_g == pytest.approx(rr_ref.carbon_g,
                                                 rel=1e-9, abs=1e-9)
-        for c in rr_ref.participants:
-            assert rr_vec.batches[c] == pytest.approx(rr_ref.batches[c],
-                                                      rel=1e-9, abs=1e-9)
+        np.testing.assert_allclose(rr_vec.batches, rr_ref.batches,
+                                   rtol=1e-9, atol=1e-9)
         return rr_vec
 
 
@@ -128,9 +144,7 @@ def run_parity(strategy_name, hours=8, n_clients=30, seed=0, sim_cls=ParitySim,
                               domain_names=sc.domain_names)
     strat = make_strategy(strategy_name, reg, n=5, d_max=60, seed=seed,
                           **strat_kw)
-    trainer = ProxyTrainer(reg.client_names,
-                           {c: reg.clients[c].n_samples
-                            for c in reg.client_names}, k=0.0005)
+    trainer = ProxyTrainer(len(reg), k=0.0005)
     sim = sim_cls(reg, sc, strat, trainer, eval_every=1)
     return sim.run(until_step=hours * 60)
 
@@ -154,9 +168,7 @@ def test_execute_round_matches_reference_grid_fallback():
                               domain_names=sc.domain_names)
     strat = FedZeroStrategy(reg, n=4, d_max=30, seed=3, fallback="grid",
                             grid_cooldown=2)
-    trainer = ProxyTrainer(reg.client_names,
-                           {c: reg.clients[c].n_samples
-                            for c in reg.client_names})
+    trainer = ProxyTrainer(len(reg))
     sim = ParitySim(reg, sc, strat, trainer, eval_every=1)
     s = sim.run(until_step=6 * 60)
     assert s["grid_rounds"] >= 1
@@ -166,24 +178,23 @@ def test_execute_round_matches_reference_grid_fallback():
 # eligibility filter parity
 # ---------------------------------------------------------------------------
 def reference_eligible(inp, d):
-    """Literal per-client implementation of Algorithm 1 lines 6/8/11."""
+    """Literal per-candidate implementation of Alg. 1 lines 6/8/11."""
     reg = inp.registry
-    dom_ok = {p: inp.r_excess[i, :d].sum() > 0
-              for i, p in enumerate(inp.domain_order)}
-    dom_idx = {p: i for i, p in enumerate(inp.domain_order)}
+    dom_ok = {pi: inp.r_excess[pi, :d].sum() > 0
+              for pi in range(inp.r_excess.shape[0])}
     eligible = []
-    for ci, cname in enumerate(inp.client_order):
-        spec = reg.clients[cname]
-        if inp.sigma[ci] <= 0:
+    for k in range(len(inp.rows)):
+        row, pi = int(inp.rows[k]), int(inp.dom[k])
+        if inp.sigma[k] <= 0:
             continue
-        if not dom_ok.get(spec.domain, False):
+        if not dom_ok.get(pi, False):
             continue
-        pi = dom_idx[spec.domain]
-        reachable = np.minimum(inp.m_spare[ci, :d],
-                               inp.r_excess[pi, :d] / spec.delta).sum()
-        if reachable < spec.m_min_batches:
+        reachable = np.minimum(inp.m_spare[k, :d],
+                               inp.r_excess[pi, :d]
+                               / reg.delta_arr[row]).sum()
+        if reachable < reg.m_min_arr[row]:
             continue
-        eligible.append(ci)
+        eligible.append(k)
     return eligible
 
 
@@ -204,8 +215,8 @@ def random_inputs(seed, n_clients=14, n_domains=3, horizon=24):
         m_spare=rng.uniform(0.0, 5.0, (n_clients, horizon)),
         r_excess=rng.uniform(0.0, 80.0, (n_domains, horizon)),
         sigma=rng.uniform(0.1, 2.0, n_clients),
-        client_order=[c.name for c in clients],
-        domain_order=[d.name for d in domains])
+        rows=np.arange(n_clients),
+        dom=reg.domain_rows([d.name for d in domains]))
     return inp
 
 
@@ -260,12 +271,13 @@ def test_greedy_mip_parity_randomized(seed):
         assert s_mip is not None
     if s_mip is None or s_greedy is None:
         return
+    reg = inp.registry
     for sel in (s_mip, s_greedy):
-        assert len(sel.clients) == n
-        for c in sel.clients:
-            spec = inp.registry.clients[c]
-            assert sel.expected_batches[c] >= spec.m_min_batches - 1e-6
-            assert sel.expected_batches[c] <= spec.m_max_batches + 1e-6
+        assert len(sel.rows) == n
+        np.testing.assert_array_less(
+            reg.m_min_arr[sel.rows] - 1e-6, sel.expected_batches)
+        np.testing.assert_array_less(
+            sel.expected_batches, reg.m_max_arr[sel.rows] + 1e-6)
     # total planned batches within a constant factor of the exact optimum
-    tot = lambda s: sum(s.expected_batches.values())
+    tot = lambda s: float(s.expected_batches.sum())
     assert tot(s_greedy) >= 0.5 * tot(s_mip)
