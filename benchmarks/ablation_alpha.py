@@ -12,26 +12,20 @@ from __future__ import annotations
 
 import numpy as np
 
-from .common import save_result
+from .common import experiment_config, save_result
 
 import os, sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import FLSimulation, FedZeroStrategy, ProxyTrainer, make_paper_registry
-from repro.data.traces import make_scenario
+from repro.core import run_sweep
 
 
 def run(days: float = 2.0, alphas=(0.25, 0.5, 1.0, 2.0, 4.0), seed=0):
+    # one declarative sweep: the α variants share a single ScenarioStore
+    base = experiment_config("fedzero", days=days, seed=seed)
+    cfgs = [base.with_strategy("fedzero", alpha=alpha) for alpha in alphas]
     out = {}
-    for alpha in alphas:
-        sc = make_scenario("global", n_clients=100, days=int(np.ceil(days)),
-                           seed=seed)
-        reg = make_paper_registry(n_clients=100, seed=seed,
-                                  domain_names=sc.domain_names)
-        strat = FedZeroStrategy(reg, n=10, d_max=60, seed=seed, alpha=alpha)
-        trainer = ProxyTrainer(len(reg), k=0.0004, seed=seed)
-        sim = FLSimulation(reg, sc, strat, trainer, eval_every=1, seed=seed)
-        s = sim.run(until_step=int(days * 24 * 60) - 61)
+    for alpha, s in zip(alphas, run_sweep(cfgs)):
         part = np.array(list(s["participation"].values()), float)
         reached = [(t, m, e) for t, m, e in s["metric_curve"] if m >= 0.8]
         out[str(alpha)] = {

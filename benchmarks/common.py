@@ -10,9 +10,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import (FLSimulation, ProxyTrainer, make_paper_registry,
-                        make_strategy)
-from repro.data.traces import make_scenario
+from repro.core import (ExperimentConfig, FleetSection, RunSection,
+                        ScenarioSection, StrategySection, TrainerSection,
+                        build_experiment)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
 
@@ -23,28 +23,51 @@ def save_result(name: str, payload):
         json.dump(payload, f, indent=1, default=float)
 
 
+def experiment_config(strategy_name: str, scenario_name: str = "global",
+                      n_clients: int = 100, days: float = 2.0, n: int = 10,
+                      d_max: int = 60, seed: int = 0,
+                      error: str = "realistic", unlimited_domains=(),
+                      workload: str = "densenet", proxy_k: float = 0.0004,
+                      max_rounds=None, **strategy_options
+                      ) -> ExperimentConfig:
+    """The benchmark harness's standard declarative configuration."""
+    return ExperimentConfig(
+        scenario=ScenarioSection(
+            name=scenario_name, days=int(np.ceil(days)), seed=seed,
+            error=error, unlimited_domains=tuple(unlimited_domains)),
+        fleet=FleetSection(n_clients=n_clients, workload=workload, seed=seed),
+        strategy=StrategySection(name=strategy_name, n=n, d_max=d_max,
+                                 seed=seed, options=strategy_options),
+        trainer=TrainerSection(k=proxy_k, seed=seed),
+        run=RunSection(until_step=int(days * 24 * 60) - d_max - 1,
+                       max_rounds=max_rounds, eval_every=1, seed=seed))
+
+
 def run_strategy(strategy_name: str, scenario_name: str = "global",
                  n_clients: int = 100, days: float = 2.0, n: int = 10,
                  d_max: int = 60, seed: int = 0, error: str = "realistic",
                  unlimited_domains=(), workload: str = "densenet",
                  proxy_k: float = 0.0004, solver: str = "mip",
                  max_rounds=None):
-    """One simulated FL training with the ProxyTrainer; returns summary."""
-    sc = make_scenario(scenario_name, n_clients=n_clients,
-                       days=int(np.ceil(days)), seed=seed, error=error,
-                       unlimited_domains=unlimited_domains)
-    reg = make_paper_registry(n_clients=n_clients, seed=seed,
-                              workload=workload, domain_names=sc.domain_names)
-    kw = dict(n=n, d_max=d_max, seed=seed)
-    if strategy_name == "fedzero":
-        kw["solver"] = solver
-    strat = make_strategy(strategy_name, reg, **kw)
-    trainer = ProxyTrainer(len(reg), k=proxy_k, seed=seed)
-    sim = FLSimulation(reg, sc, strat, trainer, eval_every=1, seed=seed)
+    """One simulated FL training with the ProxyTrainer; returns
+    ``(sim, summary)``.
+
+    Deprecated shim over the declarative experiment API — new call sites
+    should build an :func:`experiment_config` and use
+    ``run_experiment``/``run_sweep`` directly.
+    """
+    options = {"solver": solver} if strategy_name == "fedzero" else {}
+    cfg = experiment_config(
+        strategy_name, scenario_name=scenario_name, n_clients=n_clients,
+        days=days, n=n, d_max=d_max, seed=seed, error=error,
+        unlimited_domains=unlimited_domains, workload=workload,
+        proxy_k=proxy_k, max_rounds=max_rounds, **options)
+    sim = build_experiment(cfg)
     t0 = time.time()
-    summary = sim.run(until_step=int(days * 24 * 60) - d_max - 1,
-                      max_rounds=max_rounds)
+    summary = sim.run(until_step=cfg.run.until_step,
+                      max_rounds=cfg.run.max_rounds)
     summary["wall_s"] = time.time() - t0
+    reg = sim.registry
     summary["participation_by_domain"] = {
         dom: sim.participation[reg.rows(reg.domains[dom].clients)].tolist()
         for dom in reg.domains}

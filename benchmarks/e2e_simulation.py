@@ -14,7 +14,13 @@ each in its own subprocess so peak RSS is attributable:
 * ``100k_1day`` — 100k clients over a **7-day** ScenarioStore, one
   simulated day; its ``peak_rss_mb`` must stay under 1.5 GB — the whole
   point of the chunked float32 store (the old eager float64 ``util``
-  slab alone was ~2.8 GB at this size).
+  slab alone was ~2.8 GB at this size);
+* ``1m_registry`` — a **1M-client** paper-profile registry built through
+  the array-first ``ClientRegistry.from_arrays`` path: wall-time and
+  peak-RSS gates pin the "no per-client Python objects" claim (the old
+  per-``ClientSpec`` loop was ~100s of MB and tens of seconds at this
+  size; the SoA build is a few hundred ms and a few hundred MB total
+  process RSS).
 
 Emits ``BENCH_e2e_simulation.json`` at the repo root. CI runs the
 benchmark on every push (a failing run or a blown budget fails the job)
@@ -39,12 +45,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_e2e_simulation.json")
 
-SCHEMA = 2
+SCHEMA = 3
 CONFIGS = {
-    "10k_3day": {"clients": 10_000, "scenario_days": 3, "sim_days": 3,
-                 "budget_wall_s": 60.0},
-    "100k_1day": {"clients": 100_000, "scenario_days": 7, "sim_days": 1,
+    "10k_3day": {"kind": "simulation", "clients": 10_000,
+                 "scenario_days": 3, "sim_days": 3, "budget_wall_s": 60.0},
+    "100k_1day": {"kind": "simulation", "clients": 100_000,
+                  "scenario_days": 7, "sim_days": 1,
                   "budget_wall_s": 600.0, "budget_rss_mb": 1536.0},
+    "1m_registry": {"kind": "registry", "clients": 1_000_000,
+                    "budget_wall_s": 10.0, "budget_rss_mb": 768.0},
 }
 
 
@@ -61,23 +70,26 @@ def _peak_rss_mb() -> float:
 
 def run_e2e(n_clients: int, scenario_days: int, sim_days: int, n: int = 10,
             d_max: int = 60, seed: int = 0, solver: str = "greedy"):
-    from repro.core import (FLSimulation, ProxyTrainer, make_paper_registry,
-                            make_strategy)
-    from repro.data.traces import make_scenario
+    from repro.core import (ExperimentConfig, FleetSection, RunSection,
+                            ScenarioSection, StrategySection, TrainerSection,
+                            build_experiment)
+
+    cfg = ExperimentConfig(
+        scenario=ScenarioSection(name="global", days=scenario_days,
+                                 seed=seed),
+        fleet=FleetSection(n_clients=n_clients, seed=seed),
+        strategy=StrategySection(name="fedzero", n=n, d_max=d_max, seed=seed,
+                                 options={"solver": solver}),
+        trainer=TrainerSection(k=0.0004, seed=seed),
+        run=RunSection(until_step=sim_days * 24 * 60 - d_max - 1,
+                       eval_every=5, seed=seed))
 
     t0 = time.perf_counter()
-    sc = make_scenario("global", n_clients=n_clients, days=scenario_days,
-                       seed=seed)
-    reg = make_paper_registry(n_clients=n_clients, seed=seed,
-                              domain_names=sc.domain_names)
-    strat = make_strategy("fedzero", reg, n=n, d_max=d_max, seed=seed,
-                          solver=solver)
-    trainer = ProxyTrainer(len(reg), k=0.0004, seed=seed)
-    sim = FLSimulation(reg, sc, strat, trainer, eval_every=5, seed=seed)
+    sim = build_experiment(cfg)
     t_setup = time.perf_counter() - t0
 
     t1 = time.perf_counter()
-    summary = sim.run(until_step=sim_days * 24 * 60 - d_max - 1)
+    summary = sim.run(until_step=cfg.run.until_step)
     t_sim = time.perf_counter() - t1
 
     peak_rss_mb = _peak_rss_mb()
@@ -103,6 +115,32 @@ def run_e2e(n_clients: int, scenario_days: int, sim_days: int, n: int = 10,
     }
 
 
+def run_registry_build(n_clients: int, seed: int = 0):
+    """Array-first registry construction at fleet scale: build a
+    paper-profile registry via ``ClientRegistry.from_arrays`` and touch
+    every SoA column. Fails loudly if the build materialized any
+    per-client Python objects (the compat spec view must stay dormant)."""
+    from repro.core import make_paper_registry
+
+    t0 = time.perf_counter()
+    reg = make_paper_registry(n_clients=n_clients, seed=seed)
+    cols = (reg.delta_arr, reg.capacity_arr, reg.m_min_arr, reg.m_max_arr,
+            reg.n_samples_arr)
+    t_build = time.perf_counter() - t0
+    if reg._specs is not None or reg._names is not None:
+        raise RuntimeError("array-first build materialized per-client "
+                           "Python objects")
+    return {
+        "kind": "registry",
+        "n_clients": n_clients,
+        "wall_s": t_build,
+        "peak_rss_mb": _peak_rss_mb(),
+        "soa_mb": float(sum(c.nbytes for c in cols)
+                        + reg._domain_idx.nbytes) / 2**20,
+        "n_domains": len(reg._domain_names),
+    }
+
+
 def _evaluate(key: str, row: dict) -> dict:
     cfg = CONFIGS[key]
     row["within_wall_budget"] = bool(row["wall_s"] < cfg["budget_wall_s"])
@@ -113,6 +151,15 @@ def _evaluate(key: str, row: dict) -> dict:
             if rss == rss else True
     row["ok"] = all(v for k, v in row.items() if k.startswith("within_"))
     return row
+
+
+def _run_single(key: str) -> dict:
+    cfg = CONFIGS[key]
+    if cfg.get("kind") == "registry":
+        row = run_registry_build(cfg["clients"])
+    else:
+        row = run_e2e(cfg["clients"], cfg["scenario_days"], cfg["sim_days"])
+    return _evaluate(key, row)
 
 
 def check_committed(path: str) -> int:
@@ -134,7 +181,9 @@ def check_committed(path: str) -> int:
         return 1
     for key, cfg in CONFIGS.items():
         row = configs[key]
-        for field in ("clients", "scenario_days", "sim_days"):
+        fields = ("clients",) if cfg.get("kind") == "registry" \
+            else ("clients", "scenario_days", "sim_days")
+        for field in fields:
             want = cfg[field]
             # the JSON rows use "n_clients" where CONFIGS uses "clients"
             got = row.get("n_clients" if field == "clients" else field)
@@ -163,15 +212,16 @@ def main():
         sys.exit(check_committed(args.check))
 
     if args.single:
-        cfg = CONFIGS[args.single]
-        row = run_e2e(cfg["clients"], cfg["scenario_days"], cfg["sim_days"])
-        print(json.dumps(_evaluate(args.single, row), default=float))
+        print(json.dumps(_run_single(args.single), default=float))
         return
 
     if args.quick:
         row = run_e2e(1000, 1, 1)
         print(f"[e2e quick] rounds={row['rounds']} wall={row['wall_s']:.1f}s "
               f"rss={row['peak_rss_mb']:.0f}MB")
+        reg_row = run_registry_build(100_000)
+        print(f"[e2e quick] registry C=100000 build={reg_row['wall_s']:.2f}s "
+              f"soa={reg_row['soa_mb']:.0f}MB")
         if not row["rounds"]:
             sys.exit(1)
         return
@@ -190,10 +240,15 @@ def main():
             continue
         row = json.loads(proc.stdout.strip().splitlines()[-1])
         payload["configs"][key] = row
-        print(f"[e2e] {key}: C={row['n_clients']}  "
-              f"setup={row['setup_s']:.1f}s  sim={row['sim_s']:.1f}s  "
-              f"rounds={row['rounds']}  rss={row['peak_rss_mb']:.0f}MB  "
-              f"ok={row['ok']}")
+        if row.get("kind") == "registry":
+            print(f"[e2e] {key}: C={row['n_clients']}  "
+                  f"build={row['wall_s']:.2f}s  soa={row['soa_mb']:.0f}MB  "
+                  f"rss={row['peak_rss_mb']:.0f}MB  ok={row['ok']}")
+        else:
+            print(f"[e2e] {key}: C={row['n_clients']}  "
+                  f"setup={row['setup_s']:.1f}s  sim={row['sim_s']:.1f}s  "
+                  f"rounds={row['rounds']}  rss={row['peak_rss_mb']:.0f}MB  "
+                  f"ok={row['ok']}")
         failed = failed or not row["ok"]
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1, default=float)

@@ -21,9 +21,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import (ClientRegistry, ClientSpec, FLSimulation, PowerDomain,
-                        ProxyTrainer, Selection, SelectionInputs,
-                        make_strategy, select_clients)
+from repro.core import (ClientRegistry, FLSimulation, ProxyTrainer, Selection,
+                        SelectionInputs, make_strategy, select_clients)
 from repro.data.traces import ScenarioData
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
@@ -33,17 +32,19 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
 def synth_inputs(n_clients: int, n_domains: int = 10, horizon: int = 60,
                  seed: int = 0):
     """A solvable fleet: per-domain energy scales with domain population so
-    selection stays feasible at every size."""
+    selection stays feasible at every size. Built array-first — no
+    per-client Python objects at any fleet size."""
     rng = np.random.default_rng(seed)
-    domains = [PowerDomain(name=f"d{i}") for i in range(n_domains)]
-    clients = [ClientSpec(
-        name=f"c{i:06d}", domain=f"d{i % n_domains}",
-        m_max_capacity=float(rng.uniform(2.0, 8.0)),
-        delta=float(rng.uniform(0.5, 3.0)),
-        n_samples=int(rng.integers(100, 1000)),
-        batches_per_epoch=int(rng.integers(4, 16)))
-        for i in range(n_clients)]
-    reg = ClientRegistry(clients, domains)
+    domain_names = [f"d{i}" for i in range(n_domains)]
+    bpe = rng.integers(4, 16, n_clients)
+    reg = ClientRegistry.from_arrays(
+        delta=rng.uniform(0.5, 3.0, n_clients),
+        capacity=rng.uniform(2.0, 8.0, n_clients),
+        m_min=1.0 * bpe, m_max=5.0 * bpe,
+        n_samples=rng.integers(100, 1000, n_clients),
+        domain_idx=np.arange(n_clients) % n_domains,
+        domain_names=domain_names, name_fmt="c{:06d}",
+        batches_per_epoch=bpe)
     per_dom = n_clients / n_domains
     inp = SelectionInputs(
         registry=reg,
@@ -51,7 +52,7 @@ def synth_inputs(n_clients: int, n_domains: int = 10, horizon: int = 60,
         r_excess=rng.uniform(0.0, 8.0 * per_dom, (n_domains, horizon)),
         sigma=rng.uniform(0.1, 2.0, n_clients),
         rows=np.arange(n_clients),
-        dom=reg.domain_rows([d.name for d in domains]))
+        dom=reg.domain_rows(domain_names))
     return reg, inp
 
 
@@ -89,6 +90,49 @@ def bench_solve_greedy(sizes, n: int = 10, d: int = 60):
                     "eligible": len(eligible), "feasible": res is not None})
         print(f"[greedy-call] C={size:6d}  {wall:7.3f}s  "
               f"eligible={len(eligible)}")
+    return out
+
+
+def bench_rank_memo(sizes, n: int = 10, d_max: int = 60):
+    """Per-probe rank cost across one binary search + final full solve.
+
+    Rank (the O(K log K) lexsort, ~29 ms of a ~35 ms probe at 100k
+    clients pre-memo) depends on d only through the clamped reach column,
+    so the shared probe cache must run it once per *distinct* probe
+    duration: ``rank_builds`` < ``probes`` whenever any duration repeats
+    (re-probe of the minimal feasible d, the final full solve, clamped
+    probes). ``memo_saved_sorts`` is the per-call drop in probe-count ×
+    sort-cost that the memo delivers.
+    """
+    from repro.core.selection import _ProbeCache, find_clients_for_duration
+    out = []
+    for size in sizes:
+        reg, inp = synth_inputs(size)
+        cache = _ProbeCache(inp)
+        t0 = time.perf_counter()
+        lo, hi, found_d = 1, d_max, None
+        while lo <= hi:  # the select_clients binary search, instrumented
+            mid = (lo + hi) // 2
+            res = find_clients_for_duration(
+                inp, mid, n, solver="greedy", cache=cache,
+                feasibility_only=True)
+            if res is not None:
+                found_d, hi = mid, mid - 1
+            else:
+                lo = mid + 1
+        if found_d is not None:  # full solve at the minimal feasible d
+            find_clients_for_duration(inp, found_d, n, solver="greedy",
+                                      cache=cache)
+        wall = time.perf_counter() - t0
+        row = {"n_clients": size, "d": found_d,
+               "probes": cache.rank_queries,
+               "rank_builds": cache.rank_builds,
+               "memo_saved_sorts": cache.rank_queries - cache.rank_builds,
+               "wall_s": wall}
+        out.append(row)
+        print(f"[rank-memo] C={size:6d}  {wall:7.3f}s  "
+              f"probes={row['probes']} sorts={row['rank_builds']} "
+              f"saved={row['memo_saved_sorts']}")
     return out
 
 
@@ -139,6 +183,7 @@ def main():
         "selection_greedy": bench_selection(greedy_sizes, "greedy"),
         "selection_mip": bench_selection(mip_sizes, "mip"),
         "solve_greedy_call": bench_solve_greedy(call_sizes),
+        "rank_memo": bench_rank_memo(call_sizes),
         "execute_round": bench_execute_round(round_sizes),
     }
     ten_k = [r for r in payload["selection_greedy"]
@@ -150,6 +195,9 @@ def main():
     if fifty_k:
         payload["solve_greedy_50k_under_1s"] = bool(
             fifty_k[0]["wall_s"] < 1.0)
+    # probe-count × sort-cost must drop: strictly fewer lexsorts than probes
+    payload["rank_sorts_lt_probes"] = bool(all(
+        r["rank_builds"] < r["probes"] for r in payload["rank_memo"]))
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     print(f"wrote {os.path.abspath(args.out)}")

@@ -1,5 +1,6 @@
 """Scenario study: FedZero vs baselines on the global and co-located solar
-scenarios (paper §5.2, Figure 5).
+scenarios (paper §5.2, Figure 5) — one declarative sweep over strategies
+sharing a single lazily-synthesized ScenarioStore.
 
     PYTHONPATH=src python examples/fedzero_simulation.py [--days 2]
         [--strategies fedzero,random_1.3n,oort_1.3n] [--scenario global]
@@ -8,9 +9,9 @@ import argparse
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (FLSimulation, ProxyTrainer, make_paper_registry,
-                        make_strategy)
-from repro.data.traces import make_scenario
+from repro.core import (ExperimentConfig, FleetSection, RunSection,
+                        ScenarioSection, StrategySection, TrainerSection,
+                        run_sweep)
 
 
 def main():
@@ -24,17 +25,21 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    base = ExperimentConfig(
+        scenario=ScenarioSection(name=args.scenario,
+                                 days=int(max(args.days, 1)), seed=args.seed),
+        fleet=FleetSection(n_clients=100, seed=args.seed),
+        strategy=StrategySection(n=args.n, d_max=60, seed=args.seed),
+        trainer=TrainerSection(k=0.0006, seed=args.seed),
+        run=RunSection(until_step=int(args.days * 24 * 60) - 61,
+                       eval_every=1, seed=args.seed),
+    )
+    names = args.strategies.split(",")
+    summaries = run_sweep([base.with_strategy(name) for name in names])
+
     print(f"{'strategy':14s} {'rounds':>6s} {'dur(min)':>10s} "
           f"{'energy(Wh)':>11s} {'best':>6s} {'t->0.5(h)':>9s}")
-    for name in args.strategies.split(","):
-        sc = make_scenario(args.scenario, n_clients=100,
-                           days=int(max(args.days, 1)), seed=args.seed)
-        reg = make_paper_registry(n_clients=100, seed=args.seed,
-                                  domain_names=sc.domain_names)
-        strat = make_strategy(name, reg, n=args.n, d_max=60, seed=args.seed)
-        trainer = ProxyTrainer(len(reg), k=0.0006)
-        sim = FLSimulation(reg, sc, strat, trainer, eval_every=1)
-        s = sim.run(until_step=int(args.days * 24 * 60) - 61)
+    for name, s in zip(names, summaries):
         t_half = next((t / 60 for t, m, _ in s["metric_curve"] if m >= 0.5),
                       float("nan"))
         print(f"{name:14s} {s['rounds']:6d} "

@@ -1,30 +1,23 @@
 """FedZero quickstart: schedule a federated training on renewable excess
-energy, in ~30 lines.
+energy — one declarative config, one call.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (FLSimulation, ProxyTrainer, make_paper_registry,
-                        make_strategy)
-from repro.data.traces import make_scenario
+from repro.core import (ExperimentConfig, FleetSection, RunSection,
+                        ScenarioSection, StrategySection, TrainerSection,
+                        run_experiment)
 
-# 1. the environment: 10 solar power domains (global scenario), 100 clients
-#    with Alibaba-like background load
-scenario = make_scenario("global", n_clients=100, days=1, seed=0)
-
-# 2. the clients: paper Table 2 hardware profiles (small/mid/large)
-registry = make_paper_registry(n_clients=100, seed=0,
-                               domain_names=scenario.domain_names)
-
-# 3. FedZero: forecast-driven MIP selection + blocklist fairness
-strategy = make_strategy("fedzero", registry, n=10, d_max=60, seed=0)
-
-# 4. run one simulated day
-trainer = ProxyTrainer(len(registry), k=0.001)
-sim = FLSimulation(registry, scenario, strategy, trainer, eval_every=1)
-summary = sim.run(until_step=23 * 60, verbose=True)
+cfg = ExperimentConfig(
+    scenario=ScenarioSection(name="global", days=1, seed=0),   # 10 solar domains
+    fleet=FleetSection(n_clients=100, seed=0),                 # paper Table 2 mix
+    strategy=StrategySection(name="fedzero", n=10, d_max=60, seed=0),
+    trainer=TrainerSection(k=0.001),
+    run=RunSection(until_step=23 * 60, eval_every=1, verbose=True),
+)
+summary = run_experiment(cfg)
 
 print(f"\nrounds: {summary['rounds']}")
 print(f"energy: {summary['total_energy_wh']:.1f} Wh (100% renewable excess)")

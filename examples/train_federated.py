@@ -5,9 +5,10 @@ energy, with FedProx local training — the paper's full loop.
     PYTHONPATH=src python examples/train_federated.py \
         [--rounds 20] [--clients 20] [--strategy fedzero]
 
-Each round: forecast -> MIP selection -> clients train ≥m_min batches under
-their domain's power budget -> FedAvg aggregation -> Oort-utility +
-blocklist update. Prints accuracy on a held-out test set as it converges.
+Declarative config + granular builders: the experiment is an
+``ExperimentConfig`` whose trainer section carries a JaxTrainer factory;
+the registry is retuned to the real dataset's shard sizes between
+``build_registry`` and ``build_experiment``.
 """
 import argparse
 import sys, os
@@ -15,10 +16,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import (FLSimulation, JaxTrainer, make_paper_registry,
-                        make_strategy)
+from repro.core import (ExperimentConfig, FleetSection, JaxTrainer,
+                        RunSection, ScenarioSection, StrategySection,
+                        TrainerSection, build_experiment, build_registry,
+                        build_scenario)
 from repro.data.federated import synthetic_classification
-from repro.data.traces import make_scenario
 from repro.models import ConvNet
 
 
@@ -31,22 +33,30 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    sc = make_scenario("global", n_clients=args.clients, days=7, seed=args.seed)
-    reg = make_paper_registry(n_clients=args.clients, seed=args.seed,
-                              domain_names=sc.domain_names)
+    def jax_trainer(reg):
+        return JaxTrainer(ConvNet(n_classes=10, channels=(16, 32), hw=12),
+                          data, lr=0.05, prox_mu=0.1, seed=args.seed,
+                          max_steps_per_round=30)
+
+    cfg = ExperimentConfig(
+        scenario=ScenarioSection(name="global", days=7, seed=args.seed),
+        fleet=FleetSection(n_clients=args.clients, seed=args.seed),
+        strategy=StrategySection(name=args.strategy, n=args.n, d_max=60,
+                                 seed=args.seed),
+        trainer=TrainerSection(factory=jax_trainer),
+        run=RunSection(max_rounds=args.rounds, eval_every=1, seed=args.seed),
+    )
+    sc = build_scenario(cfg)
+    reg = build_registry(cfg, sc)
     data = synthetic_classification(
         args.clients, reg.client_names, n_classes=10, n_samples=4000,
         hw=12, alpha=0.5, seed=args.seed)
-    for c in reg.client_names:
+    for c in reg.client_names:  # retune fleet to the real shard sizes
         reg.clients[c].n_samples = data.n_samples(c)
         reg.clients[c].batches_per_epoch = max(1, data.n_samples(c) // 10)
+    reg.refresh_arrays()
 
-    model = ConvNet(n_classes=10, channels=(16, 32), hw=12)
-    trainer = JaxTrainer(model, data, lr=0.05, prox_mu=0.1, seed=args.seed,
-                         max_steps_per_round=30)
-    strat = make_strategy(args.strategy, reg, n=args.n, d_max=60,
-                          seed=args.seed)
-    sim = FLSimulation(reg, sc, strat, trainer, eval_every=1, seed=args.seed)
+    sim = build_experiment(cfg, scenario=sc, registry=reg)
     summary = sim.run(max_rounds=args.rounds, verbose=True)
 
     print(f"\nfinal accuracy: {summary['best_metric']:.3f} "

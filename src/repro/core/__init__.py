@@ -11,6 +11,10 @@ from .simulation import FLSimulation
 from .trainers import JaxTrainer, ProxyTrainer
 from .profiles import (make_paper_registry, paper_profile, tpu_site_profile,
                        registry_from_roofline)
+from .experiment import (ExperimentConfig, FleetSection, RunSection,
+                         ScenarioSection, StrategySection, TrainerSection,
+                         build_experiment, build_registry, build_scenario,
+                         build_trainer, run_experiment, run_sweep)
 
 __all__ = [
     "ClientRegistry", "ClientSpec", "PowerDomain", "RoundResult", "Selection",
@@ -21,4 +25,7 @@ __all__ = [
     "FLSimulation", "JaxTrainer", "ProxyTrainer",
     "make_paper_registry", "paper_profile", "tpu_site_profile",
     "registry_from_roofline",
+    "ExperimentConfig", "ScenarioSection", "FleetSection", "StrategySection",
+    "TrainerSection", "RunSection", "build_experiment", "build_registry",
+    "build_scenario", "build_trainer", "run_experiment", "run_sweep",
 ]

@@ -8,14 +8,12 @@ computed from the compiled step's roofline time and chip power.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
-import os
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 
-from .types import ClientRegistry, ClientSpec, PowerDomain
+from .types import ClientRegistry
 
 # paper Table 2: max energy (W) and samples/min per workload
 PAPER_CLIENT_TYPES = {
@@ -44,28 +42,38 @@ def make_paper_registry(n_clients: int = 100, n_domains: int = 10,
                         domain_names: Optional[List[str]] = None,
                         max_output: float = 800.0) -> ClientRegistry:
     """The paper's experimental setup: 100 clients of 3 random types over
-    10 power domains with 800 W peak each."""
+    10 power domains with 800 W peak each.
+
+    Fleet synthesis is fully vectorized onto
+    :meth:`ClientRegistry.from_arrays`: the RNG draw order is unchanged
+    from the per-spec implementation (same ``integers`` + ``choice``
+    calls), but no per-client Python object is ever constructed, so a
+    1M-client registry builds in well under a second and a few tens of MB
+    (see benchmarks/e2e_simulation.py, ``1m_registry``).
+    """
     rng = np.random.default_rng(seed)
     if domain_names is None:
         domain_names = [f"domain_{i}" for i in range(n_domains)]
-    domains = [PowerDomain(name=d, max_output=max_output) for d in domain_names]
     if samples_per_client is None:
         samples_per_client = rng.integers(200, 1200, n_clients)
     types = rng.choice(list(PAPER_CLIENT_TYPES), n_clients)
-    clients = []
-    for i in range(n_clients):
-        m_c, delta = paper_profile(types[i], workload)
-        ns = int(samples_per_client[i])
-        clients.append(ClientSpec(
-            name=f"client_{i:03d}",
-            domain=domain_names[i % len(domain_names)],
-            m_max_capacity=m_c,
-            delta=delta,
-            n_samples=ns,
-            batches_per_epoch=max(1, -(-ns // BATCH_SIZE)),
-            min_epochs=min_epochs, max_epochs=max_epochs,
-        ))
-    return ClientRegistry(clients, domains)
+    type_names = np.array(list(PAPER_CLIENT_TYPES))
+    profiles = np.array([paper_profile(t, workload) for t in type_names])
+    type_idx = (np.asarray(types)[:, None] == type_names[None, :]).argmax(1)
+    ns = np.asarray(samples_per_client, dtype=np.int64)
+    bpe = np.maximum(1, -(-ns // BATCH_SIZE))
+    return ClientRegistry.from_arrays(
+        delta=profiles[type_idx, 1],
+        capacity=profiles[type_idx, 0],
+        m_min=min_epochs * bpe,
+        m_max=max_epochs * bpe,
+        n_samples=ns,
+        domain_idx=np.arange(n_clients) % len(domain_names),
+        domain_names=list(domain_names),
+        name_fmt="client_{:03d}",
+        max_output=max_output,
+        batches_per_epoch=bpe,
+        min_epochs=min_epochs, max_epochs=max_epochs)
 
 
 # ---------------------------------------------------------------------------
@@ -98,25 +106,35 @@ def registry_from_roofline(roofline_json: str, shape: str = "train_4k",
                            n_sites_per_arch: int = 1, chips_per_site: int = 256,
                            seed: int = 0) -> ClientRegistry:
     """Build an FL registry whose clients are pod-slice sites running the
-    assigned architectures, profiled from the dry-run roofline table."""
+    assigned architectures, profiled from the dry-run roofline table.
+
+    Array-first note: ``n_samples`` is now one batched ``integers`` draw
+    instead of one scalar draw per site, so per-site values differ from
+    the pre-array-first implementation at the same seed (same
+    distribution; nothing pins these values — unlike
+    ``make_paper_registry``, whose draw order is golden-pinned).
+    """
     with open(roofline_json) as f:
         rows = json.load(f)
     rng = np.random.default_rng(seed)
-    clients, domains, i = [], [], 0
+    names, caps, deltas = [], [], []
     for row in rows:
         if row.get("shape") != shape or row.get("mesh") != "single_pod":
             continue
         m_c, delta = tpu_site_profile(row["hlo_flops"], row["hlo_bytes"],
                                       chips_per_site, 1)
         for s in range(n_sites_per_arch):
-            dom = f"grid_{i % 10}"
-            ns = int(rng.integers(5_000, 50_000))
-            clients.append(ClientSpec(
-                name=f"site-{row['arch']}-{s}", domain=dom,
-                m_max_capacity=m_c, delta=delta, n_samples=ns,
-                batches_per_epoch=max(1, ns // 1024),
-            ))
-            i += 1
-    domains = [PowerDomain(name=f"grid_{k}", max_output=chips_per_site * V5E_CHIP_W * 2)
-               for k in range(min(10, len(clients)))]
-    return ClientRegistry(clients, domains)
+            names.append(f"site-{row['arch']}-{s}")
+            caps.append(m_c)
+            deltas.append(delta)
+    n = len(names)
+    ns = rng.integers(5_000, 50_000, n)
+    bpe = np.maximum(1, ns // 1024)
+    n_domains = min(10, n)
+    return ClientRegistry.from_arrays(
+        delta=np.array(deltas), capacity=np.array(caps),
+        m_min=1.0 * bpe, m_max=5.0 * bpe, n_samples=ns,
+        domain_idx=np.arange(n) % 10,
+        domain_names=[f"grid_{k}" for k in range(n_domains)],
+        names=names, max_output=chips_per_site * V5E_CHIP_W * 2,
+        batches_per_epoch=bpe)

@@ -90,6 +90,10 @@ class FLSimulation:
         groups = [(pi, np.nonzero(dom == pi)[0])
                   for pi in dict.fromkeys(dom.tolist())]
         carbon_g = 0.0  # grid-fallback rounds only
+        # carbon accounting reads the whole round window in one gather
+        # (column j == carbon_at(now + j) exactly; per-step parity pinned
+        # by tests/test_grid_fallback.py)
+        carbon_win = sc.carbon_window(self.now, self.d_max) if grid else None
         need_done = (self.strategy.n if self.strategy.over_select > 1.0
                      else n_sel)
         duration = self.d_max
@@ -121,7 +125,7 @@ class FLSimulation:
                 step_e = nb * delta[mem]
                 energy_used[mem] += step_e
                 if grid:
-                    ci = float(sc.carbon_at(t)[pi])
+                    ci = float(carbon_win[pi, step])
                     # Wmin -> kWh: /60/1000
                     carbon_g += float(step_e.sum()) / 60e3 * ci
                 newly = mem[~done_min[mem] & (computed[mem] >= m_min[mem])]

@@ -287,8 +287,22 @@ class FedZeroStrategy(BaseStrategy):
         self.blocklist.record_participation(contributors[enter])
 
 
-def make_strategy(name: str, registry: ClientRegistry, **kw) -> BaseStrategy:
-    """Factory covering the paper's seven configurations."""
+def make_strategy(name, registry: ClientRegistry, **kw) -> BaseStrategy:
+    """Factory covering the paper's seven configurations.
+
+    ``name`` is either a strategy key (below) or a declarative strategy
+    config section (any object with ``name``/``n``/``d_max``/``seed``/
+    ``options`` attributes, e.g. ``experiment.StrategySection``) — the
+    experiment API routes through here so config-built strategies and
+    hand-wired ones are the same object. Explicit ``kw`` override the
+    section's ``options``.
+    """
+    if not isinstance(name, str):  # a strategy config section
+        section = name
+        merged = dict(section.options)
+        merged.update(kw)
+        return make_strategy(section.name, registry, n=section.n,
+                             d_max=section.d_max, seed=section.seed, **merged)
     table = {
         "fedzero": lambda: FedZeroStrategy(registry, **kw),
         "random": lambda: RandomStrategy(registry, **kw),

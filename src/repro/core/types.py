@@ -88,46 +88,144 @@ class RoundResult:
 
 
 class ClientRegistry:
-    """Owns the canonical name↔row maps and the SoA spec mirrors.
+    """Owns the canonical name↔row maps and the SoA spec columns.
 
     Rows are assigned by construction order and never change; the
     scheduling stack identifies clients exclusively by these rows. The
-    structure-of-arrays mirrors (``delta_arr``, ``capacity_arr``,
+    structure-of-arrays columns (``delta_arr``, ``capacity_arr``,
     ``m_min_arr``, ``m_max_arr``, ``n_samples_arr``) align with
     ``client_names``; the simulation step loop and the selection solvers
     index them with integer row arrays instead of doing per-client
     attribute/dict lookups, which is what makes 100k-client rounds
-    tractable. Name-based accessors (``rows``, ``row_of``, ``name_of``)
-    are the I/O boundary — construction and reporting only.
+    tractable.
+
+    Array-first construction: :meth:`from_arrays` is the canonical
+    constructor — it adopts the SoA columns directly, allocates **no**
+    per-client Python objects, and generates names/dicts lazily only at
+    the I/O boundary (``rows``, ``name_of``, ``clients``, ``domains``,
+    ``summary()`` reporting). A 1M-client registry is five float columns
+    plus one int column (~50 MB) built in milliseconds. The legacy
+    spec-list constructor (``ClientRegistry(clients, domains)``) survives
+    as a compatibility shim that derives the columns from the specs.
+
+    :class:`ClientSpec` access on an array-built registry is an
+    **on-demand view**: the first touch of ``clients`` materializes spec
+    objects from the columns (O(C) Python — avoid on huge fleets) and
+    from then on the specs are the mutable source of truth, exactly like
+    the legacy constructor: field edits are reflected lazily before the
+    first column read, or via ``refresh_arrays()`` afterwards.
     """
 
     def __init__(self, clients: List[ClientSpec], domains: List[PowerDomain]):
-        self.clients: Dict[str, ClientSpec] = {c.name: c for c in clients}
-        self.domains: Dict[str, PowerDomain] = {p.name: p for p in domains}
-        for p in self.domains.values():
+        # legacy spec-backed construction (compat shim): specs canonical,
+        # columns derived lazily so the documented tweak-after-construction
+        # pattern (test_system.py, train_federated.py) keeps working
+        self._specs: Optional[Dict[str, ClientSpec]] = \
+            {c.name: c for c in clients}
+        self._domains_dict: Optional[Dict[str, PowerDomain]] = \
+            {p.name: p for p in domains}
+        for p in self._domains_dict.values():
             p.clients = [c.name for c in clients if c.domain == p.name]
-        self.client_names = [c.name for c in clients]
-        self.domain_of = {c.name: c.domain for c in clients}
-        self.row_of = {n: i for i, n in enumerate(self.client_names)}
-        self._soa: Optional[tuple] = None
+        self._names: Optional[List[str]] = [c.name for c in clients]
+        self._name_fmt = "client_{:03d}"
+        self._n = len(clients)
+        self._domain_names = [p.name for p in domains]
+        self._max_output = domains[0].max_output if domains else 800.0
+        self._domain_idx: Optional[np.ndarray] = None
+        self._domain_of: Optional[Dict[str, str]] = \
+            {c.name: c.domain for c in clients}
+        self._row_of: Optional[Dict[str, int]] = \
+            {n: i for i, n in enumerate(self._names)}
+        self._cols: Optional[tuple] = None
+        self._view_fields: Optional[tuple] = None
         self._domain_rows_cache: Dict[tuple, np.ndarray] = {}
 
-    # The SoA mirrors build lazily on first use, so the documented pattern
-    # of tweaking ClientSpec fields right after construction (e.g. matching
-    # n_samples/batches_per_epoch to a real dataset, see test_system.py) is
-    # reflected. After mutating specs *once arrays have been used*, call
-    # refresh_arrays().
+    @classmethod
+    def from_arrays(cls, *, delta: np.ndarray, capacity: np.ndarray,
+                    m_min: np.ndarray, m_max: np.ndarray,
+                    n_samples: np.ndarray, domain_idx: np.ndarray,
+                    domain_names: Sequence[str],
+                    names: Optional[Sequence[str]] = None,
+                    name_fmt: str = "client_{:03d}",
+                    max_output: float = 800.0,
+                    batches_per_epoch: Optional[np.ndarray] = None,
+                    min_epochs=1.0, max_epochs=5.0) -> "ClientRegistry":
+        """Canonical array-first constructor: adopt SoA columns directly.
+
+        ``domain_idx[c]`` indexes ``domain_names``; ``names`` (or lazily
+        ``name_fmt.format(row)``) exists only for the I/O boundary and is
+        not generated here. ``batches_per_epoch``/``min_epochs``/
+        ``max_epochs`` parameterize the on-demand :class:`ClientSpec`
+        view only — when omitted, view specs carry ``batches_per_epoch=1``
+        with ``min/max_epochs`` equal to the batch bounds, so their
+        derived properties still match the columns exactly. When given,
+        they must reproduce the adopted columns exactly
+        (``m_min == min_epochs·bpe``, ``m_max == max_epochs·bpe``) —
+        enforced here, because a later ``clients`` view access re-derives
+        the columns from the view: custom batch bounds that don't factor
+        this way should simply omit ``batches_per_epoch``.
+        """
+        self = cls.__new__(cls)
+        n = len(delta)
+        cols = tuple(np.ascontiguousarray(a, dtype=float)
+                     for a in (delta, capacity, m_min, m_max, n_samples))
+        for a in cols:
+            if a.shape != (n,):
+                raise ValueError("column shape mismatch")
+        if not np.array_equal(cols[4], np.trunc(cols[4])):
+            # the spec view holds int(n_samples); fractional counts would
+            # be silently truncated on a later `clients` view round-trip
+            raise ValueError("n_samples must be integral")
+        self._cols = cols
+        self._domain_idx = np.ascontiguousarray(domain_idx, dtype=int)
+        if self._domain_idx.shape != (n,):
+            raise ValueError("domain_idx shape mismatch")
+        self._domain_names = list(domain_names)
+        self._max_output = float(max_output)
+        self._n = n
+        self._names = list(names) if names is not None else None
+        if self._names is not None and len(self._names) != n:
+            raise ValueError("names length mismatch")
+        self._name_fmt = name_fmt
+        self._specs = None
+        self._domains_dict = None
+        self._domain_of = None
+        self._row_of = None
+        if batches_per_epoch is not None:
+            # the spec view re-derives m_min/m_max as epochs × bpe; reject
+            # inconsistent view parameters now rather than silently
+            # rewriting the scheduling columns on first `clients` access
+            bpe = np.asarray(batches_per_epoch)
+            for given, epochs, label in ((cols[2], min_epochs, "m_min"),
+                                         (cols[3], max_epochs, "m_max")):
+                if not np.array_equal(np.asarray(epochs, dtype=float) * bpe,
+                                      given):
+                    raise ValueError(
+                        f"{label} must equal "
+                        f"{label.replace('m_', '')}_epochs * "
+                        f"batches_per_epoch for the spec view; omit "
+                        f"batches_per_epoch for custom batch bounds")
+        self._view_fields = (batches_per_epoch, min_epochs, max_epochs)
+        self._domain_rows_cache: Dict[tuple, np.ndarray] = {}
+        return self
+
+    # -- SoA columns ------------------------------------------------------
+    # Spec-backed registries build the columns lazily on first use, so the
+    # documented pattern of tweaking ClientSpec fields right after
+    # construction (e.g. matching n_samples/batches_per_epoch to a real
+    # dataset, see test_system.py) is reflected. After mutating specs
+    # *once columns have been read*, call refresh_arrays().
     def _arrays(self) -> tuple:
-        if self._soa is None:
-            specs = [self.clients[n] for n in self.client_names]
-            self._soa = (
+        if self._cols is None:
+            specs = [self._specs[n] for n in self.client_names]
+            self._cols = (
                 np.array([s.delta for s in specs], dtype=float),
                 np.array([s.m_max_capacity for s in specs], dtype=float),
                 np.array([s.m_min_batches for s in specs], dtype=float),
                 np.array([s.m_max_batches for s in specs], dtype=float),
                 np.array([s.n_samples for s in specs], dtype=float),
             )
-        return self._soa
+        return self._cols
 
     @property
     def delta_arr(self) -> np.ndarray:
@@ -150,39 +248,133 @@ class ClientRegistry:
         return self._arrays()[4]
 
     def refresh_arrays(self):
-        """Invalidate the cached SoA mirrors after mutating ClientSpecs."""
-        self._soa = None
+        """Invalidate the cached SoA columns after mutating ClientSpecs."""
+        if self._specs is not None:
+            self._cols = None
+
+    # -- ClientSpec compatibility view ------------------------------------
+    def _materialize_specs(self) -> Dict[str, ClientSpec]:
+        """Build the per-client spec view from the columns (compat only).
+
+        After this call the specs are the mutable source of truth: the
+        columns re-derive from them (lazily, or via ``refresh_arrays``),
+        preserving the legacy mutate-after-construction contract. O(C)
+        Python objects — never called by the scheduling path.
+        """
+        if self._specs is None:
+            delta, cap, m_min, m_max, ns = self._arrays()
+            bpe, min_ep, max_ep = self._view_fields
+            names = self.client_names
+            dom_names = self._domain_names
+            dom_idx = self._domain_idx
+            specs = {}
+            for i in range(self._n):
+                if bpe is not None:
+                    b = int(bpe[i])
+                    lo = float(min_ep if np.isscalar(min_ep) else min_ep[i])
+                    hi = float(max_ep if np.isscalar(max_ep) else max_ep[i])
+                else:  # no epoch structure given: encode the bounds directly
+                    b, lo, hi = 1, float(m_min[i]), float(m_max[i])
+                specs[names[i]] = ClientSpec(  # compat spec view (I/O boundary)
+                    name=names[i], domain=dom_names[dom_idx[i]],
+                    m_max_capacity=float(cap[i]), delta=float(delta[i]),
+                    n_samples=int(ns[i]), batches_per_epoch=b,
+                    min_epochs=lo, max_epochs=hi)
+            self._specs = specs
+            self._cols = None  # specs now canonical: columns re-derive lazily
+        return self._specs
+
+    @property
+    def clients(self) -> Dict[str, ClientSpec]:
+        """name → :class:`ClientSpec` view (materialized on demand)."""
+        return self._materialize_specs()
+
+    @property
+    def domains(self) -> Dict[str, PowerDomain]:
+        """name → :class:`PowerDomain` view (materialized on demand)."""
+        if self._domains_dict is None:
+            names = self.client_names
+            dom_clients: Dict[str, List[str]] = \
+                {d: [] for d in self._domain_names}
+            for i, di in enumerate(self._domain_idx):
+                dom_clients[self._domain_names[di]].append(names[i])
+            self._domains_dict = {
+                d: PowerDomain(name=d, clients=dom_clients[d],
+                               max_output=self._max_output)
+                for d in self._domain_names}
+        return self._domains_dict
 
     # -- name↔row boundary (construction / reporting only) ---------------
+    @property
+    def client_names(self) -> List[str]:
+        """Positional name list (generated on demand for array-built
+        registries — reporting boundary, not the scheduling path)."""
+        if self._names is None:
+            fmt = self._name_fmt
+            self._names = [fmt.format(i) for i in range(self._n)]
+        return self._names
+
+    @property
+    def row_of(self) -> Dict[str, int]:
+        if self._row_of is None:
+            self._row_of = {n: i for i, n in enumerate(self.client_names)}
+        return self._row_of
+
+    @property
+    def domain_of(self) -> Dict[str, str]:
+        if self._domain_of is None:
+            self._domain_of = {
+                n: self._domain_names[di]
+                for n, di in zip(self.client_names, self._domain_idx)}
+        return self._domain_of
+
     def rows(self, names: Sequence[str]) -> np.ndarray:
         """Registry row index per name (I/O boundary gather key)."""
-        if names is self.client_names:
-            return np.arange(len(self.client_names))
-        return np.array([self.row_of[n] for n in names], dtype=int)
+        if names is self._names:
+            return np.arange(self._n)
+        row_of = self.row_of
+        return np.array([row_of[n] for n in names], dtype=int)
 
     def name_of(self, row: int) -> str:
         return self.client_names[int(row)]
 
     def names_of(self, rows: Sequence[int]) -> List[str]:
-        return [self.client_names[int(r)] for r in rows]
+        names = self.client_names
+        return [names[int(r)] for r in rows]
 
     def domain_rows(self, domain_order: List[str]) -> np.ndarray:
         """[C] index of each client's domain within ``domain_order``.
 
         Cached per domain ordering: simulations/strategies call this every
-        round with the scenario's (stable) domain list.
+        round with the scenario's (stable) domain list. Array-built
+        registries answer their native ordering straight from the
+        ``domain_idx`` column — no name dict is ever materialized.
         """
         key = tuple(domain_order)
         cached = self._domain_rows_cache.get(key)
         if cached is None:
-            idx = {p: i for i, p in enumerate(domain_order)}
-            cached = np.array([idx[self.domain_of[n]]
-                               for n in self.client_names], dtype=int)
+            if self._domain_idx is not None:
+                if list(domain_order) == self._domain_names:
+                    # read-only view: the canonical identity column must
+                    # not be mutable through a lookup's return value
+                    cached = self._domain_idx.view()
+                    cached.flags.writeable = False
+                else:
+                    idx = {p: i for i, p in enumerate(domain_order)}
+                    perm = np.array([idx[d] for d in self._domain_names],
+                                    dtype=int)
+                    cached = perm[self._domain_idx]
+            else:
+                idx = {p: i for i, p in enumerate(domain_order)}
+                domain_of = self.domain_of
+                cached = np.array([idx[domain_of[n]]
+                                   for n in self.client_names], dtype=int)
             self._domain_rows_cache[key] = cached
         return cached
 
     def domain_clients(self, domain: str) -> List[ClientSpec]:
-        return [self.clients[n] for n in self.domains[domain].clients]
+        clients = self.clients
+        return [clients[n] for n in self.domains[domain].clients]
 
     def __len__(self):
-        return len(self.clients)
+        return self._n

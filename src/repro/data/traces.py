@@ -471,6 +471,22 @@ class ScenarioStore:
         cs = self._cs["carbon"]
         return self._chunk("carbon", t // cs)[:, t % cs]
 
+    def carbon_window(self, start: int, horizon: int) -> np.ndarray:
+        """[P, w] carbon-intensity columns for steps ``start .. start+h``
+        (clipped to the trace end, ``w = min(horizon, n_steps - start)``).
+
+        One chunk gather per round instead of a ``carbon_at`` read per
+        step — column j equals ``carbon_at(start + j)`` exactly (see
+        tests/test_grid_fallback.py for the per-step parity pin).
+        """
+        stop = min(start + horizon, self._n_steps)
+        width = max(stop - start, 0)
+        if not self._has_carbon:
+            return np.full((len(self.domain_names), width), 400.0)
+        if width == 0:
+            return np.zeros((len(self.domain_names), 0), dtype=np.float32)
+        return self._window("carbon", start, stop)
+
 
 # Drop-in name for loading real traces / test fixtures from arrays.
 ScenarioData = ScenarioStore

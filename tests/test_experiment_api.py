@@ -1,0 +1,282 @@
+"""Pins for the declarative experiment API (repro.core.experiment).
+
+1. **Golden parity** — ``run_experiment`` on configs matching
+   ``tests/golden_summary_rowid.json``'s metadata must reproduce the
+   pre-refactor engine summaries *exactly*: the declarative path and the
+   hand-wired four-step path are the same computation, bit for bit.
+2. **Quickstart equivalence** — the quickstart example's config equals
+   manual ``make_scenario → make_paper_registry → make_strategy →
+   FLSimulation`` wiring, field for field.
+3. **Sweep sharing** — ``run_sweep`` over strategies sharing one
+   ScenarioStore matches independently built runs seed for seed.
+4. **Array-first registry** — ``from_arrays`` round-trips the spec view,
+   and the view write-back (mutate + ``refresh_arrays``) keeps the legacy
+   retuning contract.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (ClientRegistry, ExperimentConfig, FleetSection,
+                        FLSimulation, ProxyTrainer, RunSection,
+                        ScenarioSection, StrategySection, TrainerSection,
+                        make_paper_registry, make_strategy, run_experiment,
+                        run_sweep)
+from repro.data.traces import make_scenario
+
+from test_rowid_parity import DOMAINS, GOLDEN, META, build_traces
+
+GOLDEN_CASES = [
+    ("fedzero_greedy_noerr", "fedzero", "none", {"solver": "greedy"}),
+    ("oort", "oort", "realistic", {}),
+    ("random_1.3n", "random_1.3n", "realistic", {}),
+]
+
+
+def golden_config(strategy, error, options) -> ExperimentConfig:
+    """Declarative form of the golden fixture's hand-wired runner."""
+    excess, util = build_traces()
+    return ExperimentConfig(
+        scenario=ScenarioSection(excess=excess, util=util,
+                                 domain_names=tuple(DOMAINS),
+                                 seed=META["run_seed"], error=error),
+        fleet=FleetSection(n_clients=META["n_clients"],
+                           seed=META["registry_seed"]),
+        strategy=StrategySection(name=strategy, n=META["n"],
+                                 d_max=META["d_max"], seed=META["run_seed"],
+                                 options=dict(options)),
+        trainer=TrainerSection(k=META["proxy_k"], seed=META["run_seed"]),
+        run=RunSection(until_step=META["until_step"],
+                       eval_every=META["eval_every"], seed=META["run_seed"]))
+
+
+@pytest.mark.parametrize("key,strategy,error,kw", GOLDEN_CASES)
+def test_run_experiment_reproduces_golden_summary(key, strategy, error, kw):
+    s = run_experiment(golden_config(strategy, error, kw))
+    s = json.loads(json.dumps(s))  # tuples -> lists, numpy -> python
+    golden = GOLDEN[key]
+    assert set(s) == set(golden)
+    for field in sorted(golden):
+        assert s[field] == golden[field], field
+
+
+def quickstart_config() -> ExperimentConfig:
+    """examples/quickstart.py's configuration."""
+    return ExperimentConfig(
+        scenario=ScenarioSection(name="global", days=1, seed=0),
+        fleet=FleetSection(n_clients=100, seed=0),
+        strategy=StrategySection(name="fedzero", n=10, d_max=60, seed=0),
+        trainer=TrainerSection(k=0.001),
+        run=RunSection(until_step=23 * 60, eval_every=1))
+
+
+def test_quickstart_config_matches_manual_wiring():
+    """run_experiment(quickstart_cfg) == the four-step construction it
+    replaced, summary-for-summary."""
+    declarative = run_experiment(quickstart_config())
+
+    sc = make_scenario("global", n_clients=100, days=1, seed=0)
+    reg = make_paper_registry(n_clients=100, seed=0,
+                              domain_names=sc.domain_names)
+    strat = make_strategy("fedzero", reg, n=10, d_max=60, seed=0)
+    trainer = ProxyTrainer(len(reg), k=0.001)
+    sim = FLSimulation(reg, sc, strat, trainer, eval_every=1)
+    manual = sim.run(until_step=23 * 60)
+
+    assert declarative == manual
+    assert declarative["rounds"] >= 1
+
+
+def test_sweep_shared_store_matches_independent_runs():
+    """Two strategies sharing one ScenarioStore must match runs that each
+    build their own store, seed for seed."""
+    base = ExperimentConfig(
+        scenario=ScenarioSection(name="global", days=1, seed=7),
+        fleet=FleetSection(n_clients=40, seed=7),
+        strategy=StrategySection(n=4, d_max=60, seed=7,
+                                 options={"solver": "greedy"}),
+        trainer=TrainerSection(k=0.001, seed=7),
+        run=RunSection(until_step=12 * 60, eval_every=1, seed=7))
+    cfgs = [base, base.with_strategy("oort")]
+    assert cfgs[0].scenario is cfgs[1].scenario  # one store in the sweep
+
+    swept = run_sweep(cfgs)
+    independent = [run_experiment(c) for c in cfgs]
+    assert swept == independent
+    assert {s["strategy"] for s in swept} == {"fedzero", "oort"}
+    assert all(s["rounds"] >= 1 for s in swept)
+
+
+def test_sweep_accepts_lazy_iterables():
+    """The share caches key by section object identity, so run_sweep must
+    materialize a generator input — consumed configs' sections could
+    otherwise be freed and their ids reused, aliasing unrelated stores."""
+    def gen():
+        for seed in (1, 2):
+            yield ExperimentConfig(
+                scenario=ScenarioSection(name="global", days=1, seed=seed),
+                fleet=FleetSection(n_clients=30, seed=seed),
+                strategy=StrategySection(n=3, seed=seed,
+                                         options={"solver": "greedy"}),
+                run=RunSection(until_step=8 * 60, seed=seed))
+    lazy = run_sweep(gen())
+    eager = run_sweep(list(gen()))
+    assert lazy == eager
+    assert lazy[0] != lazy[1]  # different seeds really ran differently
+
+
+def test_sweep_does_not_share_across_fleet_sizes():
+    """Same scenario section, different n_clients: the util panel shapes
+    differ, so the sweep must build separate stores (and still run)."""
+    scenario = ScenarioSection(name="global", days=1, seed=3)
+    cfgs = [ExperimentConfig(
+        scenario=scenario, fleet=FleetSection(n_clients=c, seed=3),
+        strategy=StrategySection(n=3, seed=3, options={"solver": "greedy"}),
+        run=RunSection(until_step=8 * 60, seed=3))
+        for c in (30, 50)]
+    summaries = run_sweep(cfgs)
+    assert len(summaries[0]["participation"]) == 30
+    assert len(summaries[1]["participation"]) == 50
+
+
+# ---------------------------------------------------------------------------
+# array-first registry construction
+# ---------------------------------------------------------------------------
+
+
+def test_from_arrays_roundtrips_spec_view():
+    reg = make_paper_registry(n_clients=25, seed=1)
+    delta = reg.delta_arr.copy()
+    m_min = reg.m_min_arr.copy()
+    ns = reg.n_samples_arr.copy()
+    # the compat view materializes lazily and matches the columns
+    specs = reg.clients
+    assert len(specs) == 25
+    for i, name in enumerate(reg.client_names):
+        assert specs[name].delta == delta[i]
+        assert specs[name].m_min_batches == m_min[i]
+        assert specs[name].n_samples == int(ns[i])
+        assert specs[name].domain == reg.domain_of[name]
+    # columns re-derive from the view bit-identically
+    np.testing.assert_array_equal(reg.delta_arr, delta)
+    np.testing.assert_array_equal(reg.m_min_arr, m_min)
+
+
+def test_from_arrays_spec_view_writeback():
+    """The legacy retuning contract (test_system.py/train_federated.py)
+    holds on array-built registries: mutate the view, refresh, and the
+    columns follow."""
+    reg = make_paper_registry(n_clients=10, seed=0)
+    name = reg.client_names[0]
+    reg.clients[name].n_samples = 7777
+    reg.clients[name].batches_per_epoch = 99
+    reg.refresh_arrays()
+    assert reg.n_samples_arr[0] == 7777.0
+    assert reg.m_min_arr[0] == pytest.approx(
+        99 * reg.clients[name].min_epochs)
+
+
+def test_from_arrays_rejects_inconsistent_view_parameters():
+    """Batch bounds that don't factor as epochs × batches_per_epoch must
+    be rejected at construction — the spec view would otherwise silently
+    rewrite the scheduling columns on first `clients` access."""
+    n = 4
+    kw = dict(delta=np.ones(n), capacity=np.ones(n), n_samples=np.ones(n),
+              domain_idx=np.zeros(n, dtype=int), domain_names=["d0"])
+    with pytest.raises(ValueError, match="batches_per_epoch"):
+        ClientRegistry.from_arrays(
+            m_min=np.full(n, 3.0), m_max=np.full(n, 20.0),
+            batches_per_epoch=np.full(n, 8), **kw)
+    # custom bounds without bpe are fine, and the view encodes them
+    reg = ClientRegistry.from_arrays(m_min=np.full(n, 3.0),
+                                     m_max=np.full(n, 20.0), **kw)
+    spec = reg.clients[reg.client_names[0]]
+    assert spec.m_min_batches == 3.0 and spec.m_max_batches == 20.0
+    assert reg.m_min_arr[0] == 3.0 and reg.m_max_arr[0] == 20.0
+
+
+def test_build_registry_rejects_fleet_scenario_size_mismatch():
+    """Explicit-trace configs whose util panel disagrees with the fleet
+    size must fail fast at build time, not IndexError mid-round."""
+    from repro.core import build_experiment
+
+    rng = np.random.default_rng(0)
+    cfg = ExperimentConfig(
+        scenario=ScenarioSection(excess=rng.uniform(0, 800, (2, 100)),
+                                 util=rng.uniform(0, 1, (60, 100)),
+                                 domain_names=("a", "b")),
+        fleet=FleetSection(n_clients=100))
+    with pytest.raises(ValueError, match="util panel"):
+        build_experiment(cfg)
+
+
+def test_sweep_private_registry_for_trainer_factories():
+    """A trainer factory may retune the registry it receives, so factory
+    configs must not share a registry build; factory-less configs do."""
+    scenario = ScenarioSection(name="global", days=1, seed=2)
+    fleet = FleetSection(n_clients=20, seed=2)
+    strat = StrategySection(n=3, seed=2, options={"solver": "greedy"})
+    run = RunSection(until_step=60, seed=2)
+    shared = [ExperimentConfig(scenario=scenario, fleet=fleet,
+                               strategy=strat, run=run) for _ in range(2)]
+    factory = TrainerSection(
+        factory=lambda reg: ProxyTrainer(len(reg), k=0.003))
+    private = [ExperimentConfig(scenario=scenario, fleet=fleet,
+                                strategy=strat, trainer=factory, run=run)
+               for _ in range(2)]
+    sims = []
+    run_sweep(shared + private, sims_out=sims)
+    assert sims[0].registry is sims[1].registry
+    assert sims[2].registry is not sims[3].registry
+    assert sims[2].scenario is sims[3].scenario  # store still shared
+
+
+def test_from_arrays_rejects_fractional_n_samples():
+    n = 3
+    with pytest.raises(ValueError, match="integral"):
+        ClientRegistry.from_arrays(
+            delta=np.ones(n), capacity=np.ones(n), m_min=np.ones(n),
+            m_max=np.ones(n), n_samples=np.array([10.7, 3.0, 4.0]),
+            domain_idx=np.zeros(n, dtype=int), domain_names=["d0"])
+
+
+def test_domain_rows_fast_path_is_read_only():
+    """The native-ordering lookup must not expose the canonical identity
+    column to in-place mutation."""
+    reg = make_paper_registry(n_clients=12, seed=0)
+    dr = reg.domain_rows(reg._domain_names)
+    with pytest.raises(ValueError):
+        dr[0] = 99
+
+
+def test_from_arrays_equals_legacy_spec_constructor():
+    """Same fleet through both constructors → identical columns, names,
+    domain maps."""
+    from repro.core import ClientSpec, PowerDomain
+
+    rng = np.random.default_rng(5)
+    n, doms = 30, [f"d{i}" for i in range(4)]
+    bpe = rng.integers(2, 12, n)
+    delta = rng.uniform(0.5, 3.0, n)
+    cap = rng.uniform(2.0, 8.0, n)
+    ns = rng.integers(100, 900, n)
+    legacy = ClientRegistry(
+        [ClientSpec(name=f"client_{i:03d}", domain=doms[i % 4],
+                    m_max_capacity=float(cap[i]), delta=float(delta[i]),
+                    n_samples=int(ns[i]), batches_per_epoch=int(bpe[i]))
+         for i in range(n)],
+        [PowerDomain(name=d) for d in doms])
+    arrays = ClientRegistry.from_arrays(
+        delta=delta, capacity=cap, m_min=1.0 * bpe, m_max=5.0 * bpe,
+        n_samples=ns, domain_idx=np.arange(n) % 4, domain_names=doms,
+        batches_per_epoch=bpe)
+    assert arrays.client_names == legacy.client_names
+    for a, b in zip(arrays._arrays(), legacy._arrays()):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(arrays.domain_rows(doms),
+                                  legacy.domain_rows(doms))
+    assert arrays.domain_of == legacy.domain_of
+    assert {d: p.clients for d, p in arrays.domains.items()} == \
+        {d: p.clients for d, p in legacy.domains.items()}

@@ -56,3 +56,55 @@ def test_excess_available_prefers_zero_carbon():
     assert s["rounds"] > 0
     # most rounds must be excess-powered
     assert s["grid_rounds"] <= max(1, s["rounds"] // 3)
+
+
+# ---------------------------------------------------------------------------
+# batched carbon accounting: the executor gathers the round window's carbon
+# columns once (carbon_window) instead of a carbon_at read per step — parity
+# against the per-step path must be exact
+# ---------------------------------------------------------------------------
+
+
+def test_carbon_window_matches_per_step_path():
+    """carbon_window column j == carbon_at(start + j), bit for bit, across
+    chunk boundaries, for synthesized and explicit-array stores."""
+    from repro.data.traces import ScenarioData, make_scenario
+
+    synth = make_scenario("global", n_clients=5, days=2, seed=3)
+    rng = np.random.default_rng(7)
+    explicit = ScenarioData(
+        excess=rng.uniform(0, 800, (3, 2000)).astype(np.float32),
+        util=rng.uniform(0, 1, (5, 2000)).astype(np.float32),
+        carbon=rng.uniform(80, 700, (3, 2000)).astype(np.float32),
+        domain_names=["a", "b", "c"], seed=0)
+    no_carbon = ScenarioData(
+        excess=rng.uniform(0, 800, (3, 100)), util=rng.uniform(0, 1, (5, 100)),
+        domain_names=["a", "b", "c"], seed=0)
+    for sc, start in [(synth, 0), (synth, 1430),       # spans a day chunk
+                      (synth, synth.n_steps - 20),     # clipped at trace end
+                      (explicit, 500), (no_carbon, 50)]:
+        win = sc.carbon_window(start, 60)
+        assert win.shape[0] == len(sc.domain_names)
+        assert win.shape[1] == min(60, sc.n_steps - start)
+        for j in range(win.shape[1]):
+            np.testing.assert_array_equal(win[:, j], sc.carbon_at(start + j))
+
+
+def test_grid_round_carbon_parity_with_per_step_reference(monkeypatch):
+    """End-to-end: a grid-fallback run with carbon_window replaced by the
+    per-step carbon_at path (the pre-batching implementation) produces an
+    identical summary — carbon_g included."""
+    from repro.data.traces import ScenarioStore
+
+    s_batched = build("grid", seed=5).run(until_step=6 * 60)
+
+    def per_step(self, start, horizon):
+        stop = min(start + horizon, self.n_steps)
+        cols = [self.carbon_at(t) for t in range(start, stop)]
+        return np.stack(cols, axis=1) if cols else \
+            np.zeros((len(self.domain_names), 0))
+
+    monkeypatch.setattr(ScenarioStore, "carbon_window", per_step)
+    s_ref = build("grid", seed=5).run(until_step=6 * 60)
+    assert s_batched == s_ref
+    assert s_batched["carbon_g"] > 0

@@ -1,7 +1,9 @@
-"""Guard: no name-keyed per-round state may creep back into core/.
+"""Guard: no name-keyed per-round state — and no per-client Python-object
+construction on the registry build path — may creep back into core/.
 
 The row-ID refactor made registry row indices the only identity on the
-scheduling path. This test enforces it two ways:
+scheduling path; the array-first refactor made SoA columns the only
+registry construction currency. This test enforces both:
 
 1. grep-style source scan — the scheduling modules must not contain the
    name-keyed idioms the refactor removed (name→row dict lookups,
@@ -11,7 +13,13 @@ scheduling path. This test enforces it two ways:
    reporting boundary.
 2. runtime checks — after a short run, every piece of per-round state is
    an integer-row array, not a name-keyed mapping.
+3. build-path scan + runtime — ``ClientSpec(`` may be constructed inside
+   ``core/``/``data/`` only in the designated compat view
+   (``ClientRegistry._materialize_specs``), and an array-built registry
+   must never materialize per-client objects (specs, names, dicts) while
+   the scheduling path runs.
 """
+import glob
 import os
 import re
 
@@ -21,6 +29,7 @@ import repro.core.fairness
 import repro.core.selection
 import repro.core.simulation
 import repro.core.strategies
+import repro.core.types
 import repro.core.utility
 from repro.core import (FLSimulation, ProxyTrainer, make_paper_registry,
                         make_strategy)
@@ -54,6 +63,65 @@ def test_client_names_only_at_summary_boundary():
     # simulation: exactly the summary() reporting boundary
     occurrences = re.findall(r"client_names", _source(repro.core.simulation))
     assert len(occurrences) <= 1
+
+
+def test_no_per_client_object_construction_on_build_path():
+    """``ClientSpec(`` constructor calls in core/ and data/ are allowed
+    only inside the designated compat view: the registry build path is
+    ``from_arrays`` (SoA columns), never a per-client object loop."""
+    core_dir = os.path.dirname(repro.core.types.__file__)
+    data_dir = os.path.join(os.path.dirname(core_dir), "data")
+    allowed = {os.path.join(core_dir, "types.py")}
+    for path in sorted(glob.glob(os.path.join(core_dir, "*.py"))
+                       + glob.glob(os.path.join(data_dir, "*.py"))):
+        with open(path) as f:
+            src = f.read()
+        hits = re.findall(r"ClientSpec\(", src)
+        if path in allowed:
+            # exactly the one compat-view construction in
+            # ClientRegistry._materialize_specs
+            assert len(hits) <= 1, (
+                f"{os.path.basename(path)}: ClientSpec constructed "
+                f"{len(hits)}x — only the _materialize_specs compat view "
+                f"may build spec objects")
+            assert "_materialize_specs" in src
+        else:
+            assert not hits, (
+                f"{os.path.basename(path)} constructs ClientSpec on the "
+                f"registry build path — generate SoA columns and use "
+                f"ClientRegistry.from_arrays instead")
+
+
+def test_array_built_registry_stays_object_free():
+    """An array-first registry must run the whole scheduling path without
+    materializing per-client Python objects (specs, names, name dicts) —
+    the 1M-client memory contract."""
+    sc = make_scenario("global", n_clients=5000, days=1, seed=4)
+    reg = make_paper_registry(n_clients=5000, seed=4,
+                              domain_names=sc.domain_names)
+    assert reg._specs is None and reg._names is None
+    assert reg._row_of is None and reg._domain_of is None
+    strat = make_strategy("fedzero", reg, n=4, d_max=60, seed=4,
+                          solver="greedy")
+    trainer = ProxyTrainer(len(reg))
+    sim = FLSimulation(reg, sc, strat, trainer, eval_every=0)
+    while sim.now < 8 * 60 and len(sim.results) < 3:
+        env = sim._env_view()
+        sel = strat.select(env)
+        if sel is None or not len(sel.rows):
+            sim.now += strat.wait_for()
+            continue
+        rr = sim._execute_round(sel)
+        strat.record_round(rr.contributors, rr.participants, [])
+        sim.results.append(rr)
+        sim.now += max(rr.duration, 1)
+    assert sim.results, "scheduling path never ran"
+    # selection + execution + fairness/utility updates touched no names
+    assert reg._specs is None and reg._names is None
+    assert reg._row_of is None and reg._domain_of is None
+    # summary() is the reporting boundary: names materialize only there
+    sim.summary()
+    assert reg._names is not None
 
 
 def test_per_round_state_is_row_arrays():

@@ -1,28 +1,29 @@
 """Seed-determinism guard for the memoized-forecast simulation path.
 
-Two independently constructed ``FLSimulation.run`` invocations with the
-same seed must produce *identical* ``summary()`` dicts — if any component
-(counter-seeded forecast slabs, blocklist release draws, strategy RNG,
-utility tracking) coupled to call order or leaked state across instances,
-round counts/energy/participation would drift.
+Two independently constructed runs with the same seed must produce
+*identical* ``summary()`` dicts — if any component (counter-seeded
+forecast slabs, blocklist release draws, strategy RNG, utility tracking)
+coupled to call order or leaked state across instances, round counts/
+energy/participation would drift. Runs are built through the declarative
+experiment API, so this doubles as its determinism guard.
 """
 import numpy as np
 import pytest
 
-from repro.core import (FLSimulation, ProxyTrainer, make_paper_registry,
-                        make_strategy)
-from repro.data.traces import make_scenario
+from repro.core import (ExperimentConfig, FleetSection, RunSection,
+                        ScenarioSection, StrategySection, TrainerSection,
+                        run_experiment)
 
 
 def run_once(strategy_name, seed, hours=8, n_clients=50, **strat_kw):
-    sc = make_scenario("global", n_clients=n_clients, days=1, seed=seed)
-    reg = make_paper_registry(n_clients=n_clients, seed=seed,
-                              domain_names=sc.domain_names)
-    strat = make_strategy(strategy_name, reg, n=5, d_max=60, seed=seed,
-                          **strat_kw)
-    trainer = ProxyTrainer(len(reg), k=0.0005, seed=seed)
-    sim = FLSimulation(reg, sc, strat, trainer, eval_every=2, seed=seed)
-    return sim.run(until_step=hours * 60)
+    cfg = ExperimentConfig(
+        scenario=ScenarioSection(name="global", days=1, seed=seed),
+        fleet=FleetSection(n_clients=n_clients, seed=seed),
+        strategy=StrategySection(name=strategy_name, n=5, d_max=60,
+                                 seed=seed, options=strat_kw),
+        trainer=TrainerSection(k=0.0005, seed=seed),
+        run=RunSection(until_step=hours * 60, eval_every=2, seed=seed))
+    return run_experiment(cfg)
 
 
 def assert_identical_summaries(a, b):

@@ -121,3 +121,48 @@ def test_sigma_weighting_prefers_high_utility():
     sel = select_clients(inp, n=3, d_max=20)
     assert sel is not None
     assert set(sel.rows.tolist()) == set(favored)
+
+
+# ---------------------------------------------------------------------------
+# greedy rank memo: per-distinct-d reuse must be invisible to results
+# ---------------------------------------------------------------------------
+
+
+def test_rank_memo_parity_and_reuse():
+    """A shared probe cache must answer every duration exactly like fresh
+    per-call caches, while running the lexsort once per distinct d."""
+    from repro.core.selection import _ProbeCache, _eligible, _solve_greedy
+
+    rng = np.random.default_rng(4)
+    _, inp = make_setup(n_clients=40, n_domains=4, horizon=20, energy=30.0)
+    inp.m_spare[:] = rng.uniform(0.0, 5.0, inp.m_spare.shape)
+    inp.sigma[:] = rng.uniform(0.1, 2.0, len(inp.sigma))
+    shared = _ProbeCache(inp)
+    for d in (20, 5, 20, 12, 5, 20):  # repeats hit the memo
+        el = _eligible(inp, d, shared)
+        got = _solve_greedy(inp, d, 4, el, shared)
+        fresh = _solve_greedy(inp, d, 4, list(el), _ProbeCache(inp))
+        assert (got is None) == (fresh is None), d
+        if got is not None:
+            assert got[0] == fresh[0], d
+            np.testing.assert_array_equal(got[1], fresh[1])
+    assert shared.rank_queries == 6
+    assert shared.rank_builds == 3  # one lexsort per distinct duration
+
+
+def test_rank_memo_guards_against_foreign_eligible_set():
+    """Callers passing a hand-built eligible set must never read a stale
+    memoized rank (exact array comparison in the memo key)."""
+    from repro.core.selection import _ProbeCache, _eligible, _solve_greedy
+
+    _, inp = make_setup(n_clients=12, energy=25.0)
+    cache = _ProbeCache(inp)
+    el = _eligible(inp, 20, cache)
+    full = _solve_greedy(inp, 20, 3, el, cache)
+    subset = el[:6]  # same d, different eligible set
+    restricted = _solve_greedy(inp, 20, 3, subset, cache)
+    assert full is not None and restricted is not None
+    assert set(restricted[0]) <= set(int(inp.rows[i]) for i in range(12))
+    assert restricted[0] == _solve_greedy(inp, 20, 3, subset,
+                                          _ProbeCache(inp))[0]
+    assert cache.rank_builds >= 2
