@@ -1,7 +1,7 @@
 # Developer entry points. Tier-1 verify == `make test`.
 PYTHON ?= python
 
-.PHONY: test test-quick bench-scalability bench-e2e
+.PHONY: test test-quick bench-scalability bench-e2e docs-check
 
 # full tier-1 suite (what CI and the driver run)
 test:
@@ -15,6 +15,11 @@ test-quick:
 bench-scalability:
 	$(PYTHON) benchmarks/scalability.py
 
-# 3-day 10k-client end-to-end simulation -> BENCH_e2e_simulation.json
+# fleet-scale end-to-end simulations (10k/100k/1M) -> BENCH_e2e_simulation.json
 bench-e2e:
 	$(PYTHON) benchmarks/e2e_simulation.py
+
+# executable docs: run every fenced python snippet in docs/*.md + README.md
+# and validate intra-repo markdown links
+docs-check:
+	$(PYTHON) tools/docs_check.py

@@ -1,4 +1,15 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+All benchmarks construct runs declaratively: :func:`experiment_config`
+builds the harness's standard :class:`ExperimentConfig` (one seed
+threads every section), and new call sites should pass it to
+``run_experiment``/``run_sweep`` directly. :func:`run_strategy` survives
+only as a **deprecated shim** over that config path for the older
+figure-reproduction scripts — it predates the experiment API, when each
+benchmark hand-wired the four-step construction (make_scenario →
+make_paper_registry → make_strategy → FLSimulation); nothing of that
+wiring remains here beyond the shim's signature.
+"""
 from __future__ import annotations
 
 import json

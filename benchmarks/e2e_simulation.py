@@ -20,7 +20,14 @@ each in its own subprocess so peak RSS is attributable:
   peak-RSS gates pin the "no per-client Python objects" claim (the old
   per-``ClientSpec`` loop was ~100s of MB and tens of seconds at this
   size; the SoA build is a few hundred ms and a few hundred MB total
-  process RSS).
+  process RSS);
+* ``1m_1day`` — the full FedZero loop at **1M clients** for one
+  simulated day over the sparse-activity util model
+  (``util_mode="sparse"``) and the sharded lazy greedy selection path:
+  util values are synthesized only for gathered rows and candidate
+  forecasts only for admission-relevant blocks, so peak RSS must stay
+  under 4 GB — a dense [C, T] float32 util slab alone would be ~5.8 GB
+  at this size, before any per-round [K, H] forecast slabs.
 
 Emits ``BENCH_e2e_simulation.json`` at the repo root. CI runs the
 benchmark on every push (a failing run or a blown budget fails the job)
@@ -45,7 +52,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_e2e_simulation.json")
 
-SCHEMA = 3
+SCHEMA = 4
 CONFIGS = {
     "10k_3day": {"kind": "simulation", "clients": 10_000,
                  "scenario_days": 3, "sim_days": 3, "budget_wall_s": 60.0},
@@ -54,6 +61,10 @@ CONFIGS = {
                   "budget_wall_s": 600.0, "budget_rss_mb": 1536.0},
     "1m_registry": {"kind": "registry", "clients": 1_000_000,
                     "budget_wall_s": 10.0, "budget_rss_mb": 768.0},
+    "1m_1day": {"kind": "simulation", "clients": 1_000_000,
+                "scenario_days": 1, "sim_days": 1, "util_mode": "sparse",
+                "candidate_cap": 32768,
+                "budget_wall_s": 600.0, "budget_rss_mb": 4096.0},
 }
 
 
@@ -69,17 +80,21 @@ def _peak_rss_mb() -> float:
 
 
 def run_e2e(n_clients: int, scenario_days: int, sim_days: int, n: int = 10,
-            d_max: int = 60, seed: int = 0, solver: str = "greedy"):
+            d_max: int = 60, seed: int = 0, solver: str = "greedy",
+            util_mode: str = "dense", candidate_cap: int = 0):
     from repro.core import (ExperimentConfig, FleetSection, RunSection,
                             ScenarioSection, StrategySection, TrainerSection,
                             build_experiment)
 
+    options = {"solver": solver}
+    if candidate_cap:
+        options["candidate_cap"] = candidate_cap
     cfg = ExperimentConfig(
         scenario=ScenarioSection(name="global", days=scenario_days,
-                                 seed=seed),
+                                 seed=seed, util_mode=util_mode),
         fleet=FleetSection(n_clients=n_clients, seed=seed),
         strategy=StrategySection(name="fedzero", n=n, d_max=d_max, seed=seed,
-                                 options={"solver": solver}),
+                                 options=options),
         trainer=TrainerSection(k=0.0004, seed=seed),
         run=RunSection(until_step=sim_days * 24 * 60 - d_max - 1,
                        eval_every=5, seed=seed))
@@ -97,6 +112,8 @@ def run_e2e(n_clients: int, scenario_days: int, sim_days: int, n: int = 10,
         "n_clients": n_clients,
         "scenario_days": scenario_days,
         "sim_days": sim_days,
+        "util_mode": util_mode,
+        "candidate_cap": candidate_cap,
         "n_per_round": n,
         "d_max": d_max,
         "solver": solver,
@@ -158,7 +175,9 @@ def _run_single(key: str) -> dict:
     if cfg.get("kind") == "registry":
         row = run_registry_build(cfg["clients"])
     else:
-        row = run_e2e(cfg["clients"], cfg["scenario_days"], cfg["sim_days"])
+        row = run_e2e(cfg["clients"], cfg["scenario_days"], cfg["sim_days"],
+                      util_mode=cfg.get("util_mode", "dense"),
+                      candidate_cap=cfg.get("candidate_cap", 0))
     return _evaluate(key, row)
 
 
@@ -182,9 +201,11 @@ def check_committed(path: str) -> int:
     for key, cfg in CONFIGS.items():
         row = configs[key]
         fields = ("clients",) if cfg.get("kind") == "registry" \
-            else ("clients", "scenario_days", "sim_days")
+            else ("clients", "scenario_days", "sim_days", "util_mode",
+                  "candidate_cap")
+        defaults = {"util_mode": "dense", "candidate_cap": 0}
         for field in fields:
-            want = cfg[field]
+            want = cfg.get(field, defaults.get(field))
             # the JSON rows use "n_clients" where CONFIGS uses "clients"
             got = row.get("n_clients" if field == "clients" else field)
             if got != want:

@@ -1,7 +1,8 @@
 """FedZero core: client selection on renewable excess energy (paper §3–4)."""
 from .types import (ClientRegistry, ClientSpec, PowerDomain, RoundResult,
                     Selection)
-from .selection import SelectionInputs, find_clients_for_duration, select_clients
+from .selection import (LazySelectionInputs, SelectionInputs,
+                        find_clients_for_duration, select_clients)
 from .fairness import Blocklist
 from .utility import UtilityTracker
 from .power import share_power
@@ -18,7 +19,8 @@ from .experiment import (ExperimentConfig, FleetSection, RunSection,
 
 __all__ = [
     "ClientRegistry", "ClientSpec", "PowerDomain", "RoundResult", "Selection",
-    "SelectionInputs", "find_clients_for_duration", "select_clients",
+    "LazySelectionInputs", "SelectionInputs", "find_clients_for_duration",
+    "select_clients",
     "Blocklist", "UtilityTracker", "share_power",
     "BaseStrategy", "EnvView", "FedZeroStrategy", "OortStrategy",
     "RandomStrategy", "UpperBoundStrategy", "make_strategy",

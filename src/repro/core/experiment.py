@@ -55,6 +55,11 @@ class ScenarioSection:
     seed: int = 0
     peak_w: float = 800.0
     error: str = "realistic"        # realistic | none | no_load
+    # util synthesis: 'dense' (chunked [C, chunk] slabs, bit-identical to
+    # the pre-sparse store) or 'sparse' (counter-based sparse-activity
+    # segments, gathered per row — the million-client path; FedZero's
+    # greedy solver auto-switches to sharded lazy selection over it)
+    util_mode: str = "dense"
     unlimited_domains: Tuple[str, ...] = ()
     excess: Optional[np.ndarray] = None   # [P, T] explicit-trace mode
     util: Optional[np.ndarray] = None     # [C, T]
@@ -159,13 +164,20 @@ class ExperimentConfig:
 def build_scenario(cfg: ExperimentConfig) -> ScenarioStore:
     sc = cfg.scenario
     if sc.excess is not None or sc.util is not None:
+        if sc.util_mode != "dense":
+            # explicit arrays ARE a dense util panel; silently ignoring
+            # the knob would skip the sharded selection path the caller
+            # asked for
+            raise ValueError("util_mode='sparse' requires synthesized "
+                             "scenarios; explicit excess/util arrays are "
+                             "dense by construction")
         return ScenarioStore(
             excess=sc.excess, util=sc.util, carbon=sc.carbon,
             domain_names=list(sc.domain_names or ()), seed=sc.seed,
             error=sc.error, unlimited_domains=sc.unlimited_domains)
     return make_scenario(sc.name, n_clients=cfg.fleet.n_clients,
                          days=sc.days, seed=sc.seed, peak_w=sc.peak_w,
-                         error=sc.error,
+                         error=sc.error, util_mode=sc.util_mode,
                          unlimited_domains=sc.unlimited_domains)
 
 

@@ -34,11 +34,19 @@ passes over the rank queue — see :func:`_solve_greedy`; the per-client
 sequential commit loop survives as :func:`_solve_greedy_sequential`, the
 bit-exact reference that the property/parity suite pins the batched
 variant against.
+
+Million-candidate scale: :class:`LazySelectionInputs` +
+:class:`_LazyGreedy` replace the materialized [K, H] ``m_spare`` slab
+with a block provider — candidates are ranked by a cheap score upper
+bound and real forecasts are gathered only for expanding top sets until
+admissions are provably exact (or, with ``candidate_cap``, exact within
+the capped set). FedZero auto-routes here for the greedy solver over
+sparse-util stores.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 import scipy.sparse as sp
@@ -416,6 +424,258 @@ def _solve_greedy(inp: SelectionInputs, d: int, n: int, eligible: List[int],
     return chosen, (None if feasibility_only else np.array(batches))
 
 
+@dataclasses.dataclass
+class LazySelectionInputs:
+    """Sharded, lazily-gathered per-round inputs for fleet-scale greedy.
+
+    The materialized :class:`SelectionInputs` carries the whole
+    ``m_spare`` [K, H] slab — affordable at 100k candidates, not at 1M.
+    This variant carries a **provider** instead: ``spare_of(pos)`` maps
+    candidate positions (indices into ``sigma``/``rows``/``dom``) to
+    their m_spare block [len(pos), H], typically a sparse-store
+    row-gather behind ``EnvView.spare_fc``. The solver ranks candidates
+    by a cheap per-candidate upper bound (``m_spare_ub`` — the per-step
+    spare-capacity ceiling, i.e. capacity — against the domain's
+    cumulative excess) and gathers blocks of real forecasts only until
+    the admission decisions are provably identical to evaluating
+    everyone (:class:`_LazyGreedy`), so a round touches O(admitted +
+    near-miss) candidate rows, never the full [C, T] or even [K, H]
+    slab.
+    """
+
+    registry: ClientRegistry
+    spare_of: Callable[[np.ndarray], np.ndarray]  # positions -> [B, H]
+    m_spare_ub: np.ndarray     # [K] per-step upper bound on m_spare
+    r_excess: np.ndarray       # [P, H] forecast excess energy (Wmin/step)
+    sigma: np.ndarray          # [K] statistical utility (0 = blocked)
+    rows: np.ndarray           # [K] registry row per candidate
+    dom: np.ndarray            # [K] domain row (into r_excess) per candidate
+    block: int = 1024          # rows gathered per evaluation block
+    # candidate_cap = 0 keeps the walk exact: it expands until admissions
+    # are provably identical to evaluating every candidate, which on
+    # degenerate score landscapes (near-uniform σ) can mean evaluating
+    # everyone. A positive cap bounds evaluation to the top-cap
+    # candidates by score upper bound — admission is then exact *within*
+    # that set (the documented fleet-scale approximation; deterministic,
+    # and identical to exact whenever cap ≥ the tie depth).
+    candidate_cap: int = 0
+
+
+class _LazyGreedy:
+    """Greedy admission over lazily-evaluated top-candidate sets.
+
+    Per probed duration ``dd`` the engine computes a cheap per-candidate
+    **score upper bound** (full spare every step against the domain's
+    cumulative excess — the line-11 test's optimistic grant, clipped by
+    m_max and scaled by σ), selects the top-M candidates by that bound
+    with one O(K) ``argpartition`` (no full K-sized sort anywhere), and
+    gathers real forecasts only for them. Admission then walks the
+    evaluated candidates in true-score order — ties broken exactly like
+    :func:`_rank_candidates` (descending candidate position) — and may
+    touch a candidate only while its true score is strictly above
+    ``bound``, the maximum upper bound among the unselected remainder;
+    if the walk reaches the bound before admitting n clients, M expands
+    (geometrically, reusing every evaluation) and the probe replays.
+    Admissions are therefore bit-identical to materializing ``m_spare``
+    for all K candidates and running :func:`_solve_greedy` (pinned by
+    tests/test_sparse_util.py), but a round evaluates O(admitted +
+    near-miss) candidates — the property that makes 1M-candidate rounds
+    affordable. Evaluations and per-``dd`` bound arrays persist across
+    the O(log d_max) probes of one ``select_clients`` call; each probe
+    replays admission against its own budget copy, mirroring the
+    sequential reference commit loop.
+    """
+
+    def __init__(self, inp: LazySelectionInputs, n: int):
+        reg = inp.registry
+        self.inp = inp
+        self.n = n
+        rows = np.asarray(inp.rows, dtype=int)
+        self.delta = reg.delta_arr[rows]
+        self.m_min = reg.m_min_arr[rows]
+        self.m_max = reg.m_max_arr[rows]
+        self.dom = np.asarray(inp.dom, dtype=int)
+        self.sigma = np.asarray(inp.sigma, dtype=float)
+        self.spare_ub = np.asarray(inp.m_spare_ub, dtype=float)
+        self.excess_cum = np.cumsum(inp.r_excess, axis=1)
+        self.H = self.excess_cum.shape[1]
+        self._kept = np.nonzero(self.sigma > 0)[0]   # Alg. 1 line 8
+        self._ub_memo: dict = {}       # dd -> [kept] score upper bounds
+        # evaluation store: doubling buffers, position -> buffer row
+        self._eval_idx = np.full(self.sigma.size, -1, dtype=np.int64)
+        self._reach_buf = np.empty((0, self.H))   # [E, H] reach cumsums
+        self._spare_buf = np.empty((0, self.H))   # [E, H] m_spare rows
+        self.evaluated = 0             # rows gathered (benchmark counter)
+
+    def _ub(self, dd: int) -> np.ndarray:
+        """[kept] score upper bounds at duration ``dd`` (-inf where the
+        candidate can never be admitted at dd)."""
+        hit = self._ub_memo.get(dd)
+        if hit is not None:
+            return hit
+        k = self._kept
+        reach_ub = np.minimum(self.spare_ub[k] * dd,
+                              self.excess_cum[self.dom[k], dd - 1]
+                              / self.delta[k])
+        ok = (reach_ub >= self.m_min[k]) \
+            & (self.excess_cum[self.dom[k], dd - 1] > 0)   # line 6 + 11
+        ub = np.where(ok, self.sigma[k] * np.minimum(reach_ub,
+                                                     self.m_max[k]),
+                      -np.inf)
+        self._ub_memo[dd] = ub
+        return ub
+
+    def _evaluate(self, pos: np.ndarray):
+        """Gather forecasts for the not-yet-evaluated candidates (one
+        provider call; results land in amortized-doubling buffers)."""
+        miss = pos[self._eval_idx[pos] < 0]
+        if not miss.size:
+            return
+        spare = np.asarray(self.inp.spare_of(miss), dtype=float)
+        reach = np.cumsum(
+            np.minimum(spare, self.inp.r_excess[self.dom[miss]]
+                       / self.delta[miss, None]), axis=1)
+        base = self.evaluated
+        need = base + miss.size
+        if need > self._reach_buf.shape[0]:
+            cap = max(2 * self._reach_buf.shape[0], need, 256)
+            for name in ("_reach_buf", "_spare_buf"):
+                buf = np.empty((cap, self.H))
+                buf[:base] = getattr(self, name)[:base]
+                setattr(self, name, buf)
+        self._eval_idx[miss] = base + np.arange(miss.size)
+        self._reach_buf[base:need] = reach
+        self._spare_buf[base:need] = spare
+        self.evaluated = need
+
+    def probe(self, d: int, feasibility_only: bool = False):
+        """Admit up to n clients at duration ``d`` — the lazy equivalent
+        of ``_eligible`` + ``_solve_greedy`` over the same inputs."""
+        dd = min(d, self.H)
+        if dd <= 0 or self._kept.size < self.n:
+            return None
+        ub = self._ub(dd)
+        n_viable = int(np.isfinite(ub).sum())
+        if n_viable < self.n:
+            return None
+        cap = int(self.inp.candidate_cap)
+        ceiling = n_viable if cap <= 0 else min(n_viable, cap)
+        M = min(max(int(self.inp.block), 4 * self.n, 64), ceiling)
+        while True:
+            if M >= n_viable:
+                top = np.nonzero(np.isfinite(ub))[0]
+                bound = -np.inf
+            else:
+                part = np.argpartition(-ub, M - 1)
+                top, bound = part[:M], float(ub[part[M - 1]])
+            if M >= ceiling < n_viable:
+                # capped: admission is exact within the top-`ceiling`
+                # set; candidates beyond it are out of scope by contract
+                bound = -np.inf
+            cand = self._kept[top]
+            self._evaluate(cand)
+            result = self._admit(cand, dd, bound, feasibility_only)
+            if result is not None or M >= ceiling:
+                return result
+            # the walk hit the bound: widen the set geometrically, and
+            # jump straight to everyone once the next step is close —
+            # degenerate score landscapes (near-uniform σ, few hardware
+            # types) make upper-bound ties hundreds of thousands deep,
+            # so partial expansions there only add partition passes
+            M = M * 8
+            if M * 4 >= ceiling:
+                M = ceiling
+
+    def _admit(self, cand: np.ndarray, dd: int, bound: float,
+               feasibility_only: bool):
+        """One admission pass over the evaluated candidate set; None if
+        the walk reaches ``bound`` (or runs dry) before n admissions.
+
+        Candidates are walked in exact (score desc, position desc) order,
+        extracted in score-partitioned chunks: a chunk is every remaining
+        candidate whose score is strictly above the partition pivot, so
+        ties never straddle a chunk boundary and no K-sized sort ever
+        runs — admission order is identical to sorting everyone.
+        """
+        eids = self._eval_idx[cand]
+        reach_dd = self._reach_buf[eids, dd - 1]
+        total = np.minimum(reach_dd, self.m_max[cand])
+        feas = total >= self.m_min[cand]
+        score = np.where(feas, self.sigma[cand] * total, -np.inf)
+        budgets = self.inp.r_excess[:, :dd].copy()
+        chosen: List[int] = []
+        batches = []
+        remaining = np.arange(cand.size)
+        chunk = max(4 * self.n, 64)
+        while len(chosen) < self.n:
+            if remaining.size == 0:
+                return None   # ran dry; caller expands / finalizes
+            if remaining.size > chunk:
+                part = np.argpartition(-score[remaining], chunk - 1)
+                pivot = float(score[remaining[part[chunk - 1]]])
+                head_mask = score[remaining] > pivot
+                if head_mask.any():
+                    head = remaining[head_mask]
+                    rest = remaining[~head_mask]
+                else:       # massive tie at the pivot: no strict head
+                    head, rest = remaining, remaining[:0]
+            else:
+                head, rest = remaining, remaining[:0]
+            for j in head[np.lexsort((-cand[head], -score[head]))].tolist():
+                if len(chosen) == self.n:
+                    break
+                if not np.isfinite(score[j]):
+                    break   # sorted: only -inf (infeasible) rows follow
+                if score[j] <= bound:
+                    return None  # an unevaluated candidate could rank here
+                pj = int(cand[j])
+                pi, delta_j = self.dom[pj], self.delta[pj]
+                take = np.minimum(self._spare_buf[eids[j], :dd],
+                                  budgets[pi] / delta_j)
+                cum = np.cumsum(take)
+                if min(cum[-1], self.m_max[pj]) < self.m_min[pj]:
+                    continue   # budget-shrunk below m_min: reject exactly
+                overshoot = cum - self.m_max[pj]
+                take = np.where(overshoot > 0,
+                                np.maximum(take - overshoot, 0.0), take)
+                budgets[pi] -= take * delta_j
+                chosen.append(pj)
+                if not feasibility_only:
+                    batches.append(take)
+            else:
+                remaining = rest
+                continue
+            break   # admission filled n (inner break)
+        if len(chosen) < self.n:
+            return None
+        return chosen, (None if feasibility_only else np.array(batches))
+
+
+def _select_clients_lazy(inp: LazySelectionInputs, n: int, d_max: int,
+                         solver: str, search: str) -> Optional[Selection]:
+    if solver != "greedy":
+        raise ValueError("lazy/sharded selection supports solver='greedy' "
+                         "only — materialize SelectionInputs for the MIP")
+    eng = _LazyGreedy(inp, n)
+    if search == "linear":
+        for d in range(1, d_max + 1):
+            best = eng.probe(d)
+            if best is not None:
+                return _to_selection(inp, best, d)
+        return None
+    lo_d, hi_d, found_d = 1, d_max, None
+    while lo_d <= hi_d:
+        mid = (lo_d + hi_d) // 2
+        if eng.probe(mid, feasibility_only=True) is not None:
+            found_d = mid
+            hi_d = mid - 1
+        else:
+            lo_d = mid + 1
+    if found_d is None:
+        return None
+    return _to_selection(inp, eng.probe(found_d), found_d)
+
+
 def find_clients_for_duration(inp: SelectionInputs, d: int, n: int,
                               solver: str = "mip", time_limit: float = 60.0,
                               cache: Optional[_ProbeCache] = None,
@@ -443,7 +703,13 @@ def select_clients(inp: SelectionInputs, n: int, d_max: int,
     additionally share one :class:`_WarmMip` model (bounds-swap re-solve)
     and greedy probes run feasibility-only with one full solve at the
     minimal feasible duration.
+
+    A :class:`LazySelectionInputs` routes to the sharded lazy greedy
+    (:class:`_LazyGreedy`) — identical selections, but candidate
+    forecasts are gathered in blocks instead of materialized [K, H].
     """
+    if isinstance(inp, LazySelectionInputs):
+        return _select_clients_lazy(inp, n, d_max, solver, search)
     cache = _ProbeCache(inp)
     model = None
     if solver == "mip":

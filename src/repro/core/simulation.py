@@ -10,14 +10,15 @@ stragglers whose work is discarded (paper §4.5).
 Scale architecture: client identity is the **registry row** end to end —
 selections arrive as row arrays, per-round state is structure-of-arrays
 NumPy indexed by selection position, participation is one [C] counter
-array, and the scenario is a chunked float32 :class:`ScenarioStore` whose
-columns are gathered per step for just the selected rows. Client names
-appear exactly once, in ``summary()`` (the reporting boundary) and at the
-trainer's dataset lookup. A simulated minute costs a few array ops per
-power domain rather than per-client Python work — 10k-client rounds
-execute in well under 100 ms (see benchmarks/scalability.py) and 100k
-clients over a simulated day fit in well under 1.5 GB
-(benchmarks/e2e_simulation.py).
+array, and the scenario is a chunked float32 :class:`ScenarioStore`
+whose selected rows' round window arrives in one ``spare_window``
+gather. Client names appear exactly once, in ``summary()`` (the
+reporting boundary) and at the trainer's dataset lookup. A simulated
+minute costs a few array ops per power domain rather than per-client
+Python work — 10k-client rounds execute in well under 100 ms (see
+benchmarks/scalability.py), 100k clients over a simulated day fit in
+well under 1.5 GB, and a 1M-client day runs under the sparse-activity
+store + sharded selection in under 4 GB (benchmarks/e2e_simulation.py).
 """
 from __future__ import annotations
 
@@ -51,11 +52,12 @@ class FLSimulation:
 
     # ------------------------------------------------------------------
     def _env_view(self) -> EnvView:
+        # spare_now is a lazy EnvView property: only strategies that read
+        # it (grid fallback, Random/Oort availability) pay the [C] gather
         sc = self.scenario
         return EnvView(
             registry=self.registry, now=self.now,
             excess_now=sc.excess_at(self.now),
-            spare_now=sc.spare_at(self.now),
             scenario=sc, horizon=self.d_max,
             dom_rows=self._dom_rows,
         )
@@ -96,13 +98,18 @@ class FLSimulation:
         carbon_win = sc.carbon_window(self.now, self.d_max) if grid else None
         need_done = (self.strategy.n if self.strategy.over_select > 1.0
                      else n_sel)
+        # the selected rows' whole round window in one gather: column j is
+        # exactly spare_at(now + j, rows), so the per-minute loop below
+        # does pure array reads (and a sparse store synthesizes only
+        # these n_sel rows, never a [C, ·] column)
+        spare_win = sc.spare_window(self.now, self.d_max, rows)
         duration = self.d_max
         for step in range(self.d_max):
             t = self.now + step
             if t >= sc.n_steps:
                 duration = step
                 break
-            spare_sel = sc.spare_at(t, rows)   # selected clients only: O(n)
+            spare_sel = spare_win[:, step]     # selected clients only: O(n)
             excess = sc.excess_at(t)
             active = computed < m_max
             for pi, group in groups:

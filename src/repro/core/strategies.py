@@ -25,7 +25,7 @@ from typing import List, Optional
 import numpy as np
 
 from .fairness import Blocklist
-from .selection import SelectionInputs, select_clients
+from .selection import LazySelectionInputs, SelectionInputs, select_clients
 from .types import ClientRegistry, Selection
 from .utility import UtilityTracker
 
@@ -34,20 +34,30 @@ from .utility import UtilityTracker
 class EnvView:
     """What a strategy may observe at round start.
 
-    ``excess_now``/``spare_now`` are actuals; forecasts come from the
-    lazy ``excess_fc()``/``spare_fc(rows)`` accessors (memoized by the
-    scenario store, so repeated calls within a round are free).
-    ``dom_rows[c]`` maps registry row c to its domain's row in the
-    scenario's ``excess``/``excess_fc`` panels.
+    ``excess_now`` and the lazy ``spare_now`` property are actuals;
+    forecasts come from the lazy ``excess_fc()``/``spare_fc(rows)``
+    accessors (memoized by the scenario store, so repeated calls within
+    a round are free). ``spare_now`` materializes the full [C] spare
+    column on first touch only — the FedZero path never reads it, which
+    matters on sparse million-client stores where an all-rows gather is
+    real work. ``dom_rows[c]`` maps registry row c to its domain's row
+    in the scenario's ``excess``/``excess_fc`` panels.
     """
 
     registry: ClientRegistry
     now: int
     excess_now: np.ndarray          # [P] W actual right now
-    spare_now: np.ndarray           # [C] fraction of capacity free right now
     scenario: object                # ScenarioStore (forecast source)
     horizon: int                    # forecast horizon (d_max)
     dom_rows: np.ndarray            # [C] registry row -> scenario domain row
+    _spare_now: Optional[np.ndarray] = None
+
+    @property
+    def spare_now(self) -> np.ndarray:
+        """[C] fraction of capacity free right now (gathered lazily)."""
+        if self._spare_now is None:
+            self._spare_now = self.scenario.spare_at(self.now)
+        return self._spare_now
 
     def excess_fc(self) -> np.ndarray:
         """[P, H] excess-power forecast."""
@@ -215,13 +225,37 @@ class FedZeroStrategy(BaseStrategy):
       utility on spare capacity only, drawing (carbon-accounted) grid
       energy for that round. Used at most every ``grid_cooldown`` rounds so
       the training stays overwhelmingly excess-powered.
+
+    ``sharded`` picks the lazily-gathered selection path
+    (:class:`~repro.core.selection.LazySelectionInputs`): candidate spare
+    forecasts are gathered in expanding top-score-upper-bound sets
+    instead of materialized [K, H] up front. Selections are identical to
+    the materialized path; the default (``None``) auto-enables it for
+    the greedy solver over a sparse-util scenario store — the
+    million-client configuration, where per-round [K, H] slabs are the
+    dominant cost. Forcing it over a *dense* store with
+    ``error="realistic"`` changes which forecast-noise stream a
+    candidate sees (dense noise is positional, not row-keyed), so
+    selections stay deterministic but differ from the materialized path;
+    sparse stores key noise per row and match exactly.
+
+    ``candidate_cap`` (sharded mode only) bounds per-round forecast
+    evaluation to the top-cap candidates by optimistic reach. Exactness
+    has a price on degenerate score landscapes — near-uniform σ over few
+    hardware profiles ties hundreds of thousands of upper bounds, which
+    forces evaluating all of them — so fleet-scale configs trade it for
+    a deterministic, documented approximation: admission is exact within
+    the capped set (and identical to exact whenever the cap exceeds the
+    tie depth). 0 (default) keeps the walk exact.
     """
 
     name = "fedzero"
 
     def __init__(self, *a, alpha: float = 1.0, solver: str = "mip",
                  search: str = "binary", exclusion_factor: float = 1.0,
-                 fallback: str = "wait", grid_cooldown: int = 10, **kw):
+                 fallback: str = "wait", grid_cooldown: int = 10,
+                 sharded: Optional[bool] = None, candidate_cap: int = 0,
+                 **kw):
         super().__init__(*a, **kw)
         self.blocklist = Blocklist(len(self.registry), alpha=alpha,
                                    seed=kw.get("seed", 0) + 7)
@@ -232,6 +266,16 @@ class FedZeroStrategy(BaseStrategy):
         self.fallback = fallback
         self.grid_cooldown = grid_cooldown
         self._rounds_since_grid = grid_cooldown
+        # fail fast: the sharded path exists for the greedy solver only,
+        # and candidate_cap means nothing outside it — a mismatch would
+        # otherwise surface mid-run, at the first round with candidates
+        if solver != "greedy" and (sharded or candidate_cap):
+            raise ValueError("sharded selection and candidate_cap require "
+                             "solver='greedy'")
+        self.sharded = sharded
+        # 0 = exact sharded walk; > 0 bounds per-round evaluation to the
+        # top-cap candidates by optimistic reach (fleet-scale mode)
+        self.candidate_cap = candidate_cap
 
     def _grid_fallback(self, env: EnvView) -> Optional[Selection]:
         """Weakened constraints: capacity-only selection on grid energy."""
@@ -257,16 +301,23 @@ class FedZeroStrategy(BaseStrategy):
         cand = np.nonzero((sigma > 0) & dom_ok[env.dom_rows])[0]
         sel = None
         if cand.size >= self.n:
-            cap = self.registry.capacity_arr[cand]
-            spare_fc = env.spare_fc(cand)
-            if spare_fc is not None:
-                m_spare = spare_fc * cap[:, None]
+            use_sharded = self.sharded if self.sharded is not None else (
+                self.solver == "greedy"
+                and getattr(env.scenario, "util_mode", "dense") == "sparse")
+            if use_sharded:
+                inp = self._sharded_inputs(env, cand, sigma, excess_fc)
             else:
-                m_spare = np.broadcast_to(
-                    cap[:, None], (cand.size, excess_fc.shape[1])).copy()
-            inp = SelectionInputs(
-                registry=self.registry, m_spare=m_spare, r_excess=excess_fc,
-                sigma=sigma[cand], rows=cand, dom=env.dom_rows[cand])
+                cap = self.registry.capacity_arr[cand]
+                spare_fc = env.spare_fc(cand)
+                if spare_fc is not None:
+                    m_spare = spare_fc * cap[:, None]
+                else:
+                    m_spare = np.broadcast_to(
+                        cap[:, None], (cand.size, excess_fc.shape[1])).copy()
+                inp = SelectionInputs(
+                    registry=self.registry, m_spare=m_spare,
+                    r_excess=excess_fc, sigma=sigma[cand], rows=cand,
+                    dom=env.dom_rows[cand])
             sel = select_clients(inp, self.n, self.d_max, solver=self.solver,
                                  search=self.search)
         if sel is not None:
@@ -279,6 +330,28 @@ class FedZeroStrategy(BaseStrategy):
                 self._rounds_since_grid = 0
             return sel
         return None
+
+    def _sharded_inputs(self, env: EnvView, cand: np.ndarray,
+                        sigma: np.ndarray,
+                        excess_fc: np.ndarray) -> LazySelectionInputs:
+        """Lazy inputs: the solver pulls candidate forecast blocks through
+        ``spare_fc`` (a per-row sparse gather) on demand."""
+        registry = self.registry
+        cap_all = registry.capacity_arr
+        horizon = excess_fc.shape[1]
+
+        def spare_of(pos: np.ndarray) -> np.ndarray:
+            rows = cand[pos]
+            spare_fc = env.spare_fc(rows)
+            cap = cap_all[rows]
+            if spare_fc is None:  # no-load-forecast ablation
+                return np.repeat(cap[:, None], horizon, axis=1)
+            return spare_fc * cap[:, None]
+
+        return LazySelectionInputs(
+            registry=registry, spare_of=spare_of, m_spare_ub=cap_all[cand],
+            r_excess=excess_fc, sigma=sigma[cand], rows=cand,
+            dom=env.dom_rows[cand], candidate_cap=self.candidate_cap)
 
     def record_round(self, contributors, selected, sample_losses):
         super().record_round(contributors, selected, sample_losses)

@@ -104,9 +104,13 @@ class ClientRegistry:
     per-client Python objects, and generates names/dicts lazily only at
     the I/O boundary (``rows``, ``name_of``, ``clients``, ``domains``,
     ``summary()`` reporting). A 1M-client registry is five float columns
-    plus one int column (~50 MB) built in milliseconds. The legacy
-    spec-list constructor (``ClientRegistry(clients, domains)``) survives
-    as a compatibility shim that derives the columns from the specs.
+    plus one int column (~46 MB) built in a few hundred milliseconds
+    (gated by ``1m_registry`` in benchmarks/e2e_simulation.py); the
+    name list and dicts cost O(C) Python objects when first touched, so
+    fleet-scale code should stay on the columns until the reporting
+    boundary. The legacy spec-list constructor
+    (``ClientRegistry(clients, domains)``) survives as a compatibility
+    shim that derives the columns from the specs.
 
     :class:`ClientSpec` access on an array-built registry is an
     **on-demand view**: the first touch of ``clients`` materializes spec

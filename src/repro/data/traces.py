@@ -27,14 +27,34 @@ is computed once, pinned, and lets evicted chunks be regenerated
 bit-identically. Client-heavy ``util`` chunks live in an element-budgeted
 LRU, so a 7-day 100k-client scenario costs a few hundred MB of resident
 chunks instead of a ~2.8 GB eager slab; ``excess``/``carbon`` are tiny
-([P, T]) and stay resident. ``excess_at``/``spare_at``/``*_forecast``
-serve views/gathers straight from the chunk cache, and ``spare_at``/
-``spare_forecast`` accept a registry-row array to gather only a client
-subset — identity is integer rows end to end; client names never enter
-this module.
+([P, T]) and stay resident. ``excess_at``/``spare_at``/``spare_window``/
+``*_forecast`` serve views/gathers straight from the chunk cache, and the
+``util``-backed accessors accept a registry-row array to gather only a
+client subset — identity is integer rows end to end; client names never
+enter this module.
+
+Sparse-activity util mode (the million-client path)
+---------------------------------------------------
+The dense synthesizer above still materializes a full ``[C, chunk]``
+slab per util chunk, which is what stopped the end-to-end gates at 100k
+clients. ``util_mode="sparse"`` (:class:`_SparseUtil`) replaces it with a
+**counter-based sparse-activity regime process**: each client's busy/idle
+*segments* are defined by stateless integer hashes of ``(seed, row,
+segment)`` — geometric segment gaps, per-segment levels, per-(row, step)
+noise — so the value at any ``(row, step)`` is a pure function that never
+depends on other rows. Dense values are materialized **only for the rows
+a caller actually gathers** (``spare_at``/``spare_window``/
+``spare_forecast``), per-chunk boundary states (segment counter + next
+switch time, two [C] integer columns) are carried exactly like the dense
+generators' states, and forecast noise is keyed per registry row, so a
+row-subset gather is bit-identical to the same rows of a full-fleet
+gather. A 1M-client simulated day never allocates a [C, T] slab (see
+tests/test_sparse_util.py and benchmarks/e2e_simulation.py,
+``1m_1day``). Dense mode is the default and stays bit-identical to the
+pre-sparse store.
 
 Everything is generated in batched NumPy draws — there are no per-row
-Python RNG constructions anywhere on the 100k-client path.
+Python RNG constructions anywhere on the million-client path.
 """
 from __future__ import annotations
 
@@ -74,6 +94,250 @@ _FORECAST_CACHE_ELEMS = 1 << 25
 # is ~64 MB of float32 at any fleet size; [P, T] fields use day chunks
 _UTIL_CHUNK_ELEMS = 1 << 24
 _DAY_STEPS = 24 * 60
+
+# ---------------------------------------------------------------------------
+# counter-based hashing for the sparse-activity util model
+#
+# Every random quantity of the sparse model is a pure function of integer
+# keys (seed, salt, row, counter), evaluated with a vectorized
+# splitmix64-style mixer — no RNG object, no stream position, so a gather
+# of any row subset reproduces exactly the values a full-fleet gather
+# would produce for those rows.
+
+_U64 = np.uint64
+_SPARSE_SALTS = {"init": 201, "gap": 202, "level": 203, "noise": 204,
+                 "fc_noise": 205}
+
+
+def _sm64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer over uint64. Wraparound is the
+    mixing mechanism — numpy warns about it only for 0-d inputs, so the
+    intended overflow is silenced explicitly."""
+    with np.errstate(over="ignore"):
+        x = (x + _U64(0x9E3779B97F4A7C15))
+        x = (x ^ (x >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> _U64(27))) * _U64(0x94D049BB133111EB)
+        return x ^ (x >> _U64(31))
+
+
+def _hash64(seed: int, salt: str, *keys) -> np.ndarray:
+    """Chained splitmix64 over broadcastable non-negative integer keys."""
+    h = _sm64(np.asarray(_U64(seed) ^ _sm64(
+        np.asarray(_U64(_SPARSE_SALTS[salt])))))
+    for k in keys:
+        h = _sm64(h ^ np.asarray(k, dtype=np.uint64))
+    return h
+
+
+def _u01(h: np.ndarray) -> np.ndarray:
+    """uint64 hash → float64 uniform in [0, 1) (53 mantissa bits)."""
+    return (h >> _U64(11)).astype(np.float64) * (2.0 ** -53)
+
+
+def _cheap_u01(fold: np.uint64, key: np.ndarray) -> np.ndarray:
+    """float32 uniform in [0, 1) from a uint64 key grid via a two-round
+    multiply–xorshift mixer — the per-cell hot path (noise), where the
+    full splitmix chain would double the gather's memory traffic. The
+    ``fold`` scalar carries the (seed, salt) entropy."""
+    with np.errstate(over="ignore"):
+        h = key ^ fold
+        h = h * _U64(0xFF51AFD7ED558CCD)
+        h ^= h >> _U64(32)
+        h = h * _U64(0xC4CEB9FE1A85EC53)
+        h ^= h >> _U64(29)
+    return (h >> _U64(40)).astype(np.float32) * np.float32(2.0 ** -24)
+
+
+class _SparseUtil:
+    """Sparse-activity regime process: GPU utilisation without the slab.
+
+    The dense ``_util_chunk`` realizes the Alibaba-like regime-switching
+    process as a [C, chunk] array. This class realizes the *same process
+    family* — busy/idle segments with geometric(p=1/180) durations,
+    busy levels 0.5+0.45·U / idle levels 0.3·U, small per-step noise —
+    as **activity segments**: client ``r``'s k-th segment gap, its level
+    for segment ``s``, and its step-``t`` noise are all stateless hashes,
+    so ``util(r, t)`` is computable for exactly the (row, step) pairs a
+    caller gathers. Segment structure (gaps, levels, initial regime) is
+    O(rows × segments) splitmix work; only the per-cell noise touches the
+    full [rows, window] grid, as one cheap-mixer uniform per cell —
+    bounded, matched to the dense model's 0.05 noise std — so a gather
+    is a few float32 passes over the grid, not dozens of uint64 ones.
+
+    Per-chunk boundary states — the segment counter ``seg`` (number of
+    switches at or before the chunk's first step) and the absolute next
+    switch time — are two [C] integer columns computed once per chunk
+    boundary and pinned, exactly like the dense generators' carried
+    states: any evicted intermediate is regenerable bit-identically
+    because segment indices are global to the trace, not chunk-local.
+    """
+
+    P_SWITCH = 1.0 / 180.0
+    NOISE_STD = 0.05
+    # uniform per-cell noise: amp·(u − ½) with u ∈ [0,1) has std amp/√12
+    _NOISE_AMP = NOISE_STD * math.sqrt(12.0)
+    # boundary states every simulated day: a gather walks ≤ 8 expected
+    # switches from the boundary to its window over the *gathered rows
+    # only*, while each pinned state costs just 8 bytes/client (two
+    # int32 columns) — ~56 MB for a 7-day 1M-client store
+    _CHUNK_STEPS = _DAY_STEPS
+
+    def __init__(self, seed: int, n_clients: int, n_steps: int,
+                 chunk_steps: int = _CHUNK_STEPS):
+        self.seed = seed & 0xFFFFFFFF
+        self.n_clients = n_clients
+        self.n_steps = n_steps
+        self.cs = max(1, min(chunk_steps, n_steps) if n_steps else 1)
+        self._log1mp = math.log1p(-self.P_SWITCH)
+        # (seed, salt) folds for the per-cell cheap mixer
+        self._noise_fold = _hash64(self.seed, "noise")
+        self._fc_fold = _hash64(self.seed, "fc_noise")
+        # boundary states: _states[i] = (seg[C] int64, next_switch[C] int64)
+        # at step i*cs; built lazily, index 0 from the t=0 definition
+        self._states: list = []
+
+    # -- stateless draws -------------------------------------------------
+    def _gap(self, rows: np.ndarray, seg: np.ndarray) -> np.ndarray:
+        """Geometric(p) segment gap (≥ 1 step) for segment index ``seg``."""
+        u = _u01(_hash64(self.seed, "gap", rows, seg))
+        return 1 + np.floor(np.log1p(-u) / self._log1mp).astype(np.int64)
+
+    def _busy0(self, rows: np.ndarray) -> np.ndarray:
+        return _u01(_hash64(self.seed, "init", rows)) < 0.5
+
+    # -- boundary-state machinery ----------------------------------------
+    def _advance(self, rows: np.ndarray, seg: np.ndarray, nxt: np.ndarray,
+                 t_target: int):
+        """Walk (seg, nxt) in place until ``nxt > t_target`` per row —
+        i.e. ``seg`` counts the switches at or before ``t_target``."""
+        active = nxt <= t_target
+        while active.any():
+            idx = np.nonzero(active)[0]
+            seg[idx] += 1
+            nxt[idx] += self._gap(rows[idx], seg[idx])
+            active[idx] = nxt[idx] <= t_target
+
+    def _state(self, i: int):
+        """(seg, next_switch) for all rows at step ``i*cs`` — pinned
+        int32 columns (segment counts and switch times are bounded by
+        the trace length plus one gap, far under 2^31)."""
+        if not self._states:
+            rows = np.arange(self.n_clients, dtype=np.int64)
+            seg = np.zeros(self.n_clients, dtype=np.int64)
+            nxt = self._gap(rows, seg)  # first switch ≥ 1: step 0 is seg 0
+            self._states.append(self._pin(seg, nxt))
+        while len(self._states) <= i:
+            j = len(self._states)
+            rows = np.arange(self.n_clients, dtype=np.int64)
+            seg, nxt = (a.astype(np.int64) for a in self._states[j - 1])
+            self._advance(rows, seg, nxt, j * self.cs)
+            self._states.append(self._pin(seg, nxt))
+        return self._states[i]
+
+    @staticmethod
+    def _pin(seg: np.ndarray, nxt: np.ndarray):
+        out = (seg.astype(np.int32), nxt.astype(np.int32))
+        for a in out:
+            a.flags.writeable = False
+        return out
+
+    # -- gathers ---------------------------------------------------------
+    def window(self, rows: Optional[np.ndarray], start: int, stop: int
+               ) -> np.ndarray:
+        """[R, stop-start] float32 util values for the gathered rows.
+
+        Bit-identical regardless of the gather pattern: the same (row,
+        step) cell always hashes to the same value, whether it arrives
+        via a single-step ``spare_at`` read, a forecast window, or a full
+        materialization.
+        """
+        if rows is None:
+            rows = np.arange(self.n_clients, dtype=np.int64)
+        else:
+            rows = np.asarray(rows, dtype=np.int64)
+        w = stop - start
+        out = np.empty((rows.size, max(w, 0)), dtype=np.float32)
+        if w <= 0 or rows.size == 0:
+            return out
+        cs = self.cs
+        for i in range(start // cs, (stop - 1) // cs + 1):
+            a, b = max(start, i * cs), min(stop, (i + 1) * cs)
+            out[:, a - start:b - start] = self._piece(rows, i, a, b)
+        return out
+
+    def noise_u(self, rows2d: np.ndarray, t2d: np.ndarray) -> np.ndarray:
+        """float32 uniform [0,1) noise cell per (row, absolute step)."""
+        key = (np.asarray(rows2d, dtype=np.uint64) << _U64(24)) \
+            ^ np.asarray(t2d, dtype=np.uint64)
+        return _cheap_u01(self._noise_fold, key)
+
+    def _piece(self, rows: np.ndarray, i: int, a: int, b: int) -> np.ndarray:
+        """One within-chunk window [a, b) for the gathered rows.
+
+        Full-grid work is three float32 passes (level gather, noise,
+        clip) plus the cheap-mixer hash; segment structure costs
+        O(rows × switches), never O(rows × window).
+        """
+        seg0, nxt0 = self._state(i)
+        seg = seg0[rows].astype(np.int64)
+        nxt = nxt0[rows].astype(np.int64)
+        # switches in (i*cs, a] happened before the window: count them
+        self._advance(rows, seg, nxt, a)
+        t_grid = np.arange(a, b, dtype=np.int64)
+        seg_start = seg.copy()
+        # slot[r, t] = how many switches of row r are in (a, t]; segment
+        # indices are consecutive, so slot s means segment seg_start + s
+        slot = np.zeros((rows.size, b - a), dtype=np.int64)
+        n_slots = 1
+        active = nxt < b
+        while active.any():
+            idx = np.nonzero(active)[0]
+            slot[idx] += t_grid[None, :] >= nxt[idx, None]
+            seg[idx] += 1
+            nxt[idx] += self._gap(rows[idx], seg[idx])
+            active[idx] = nxt[idx] < b
+            n_slots += 1
+        seg_tab = seg_start[:, None] \
+            + np.arange(n_slots, dtype=np.int64)[None, :]
+        u = _u01(_hash64(self.seed, "level", rows[:, None], seg_tab))
+        busy = self._busy0(rows)[:, None] ^ ((seg_tab & 1) == 1)
+        levels = np.where(busy, 0.5 + 0.45 * u, 0.3 * u).astype(np.float32)
+        util = np.take_along_axis(levels, slot, axis=1)
+        noise = self.noise_u(rows[:, None], t_grid[None, :])
+        noise -= np.float32(0.5)
+        noise *= np.float32(self._NOISE_AMP)
+        util += noise
+        np.clip(util, 0.0, 1.0, out=util)
+        return util
+
+    def forecast_noise(self, rows: Optional[np.ndarray], now: int,
+                       horizon: int, std: np.ndarray) -> np.ndarray:
+        """[R, horizon] multiplicative forecast error keyed **per row**.
+
+        Unlike the dense store's positional streams (row r of a slab is
+        the r-th stream of that instant), sparse-mode noise hashes
+        ``(row, now, lead)``, so any row subset draws exactly the rows it
+        asks for — block-gathered probes and full-fleet gathers agree
+        bit-for-bit. ``std`` is the per-lead error std; the unit-variance
+        shape is uniform (matched mean/std, bounded support), one
+        cheap-mixer draw per cell.
+        """
+        if rows is None:
+            rows = np.arange(self.n_clients, dtype=np.int64)
+        else:
+            rows = np.asarray(rows, dtype=np.int64)
+        # premix the row id into a full-width hash (O(rows), off the
+        # grid), then fold the structured (now, lead) field in: no bit
+        # budget for any field, so long traces/horizons cannot collide
+        # across rows the way packed bit fields would
+        row_h = _sm64(rows.astype(np.uint64) ^ self._fc_fold)[:, None]
+        key = row_h ^ ((_U64(now) << _U64(20))
+                       + np.arange(1, horizon + 1, dtype=np.uint64)[None, :])
+        z = _cheap_u01(self._fc_fold, key)
+        z -= np.float32(0.5)
+        z *= np.float32(math.sqrt(12.0))
+        z *= std.astype(np.float32)
+        return np.exp(z, out=z)
 
 
 def solar_curve(t_min: np.ndarray, utc_offset, peak_w: float,
@@ -143,6 +407,9 @@ class ScenarioStore:
             self._n_clients = int(synth["n_clients"])
             self._n_steps = int(synth["n_steps"])
             self._has_carbon = True
+            mode = synth.get("util_mode", "dense")
+            if mode not in ("dense", "sparse"):
+                raise ValueError(f"unknown util_mode {mode!r}")
         else:
             if excess is None or util is None:
                 raise ValueError("provide excess+util arrays or a synth spec")
@@ -172,12 +439,20 @@ class ScenarioStore:
                                  f"expected {T}")
             return a
 
+        self._util_sparse: Optional[_SparseUtil] = None
         if synth is not None:
             self._backing = {f: None for f in self._cs}
             z0 = np.zeros(P)
-            busy0, lvl0 = self._util_init_state()
-            self._states = {"excess": [z0], "util": [(busy0, lvl0)],
-                            "carbon": [None]}
+            if synth.get("util_mode", "dense") == "sparse":
+                # sparse-activity util: no dense chunk generator, no
+                # [C, chunk] slab — the regime process is gathered per row
+                self._util_sparse = _SparseUtil(seed, self._n_clients,
+                                                self._n_steps)
+                self._states = {"excess": [z0], "carbon": [None]}
+            else:
+                busy0, lvl0 = self._util_init_state()
+                self._states = {"excess": [z0], "util": [(busy0, lvl0)],
+                                "carbon": [None]}
         else:
             self._backing = {
                 "excess": _adopt("excess", excess),
@@ -197,6 +472,12 @@ class ScenarioStore:
     @property
     def n_clients(self) -> int:
         return self._n_clients
+
+    @property
+    def util_mode(self) -> str:
+        """'sparse' when util is served by the sparse-activity model —
+        the signal strategies use to pick the sharded selection path."""
+        return "sparse" if self._util_sparse is not None else "dense"
 
     # ---- chunk machinery -----------------------------------------------
     def _chunk(self, field: str, i: int) -> np.ndarray:
@@ -238,7 +519,13 @@ class ScenarioStore:
     def _window(self, field: str, start: int, stop: int,
                 rows: Optional[np.ndarray] = None) -> np.ndarray:
         """[R, stop-start] assembled from ≤ a few chunks; with ``rows``,
-        gathers just those rows from each chunk (O(len(rows)·width))."""
+        gathers just those rows from each chunk (O(len(rows)·width)).
+
+        In sparse util mode the window is hash-synthesized for exactly
+        the gathered rows — no [C, chunk] slab exists to slice."""
+        if field == "util" and self._util_sparse is not None \
+                and self._backing["util"] is None:
+            return self._util_sparse.window(rows, start, stop)
         cs = self._cs[field]
         parts = []
         for i in range(start // cs, (stop - 1) // cs + 1):
@@ -254,10 +541,16 @@ class ScenarioStore:
         chunk cache to views of it so in-place mutation stays visible."""
         backing = self._backing[field]
         if backing is None:
-            cs = self._cs[field]
-            n_chunks = max(1, math.ceil(self._n_steps / cs))
-            backing = np.concatenate(
-                [self._chunk(field, i) for i in range(n_chunks)], axis=1)
+            if field == "util" and self._util_sparse is not None:
+                # full sparse materialization (tests / small fleets): the
+                # same gather path, all rows — bit-identical to windowed
+                # reads, mutable afterwards like any pinned backing
+                backing = self._util_sparse.window(None, 0, self._n_steps)
+            else:
+                cs = self._cs[field]
+                n_chunks = max(1, math.ceil(self._n_steps / cs))
+                backing = np.concatenate(
+                    [self._chunk(field, i) for i in range(n_chunks)], axis=1)
             self._backing[field] = backing
             self._cache[field].clear()
             self._elems[field] = 0
@@ -362,24 +655,31 @@ class ScenarioStore:
         """Drop memoized forecast slabs (call after mutating actuals)."""
         self._forecast_cache.clear()
 
-    def _noise(self, kind: str, now: int, rows: int,
-               horizon: int) -> Optional[np.ndarray]:
-        """[rows, horizon] multiplicative forecast error for lead 1..h.
+    def _noise(self, kind: str, now: int, n_rows: int, horizon: int,
+               rows: Optional[np.ndarray] = None) -> Optional[np.ndarray]:
+        """[n_rows, horizon] multiplicative forecast error for lead 1..h.
 
-        One batched float32 draw per call, counter-seeded from ``(seed,
-        kind, now)`` — row r is the r-th independent error stream of that
-        instant, whatever the batch shape. Callers that pass a gathered
-        row subset therefore draw only ``len(rows)`` streams.
+        Dense stores draw one batched float32 slab per call,
+        counter-seeded from ``(seed, kind, now)`` — row r is the r-th
+        independent error stream of that instant, whatever the batch
+        shape (a gathered row subset draws only ``len(rows)`` streams,
+        but the streams are positional). Sparse-util stores key **load**
+        noise by registry row instead (:meth:`_SparseUtil.forecast_noise`)
+        so block-gathered and full-fleet draws agree bit-for-bit — which
+        is what lets the sharded selection path probe candidates in
+        blocks.
         """
         if self.error == "none":
             return None  # exact forecast: no draw at all
         if kind == "load" and self.error == "no_load":
             return None  # no load forecast available
-        rng = np.random.default_rng(
-            (self.seed & 0xFFFFFFFF, _KIND_IDS[kind], now))
         lead = np.arange(1, horizon + 1, dtype=np.float32)
         std = 0.05 + 0.20 * np.minimum(lead / 1440.0, 1.0)
-        z = rng.standard_normal((rows, horizon), dtype=np.float32)
+        if kind == "load" and self._util_sparse is not None:
+            return self._util_sparse.forecast_noise(rows, now, horizon, std)
+        rng = np.random.default_rng(
+            (self.seed & 0xFFFFFFFF, _KIND_IDS[kind], now))
+        z = rng.standard_normal((n_rows, horizon), dtype=np.float32)
         z *= std.astype(np.float32)
         return np.exp(z, out=z)
 
@@ -407,7 +707,7 @@ class ScenarioStore:
         if invert:
             actual = np.float32(1.0) - actual
         n = actual.shape[1]
-        noise = self._noise(kind, now, R, horizon)
+        noise = self._noise(kind, now, R, horizon, rows=rows)
         if n == horizon:
             out = actual.copy() if noise is None else actual * noise
         else:  # end of trace: zero-pad the short window
@@ -453,14 +753,26 @@ class ScenarioStore:
 
         Pass ``rows`` to gather just a client subset — the simulation step
         loop asks for only the selected clients, which turns an O(C)
-        column read into an O(n_selected) gather.
+        column read into an O(n_selected) gather (and, in sparse util
+        mode, synthesizes only those rows).
         """
         t = min(step, self._n_steps - 1)
-        cs = self._cs["util"]
-        col = self._chunk("util", t // cs)
-        if rows is None:
-            return np.float32(1.0) - col[:, t % cs]
-        return np.float32(1.0) - col[rows, t % cs]
+        return np.float32(1.0) - self._window("util", t, t + 1, rows)[:, 0]
+
+    def spare_window(self, start: int, horizon: int,
+                     rows: Optional[np.ndarray] = None) -> np.ndarray:
+        """[R, w] spare-fraction columns for steps ``start .. start+h``
+        (clipped to the trace end, ``w = min(horizon, n_steps - start)``).
+
+        Column j equals ``spare_at(start + j, rows)`` exactly — the round
+        executor gathers its selected rows' whole window once instead of
+        issuing one ``spare_at`` per simulated minute.
+        """
+        stop = min(start + horizon, self._n_steps)
+        if stop <= start:
+            R = len(rows) if rows is not None else self._n_clients
+            return np.zeros((R, 0), dtype=np.float32)
+        return np.float32(1.0) - self._window("util", start, stop, rows)
 
     def carbon_at(self, step: int) -> np.ndarray:
         """[P] grid carbon intensity (gCO2/kWh) — used only by the
@@ -494,17 +806,21 @@ ScenarioData = ScenarioStore
 
 def make_scenario(name: str, n_clients: int = 100, days: int = 7, seed: int = 0,
                   peak_w: float = 800.0, error: str = "realistic",
-                  unlimited_domains: tuple = ()) -> ScenarioStore:
+                  unlimited_domains: tuple = (),
+                  util_mode: str = "dense") -> ScenarioStore:
     """name: 'global' or 'co_located' (paper Fig. 2).
 
     Returns a lazily-synthesized :class:`ScenarioStore`: nothing is
     generated until the first access, and generation happens in seeded
     per-chunk batched draws, so 100k-client multi-day scenarios cost
     resident-chunk memory (a few hundred MB) rather than eager slabs.
+    ``util_mode="sparse"`` swaps the dense util chunk generator for the
+    sparse-activity model (:class:`_SparseUtil`) — the million-client
+    path, which synthesizes util values only for gathered rows.
     """
     cities = GLOBAL_CITIES if name == "global" else CO_LOCATED_CITIES
     return ScenarioStore(
         domain_names=[c[0] for c in cities], seed=seed, error=error,
         unlimited_domains=unlimited_domains,
         synth={"cities": cities, "peak_w": peak_w, "n_clients": n_clients,
-               "n_steps": days * 24 * 60})
+               "n_steps": days * 24 * 60, "util_mode": util_mode})

@@ -1,0 +1,85 @@
+"""Render the README's reproduced-results tables from the committed
+benchmark JSONs.
+
+    python tools/bench_table.py            # print the markdown
+    python tools/bench_table.py --write    # splice it into README.md
+
+``--write`` replaces everything between the ``<!-- bench-tables:begin
+-->`` / ``<!-- bench-tables:end -->`` markers, so the README never
+hand-maintains numbers — rerun it whenever the BENCH_*.json files are
+regenerated.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+BEGIN, END = "<!-- bench-tables:begin -->", "<!-- bench-tables:end -->"
+
+
+def _load(name):
+    with open(os.path.join(ROOT, name)) as f:
+        return json.load(f)
+
+
+def e2e_table() -> str:
+    payload = _load("BENCH_e2e_simulation.json")
+    lines = [
+        "| Config | Clients | Simulated | Wall | Peak RSS | Rounds | Gates |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key, row in payload["configs"].items():
+        if row.get("kind") == "registry":
+            sim = "registry build"
+            rounds = "—"
+        else:
+            d = row["sim_days"]
+            sim = f"{d} day{'s' if d != 1 else ''}" \
+                  + (" (sparse)" if row.get("util_mode") == "sparse" else "")
+            rounds = str(row["rounds"])
+        rss = row.get("peak_rss_mb")
+        rss = f"{rss/1024:.2f} GB" if rss == rss else "n/a"
+        lines.append(
+            f"| `{key}` | {row['n_clients']:,} | {sim} "
+            f"| {row['wall_s']:.1f} s | {rss} | {rounds} "
+            f"| {'pass' if row.get('ok') else 'FAIL'} |")
+    return "\n".join(lines)
+
+
+def scalability_table() -> str:
+    payload = _load("BENCH_scalability.json")
+    lines = [
+        "| `select_clients` (greedy) | Wall |",
+        "|---|---|",
+    ]
+    for row in payload["selection_greedy"]:
+        lines.append(f"| {row['n_clients']:,} clients "
+                     f"| {row['wall_s']*1000:.0f} ms |")
+    return "\n".join(lines)
+
+
+def render() -> str:
+    return (f"End-to-end FedZero loop (`BENCH_e2e_simulation.json`):\n\n"
+            f"{e2e_table()}\n\nOne `select_clients` call "
+            f"(`BENCH_scalability.json`):\n\n{scalability_table()}")
+
+
+def main():
+    text = render()
+    if "--write" in sys.argv[1:]:
+        path = os.path.join(ROOT, "README.md")
+        with open(path) as f:
+            readme = f.read()
+        head, _, rest = readme.partition(BEGIN)
+        _, _, tail = rest.partition(END)
+        with open(path, "w") as f:
+            f.write(f"{head}{BEGIN}\n{text}\n{END}{tail}")
+        print(f"wrote tables into {os.path.abspath(path)}")
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Executable-docs gate: run every fenced Python snippet and validate
+intra-repo links in the markdown docs.
+
+    python tools/docs_check.py            # what `make docs-check` runs
+
+Scope: README.md plus every .md under docs/. Two checks:
+
+1. **Snippets execute.** Each fenced ``` ```python ``` block runs in its
+   own namespace via ``exec`` with src/ on sys.path — documentation that
+   drifts from the API fails CI exactly like a test would. A block whose
+   info string is ``python no-run`` is illustrative-only and skipped.
+2. **Links resolve.** Every relative markdown link target
+   (``[text](path)`` — external ``http(s):``/``mailto:`` links are
+   ignored) must exist on disk, anchors stripped.
+
+Exit code 0 iff every snippet executed and every link resolved.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+import traceback
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+_FENCE = re.compile(r"^```(\S*)[ \t]*(\S*)[ \t]*$")
+_LINK = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+
+
+def doc_files():
+    files = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return [f for f in files if os.path.exists(f)]
+
+
+def extract_snippets(path):
+    """[(first_line_number, source)] for runnable python fences.
+
+    Raises on an unclosed fence at EOF — a silently-dropped trailing
+    snippet would let the gate pass without running documented code.
+    """
+    snippets, lang, run, buf, start = [], None, False, [], 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            m = _FENCE.match(line.strip())
+            if m and lang is None:
+                lang, info = m.group(1).lower(), m.group(2).lower()
+                run = lang == "python" and info != "no-run"
+                buf, start = [], lineno + 1
+            elif m and m.group(1) == "":
+                if run and buf:
+                    snippets.append((start, "".join(buf)))
+                lang, run, buf = None, False, []
+            elif lang is not None:
+                buf.append(line)
+    if lang is not None:
+        raise SyntaxError(f"{path}: code fence opened at line {start - 1} "
+                          f"is never closed")
+    return snippets
+
+
+def check_snippets(path) -> int:
+    failures = 0
+    rel = os.path.relpath(path, ROOT)
+    for lineno, src in extract_snippets(path):
+        try:
+            exec(compile(src, f"{rel}:{lineno}", "exec"), {"__name__": "__docs__"})
+        except Exception:
+            failures += 1
+            print(f"[docs-check] SNIPPET FAILED {rel}:{lineno}")
+            traceback.print_exc()
+    return failures
+
+
+def check_links(path) -> int:
+    failures = 0
+    rel = os.path.relpath(path, ROOT)
+    base = os.path.dirname(path)
+    with open(path) as f:
+        text = f.read()
+    # don't validate link-shaped text inside code fences
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target_path = os.path.normpath(
+            os.path.join(base, target.split("#")[0]))
+        if not os.path.exists(target_path):
+            failures += 1
+            print(f"[docs-check] BROKEN LINK {rel}: {target}")
+    return failures
+
+
+def main() -> int:
+    files = doc_files()
+    failures = 0
+    n_snippets = 0
+    for path in files:
+        n_snippets += len(extract_snippets(path))
+        failures += check_snippets(path)
+        failures += check_links(path)
+    status = "ok" if failures == 0 else f"{failures} failure(s)"
+    print(f"[docs-check] {len(files)} file(s), {n_snippets} snippet(s): "
+          f"{status}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
