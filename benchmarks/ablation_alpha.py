@@ -26,7 +26,7 @@ def run(days: float = 2.0, alphas=(0.25, 0.5, 1.0, 2.0, 4.0), seed=0):
     cfgs = [base.with_strategy("fedzero", alpha=alpha) for alpha in alphas]
     out = {}
     for alpha, s in zip(alphas, run_sweep(cfgs)):
-        part = np.array(list(s["participation"].values()), float)
+        part = np.asarray(s["participation"], dtype=float)  # row-keyed
         reached = [(t, m, e) for t, m, e in s["metric_curve"] if m >= 0.8]
         out[str(alpha)] = {
             "best_accuracy": s["best_metric"],

@@ -29,6 +29,16 @@ each in its own subprocess so peak RSS is attributable:
   under 4 GB — a dense [C, T] float32 util slab alone would be ~5.8 GB
   at this size, before any per-round [K, H] forecast slabs.
 
+Each JSON row records its array ``backend`` (schema 5); ``--check``
+fails if the committed rows were produced with a different backend
+than this script's configuration table declares. Any configuration can
+be pointed at the ``jax`` backend (``"backend": "jax"`` in ``CONFIGS``;
+decisions are parity-pinned by ``tests/test_backend_parity.py``), but
+on a single CPU device the dispatch-heavy scheduler loses to the NumPy
+reference (~5.4 s vs ~1.0 s per round at 1M clients), so the committed
+figures stay on ``numpy`` until an accelerator runs the gate — see
+``docs/backends.md``.
+
 Emits ``BENCH_e2e_simulation.json`` at the repo root. CI runs the
 benchmark on every push (a failing run or a blown budget fails the job)
 and ``--check`` verifies the *committed* JSON is not stale: schema and
@@ -52,7 +62,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_e2e_simulation.json")
 
-SCHEMA = 4
+SCHEMA = 5
 CONFIGS = {
     "10k_3day": {"kind": "simulation", "clients": 10_000,
                  "scenario_days": 3, "sim_days": 3, "budget_wall_s": 60.0},
@@ -81,7 +91,8 @@ def _peak_rss_mb() -> float:
 
 def run_e2e(n_clients: int, scenario_days: int, sim_days: int, n: int = 10,
             d_max: int = 60, seed: int = 0, solver: str = "greedy",
-            util_mode: str = "dense", candidate_cap: int = 0):
+            util_mode: str = "dense", candidate_cap: int = 0,
+            backend: str = "numpy"):
     from repro.core import (ExperimentConfig, FleetSection, RunSection,
                             ScenarioSection, StrategySection, TrainerSection,
                             build_experiment)
@@ -97,7 +108,7 @@ def run_e2e(n_clients: int, scenario_days: int, sim_days: int, n: int = 10,
                                  options=options),
         trainer=TrainerSection(k=0.0004, seed=seed),
         run=RunSection(until_step=sim_days * 24 * 60 - d_max - 1,
-                       eval_every=5, seed=seed))
+                       eval_every=5, seed=seed, backend=backend))
 
     t0 = time.perf_counter()
     sim = build_experiment(cfg)
@@ -114,6 +125,7 @@ def run_e2e(n_clients: int, scenario_days: int, sim_days: int, n: int = 10,
         "sim_days": sim_days,
         "util_mode": util_mode,
         "candidate_cap": candidate_cap,
+        "backend": backend,
         "n_per_round": n,
         "d_max": d_max,
         "solver": solver,
@@ -177,7 +189,8 @@ def _run_single(key: str) -> dict:
     else:
         row = run_e2e(cfg["clients"], cfg["scenario_days"], cfg["sim_days"],
                       util_mode=cfg.get("util_mode", "dense"),
-                      candidate_cap=cfg.get("candidate_cap", 0))
+                      candidate_cap=cfg.get("candidate_cap", 0),
+                      backend=cfg.get("backend", "numpy"))
     return _evaluate(key, row)
 
 
@@ -202,8 +215,9 @@ def check_committed(path: str) -> int:
         row = configs[key]
         fields = ("clients",) if cfg.get("kind") == "registry" \
             else ("clients", "scenario_days", "sim_days", "util_mode",
-                  "candidate_cap")
-        defaults = {"util_mode": "dense", "candidate_cap": 0}
+                  "candidate_cap", "backend")
+        defaults = {"util_mode": "dense", "candidate_cap": 0,
+                    "backend": "numpy"}
         for field in fields:
             want = cfg.get(field, defaults.get(field))
             # the JSON rows use "n_clients" where CONFIGS uses "clients"
@@ -267,6 +281,7 @@ def main():
                   f"rss={row['peak_rss_mb']:.0f}MB  ok={row['ok']}")
         else:
             print(f"[e2e] {key}: C={row['n_clients']}  "
+                  f"backend={row['backend']}  "
                   f"setup={row['setup_s']:.1f}s  sim={row['sim_s']:.1f}s  "
                   f"rounds={row['rounds']}  rss={row['peak_rss_mb']:.0f}MB  "
                   f"ok={row['ok']}")

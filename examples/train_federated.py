@@ -65,7 +65,7 @@ def main():
           f"(all renewable excess)")
     print(f"sim time:      {summary['sim_minutes'] / 60:.1f} h over "
           f"{summary['rounds']} rounds")
-    part = np.array(list(summary['participation'].values()))
+    part = np.asarray(summary['participation'], dtype=float)  # row-keyed
     print(f"participation: {part.mean():.1f} ± {part.std():.1f} rounds/client")
 
 

@@ -1,0 +1,71 @@
+"""Pluggable array backends for the scheduling hot path.
+
+The scheduling stack (``data/traces.py`` synthesis, ``core/selection.py``
+solvers) calls array math through an :class:`ArrayBackend` instead of
+``np.*`` directly. ``get_backend("numpy")`` returns the bit-exact host
+reference; ``get_backend("jax")`` returns the jit-compiled JAX backend
+with device-resident fleet columns. The parity contract between them is
+documented in :mod:`repro.backend.base` and docs/backends.md; selection
+is surfaced as the ``backend=`` knob on
+:class:`repro.core.experiment.RunSection`.
+
+Backends are process-wide singletons: they hold jit caches, so repeated
+``get_backend`` calls must return the same object.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from .base import ArrayBackend
+from .numpy_backend import NumpyBackend
+
+__all__ = ["ArrayBackend", "NumpyBackend", "get_backend",
+           "register_backend", "available_backends"]
+
+_FACTORIES: Dict[str, Callable[[], ArrayBackend]] = {}
+_SINGLETONS: Dict[str, ArrayBackend] = {}
+
+
+def register_backend(name: str, factory: Callable[[], ArrayBackend]):
+    """Register a third-party backend factory under ``name``."""
+    _FACTORIES[str(name).lower()] = factory
+
+
+def available_backends():
+    """Names ``get_backend`` accepts (the jax one may still fail to
+    import at resolution time if jax is absent)."""
+    return tuple(sorted({"numpy", "jax", *_FACTORIES}))
+
+
+def get_backend(spec=None) -> ArrayBackend:
+    """Resolve ``spec`` to a backend singleton.
+
+    ``spec`` may be ``None`` (→ numpy), a backend name, or an
+    :class:`ArrayBackend` instance (returned as-is, so already-resolved
+    backends thread through dataclasses unchanged).
+    """
+    if isinstance(spec, ArrayBackend):
+        return spec
+    name = "numpy" if spec is None else str(spec).lower()
+    got = _SINGLETONS.get(name)
+    if got is not None:
+        return got
+    if name == "numpy":
+        bk: ArrayBackend = NumpyBackend()
+    elif name == "jax":
+        try:
+            from .jax_backend import JaxBackend
+        except ImportError as exc:  # pragma: no cover - env-dependent
+            raise RuntimeError(
+                "backend 'jax' needs the jax toolchain, which failed to "
+                f"import: {exc}. Use backend='numpy' or install jax."
+            ) from exc
+        bk = JaxBackend()
+    elif name in _FACTORIES:
+        bk = _FACTORIES[name]()
+    else:
+        raise KeyError(
+            f"unknown array backend {name!r}; available: "
+            f"{', '.join(available_backends())}")
+    _SINGLETONS[name] = bk
+    return bk

@@ -1,0 +1,234 @@
+"""Array-backend op surface for the scheduling hot path.
+
+:class:`ArrayBackend` names every array operation the FedZero scheduling
+stack is allowed to accelerate: the counter-hash synthesis primitives
+behind the sparse-activity util model (``sm64``/``hash64``/``u01``/
+``cheap_u01`` and the fused grid draws built from them), the gathered
+elementwise math of the greedy solvers (``take_matrix``,
+``greedy_scores``, ``score_ub``), the top-M candidate selection
+(``top_m``/``viable_positions``) and the per-domain prefix-scan margin
+check of the chunked admission walk (``margin_prefix_ok``). Everything
+else — Python control flow, binary search, LRU caches, the registry —
+stays backend-agnostic host code.
+
+Parity contract (what ``numpy`` and any accelerated backend must agree
+on, bit for bit):
+
+* **integer/hash ops** — uint64 add/mul/xor/shift wrap identically
+  everywhere, so every synthesis primitive is bit-exact across backends;
+* **elementwise float ops** — IEEE-754 add/sub/mul/div/min/max/compare
+  are exactly rounded, so any op built only from them (``take_matrix``,
+  ``greedy_scores``, ``score_ub``, the fused noise grids) must return
+  bit-identical floats;
+* **float reductions and transcendentals are NOT portable** — summation
+  order and ``exp``/``log`` implementations differ between NumPy and
+  XLA. Ops whose *bits* feed scheduling decisions therefore keep their
+  reductions on the host (``np.cumsum``/``np.exp`` in the callers), and
+  backends return pre-reduction values (e.g. ``forecast_noise_z``
+  returns the pre-``exp`` exponent). The one backend-side reduction —
+  the cumulative drain inside ``margin_prefix_ok`` — is *decision-safe*
+  by construction: the 1e-9 admission margin dwarfs any reordering
+  error, and a margin miss only defers a candidate to the exact
+  single-admission fallback, so final admissions are identical under
+  any summation order (see docs/backends.md).
+* **selection sets** — ``top_m`` breaks upper-bound ties
+  deterministically: value descending, candidate position ascending
+  (the ``jax.lax.top_k`` rule, mirrored by the NumPy reference).
+
+The base class implements every op with reference NumPy semantics, so a
+subclass only overrides what it accelerates and inherits exact host
+behaviour for the rest.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_U64 = np.uint64
+
+# admission margin: a chunked prefix is committed only while its
+# cumulative pre-cap drains stay this far (relatively) under the domain
+# budget — far above any f64 summation-reorder error (~1e-13), far below
+# any real budget slack, so every backend reaches the same admissions
+MARGIN = 1.0 - 1e-9
+
+
+def sm64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 finalizer over uint64 (reference impl).
+
+    Wraparound is the mixing mechanism — numpy warns about it only for
+    0-d inputs, so the intended overflow is silenced explicitly."""
+    with np.errstate(over="ignore"):
+        x = (x + _U64(0x9E3779B97F4A7C15))
+        x = (x ^ (x >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
+        x = (x ^ (x >> _U64(27))) * _U64(0x94D049BB133111EB)
+        return x ^ (x >> _U64(31))
+
+
+def hash64(seed: int, salt: int, *keys) -> np.ndarray:
+    """Chained splitmix64 over broadcastable non-negative integer keys."""
+    h = sm64(np.asarray(_U64(seed) ^ sm64(np.asarray(_U64(salt)))))
+    for k in keys:
+        h = sm64(h ^ np.asarray(k, dtype=np.uint64))
+    return h
+
+
+def u01(h: np.ndarray) -> np.ndarray:
+    """uint64 hash → float64 uniform in [0, 1) (53 mantissa bits)."""
+    return (h >> _U64(11)).astype(np.float64) * (2.0 ** -53)
+
+
+def cheap_u01(fold: np.uint64, key: np.ndarray) -> np.ndarray:
+    """float32 uniform in [0, 1) from a uint64 key grid via a two-round
+    multiply–xorshift mixer — the per-cell hot path (noise), where the
+    full splitmix chain would double the gather's memory traffic. The
+    ``fold`` scalar carries the (seed, salt) entropy."""
+    with np.errstate(over="ignore"):
+        h = key ^ fold
+        h = h * _U64(0xFF51AFD7ED558CCD)
+        h ^= h >> _U64(32)
+        h = h * _U64(0xC4CEB9FE1A85EC53)
+        h ^= h >> _U64(29)
+    return (h >> _U64(40)).astype(np.float32) * np.float32(2.0 ** -24)
+
+
+class ArrayBackend:
+    """Reference (NumPy) implementation of the scheduling op surface.
+
+    Subclasses override the grid-heavy ops with accelerated versions and
+    keep the bit-exactness contract documented in the module docstring;
+    anything not overridden runs the host reference below.
+    """
+
+    name = "numpy"
+
+    # -- counter-hash synthesis primitives -------------------------------
+    def sm64(self, x):
+        return sm64(np.asarray(x, dtype=np.uint64))
+
+    def hash64(self, seed, salt, *keys):
+        return hash64(seed, salt, *keys)
+
+    def u01(self, h):
+        return u01(np.asarray(h, dtype=np.uint64))
+
+    def cheap_u01(self, fold, key):
+        return cheap_u01(_U64(fold), np.asarray(key, dtype=np.uint64))
+
+    # -- fused synthesis grids -------------------------------------------
+    def cell_noise(self, fold, rows, t_grid):
+        """[R, W] float32 uniform [0,1) noise cell per (row, step)."""
+        key = (np.asarray(rows, dtype=np.uint64)[:, None] << _U64(24)) \
+            ^ np.asarray(t_grid, dtype=np.uint64)[None, :]
+        return cheap_u01(_U64(fold), key)
+
+    def piece_grid(self, levels, slot, fold, rows, t0, amp):
+        """[R, W] util window: per-slot level gather + centered per-cell
+        noise + clip to [0, 1] — the grid-heavy tail of a sparse-util
+        gather (the data-dependent segment walk that produced ``levels``
+        and ``slot`` stays on the host)."""
+        util = np.take_along_axis(levels, slot, axis=1)
+        t_grid = t0 + np.arange(slot.shape[1], dtype=np.int64)
+        noise = self.cell_noise(fold, rows, t_grid)
+        noise -= np.float32(0.5)
+        noise *= np.float32(amp)
+        util += noise
+        np.clip(util, 0.0, 1.0, out=util)
+        return util
+
+    def forecast_noise_z(self, fc_fold, rows, now, horizon, std):
+        """[R, horizon] pre-``exp`` multiplicative forecast-error
+        exponent keyed per registry row. The caller applies the host
+        ``np.exp`` (transcendentals are not bit-portable — see module
+        docstring); returns a fresh writable float32 array."""
+        fold = _U64(fc_fold)
+        row_h = sm64(np.asarray(rows, dtype=np.uint64) ^ fold)[:, None]
+        key = row_h ^ ((_U64(now) << _U64(20))
+                       + np.arange(1, horizon + 1, dtype=np.uint64)[None, :])
+        z = cheap_u01(fold, key)
+        z -= np.float32(0.5)
+        z *= np.float32(np.sqrt(12.0))
+        z *= np.asarray(std, dtype=np.float32)
+        return z
+
+    # -- greedy-solver elementwise math ----------------------------------
+    def relu(self, x):
+        """max(x, 0) — the MIP variable-bound clip."""
+        return np.maximum(x, 0.0)
+
+    def take_matrix(self, spare, budget_rows, delta):
+        """[B, d] optimistic per-step takes: min(spare, budget/δ)."""
+        return np.minimum(spare, budget_rows / delta[:, None])
+
+    def greedy_scores(self, sigma, reach, m_min, m_max):
+        """(score[B], feas[B]) for ranked greedy admission."""
+        total = np.minimum(reach, m_max)
+        return sigma * total, total >= m_min
+
+    # -- lazy-greedy candidate scoring / selection ------------------------
+    def fleet_cols(self, **cols):
+        """Adopt the per-round fleet columns (delta/m_min/m_max/sigma/
+        spare_ub/dom over the kept candidates). Accelerated backends
+        move them device-resident here, once per round."""
+        return {k: np.ascontiguousarray(v) for k, v in cols.items()}
+
+    def score_ub(self, cols, excess_col, dd):
+        """(ub handle, n_viable) — score upper bounds at duration dd.
+
+        ``ub[k] = σ·min(min(spare_ub·dd, excess/δ), m_max)`` where the
+        candidate can reach m_min and its domain has excess, else -inf
+        (Alg. 1 lines 6 + 11, optimistically granting the whole budget).
+        """
+        ex = excess_col[cols["dom"]]
+        reach_ub = np.minimum(cols["spare_ub"] * dd, ex / cols["delta"])
+        ok = (reach_ub >= cols["m_min"]) & (ex > 0)
+        ub = np.where(ok, cols["sigma"] * np.minimum(reach_ub,
+                                                     cols["m_max"]),
+                      -np.inf)
+        return ub, int(np.isfinite(ub).sum())
+
+    def viable_positions(self, ub):
+        """All candidate positions with a finite score upper bound."""
+        return np.nonzero(np.isfinite(np.asarray(ub)))[0]
+
+    def top_m(self, ub, M):
+        """(positions of the top-M upper bounds, M-th value as bound).
+
+        Deterministic tie rule — value descending, position ascending —
+        matching ``jax.lax.top_k``, so capped candidate sets are
+        identical across backends. Requires M < number of finite ubs.
+        """
+        ub = np.asarray(ub)
+        part = np.argpartition(-ub, M - 1)
+        pivot = float(ub[part[M - 1]])
+        strict = np.nonzero(ub > pivot)[0]
+        ties = np.nonzero(ub == pivot)[0][:M - strict.size]
+        return np.concatenate([strict, ties]), pivot
+
+    # -- chunked admission ------------------------------------------------
+    def margin_prefix_ok(self, drain, dom_sel, budgets):
+        """[B] bool: cumulative pre-cap drains of each row's prefix stay
+        under its domain's budget by the 1e-9 relative margin.
+
+        Per-domain prefix scan — clients of different domains never
+        contend. Rows of a domain with ±ulp-negative budget residue
+        degrade to the sequential fallback (all False). Decision-safe
+        under any summation order (see module docstring), which is what
+        lets accelerated backends batch the scan over domains.
+        """
+        ok = np.empty(drain.shape[0], dtype=bool)
+        for pi in np.unique(dom_sel):
+            mask = dom_sel == pi
+            if (budgets[pi] >= 0.0).all():
+                cd = np.cumsum(drain[mask], axis=0)
+                ok[mask] = (cd <= budgets[pi][None, :] * MARGIN).all(axis=1)
+            else:
+                ok[mask] = False
+        return ok
+
+    # -- misc -------------------------------------------------------------
+    def asnumpy(self, x):
+        """Backend array → host ndarray (no-op for the reference)."""
+        return np.asarray(x)
+
+    def __repr__(self):
+        return f"<ArrayBackend {self.name}>"

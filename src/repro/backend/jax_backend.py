@@ -1,0 +1,350 @@
+"""JAX backend: the scheduling hot path, jit-compiled.
+
+Bit-exactness with the NumPy reference comes for free on the ops this
+backend accelerates: uint64 mixing, float elementwise math, gathers and
+``lax.top_k`` (whose tie rule — value descending, index ascending — the
+reference's ``top_m`` mirrors) are all exactly specified, so jitting
+them cannot change a single bit. Ops whose floating-point *reductions*
+feed scheduling bits (``np.cumsum`` inside the evaluators, ``np.exp`` on
+the forecast exponent) are inherited from the host reference — see the
+parity contract in :mod:`repro.backend.base`. The one accelerated
+reduction, the per-domain admission margin scan, is decision-safe under
+reordering and is vmapped over the domain axis (declared as an abstract
+``("domains",)`` mesh via :func:`repro.sharding.specs.make_abstract_mesh`;
+on multi-device platforms that axis can be laid out over real devices,
+on single-device CPU it lowers to one batched scan).
+
+Two mechanical points keep jit practical on this workload:
+
+* **x64** — the scheduler mixes uint64 hashes and float64 scores, so
+  every device call runs under ``jax.experimental.enable_x64`` (scoped:
+  the training stack's float32 default is untouched);
+* **shape bucketing** — candidate counts vary per round and per chunk,
+  and XLA retraces per shape, so inputs are padded to power-of-two row
+  buckets (pads score ``-inf`` / drain ``0`` and cannot be selected),
+  bounding compilation to a handful of shapes per run.
+
+Small chunks stay on the inherited host reference (identical bits,
+lower latency than a device dispatch); ``_DEVICE_MIN_ROWS`` is the
+crossover.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from .base import MARGIN, ArrayBackend
+from .numpy_backend import NumpyBackend
+
+_U64 = np.uint64
+# below this many rows a device dispatch costs more than host math
+_DEVICE_MIN_ROWS = 4096
+
+
+def _bucket(n: int) -> int:
+    """Next power-of-two row count (min 16) — the jit shape bucket."""
+    return max(16, 1 << (max(int(n), 1) - 1).bit_length())
+
+
+def _pad_rows(a: np.ndarray, n_pad: int, fill=0):
+    if n_pad == a.shape[0]:
+        return a
+    pad = np.full((n_pad - a.shape[0],) + a.shape[1:], fill, dtype=a.dtype)
+    return np.concatenate([a, pad], axis=0)
+
+
+# --------------------------------------------------------------------------
+# jitted kernels (traced under x64; all integer/elementwise → bit-exact)
+
+
+@jax.jit
+def _sm64_j(x):
+    x = x + _U64(0x9E3779B97F4A7C15)
+    x = (x ^ (x >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> _U64(27))) * _U64(0x94D049BB133111EB)
+    return x ^ (x >> _U64(31))
+
+
+@jax.jit
+def _chain_j(h, key):
+    return _sm64_j(h ^ key)
+
+
+@jax.jit
+def _u01_j(h):
+    return (h >> _U64(11)).astype(jnp.float64) * (2.0 ** -53)
+
+
+def _mix_cheap(h):
+    h = h * _U64(0xFF51AFD7ED558CCD)
+    h = h ^ (h >> _U64(32))
+    h = h * _U64(0xC4CEB9FE1A85EC53)
+    h = h ^ (h >> _U64(29))
+    return (h >> _U64(40)).astype(jnp.float32) * np.float32(2.0 ** -24)
+
+
+@jax.jit
+def _cheap_u01_j(fold, key):
+    return _mix_cheap(key ^ fold)
+
+
+def _cell_key(rows, t_grid):
+    return (rows[:, None] << _U64(24)) ^ t_grid[None, :]
+
+
+@jax.jit
+def _cell_noise_j(fold, rows, t_grid):
+    return _mix_cheap(_cell_key(rows, t_grid) ^ fold)
+
+
+# split at the mul→add boundary: XLA:CPU contracts a*b+c into an FMA
+# inside one executable (even across optimization_barrier), skipping the
+# intermediate rounding the reference performs; a kernel boundary
+# materializes the f32 product, so the add rounds exactly like NumPy
+@jax.jit
+def _piece_parts_j(levels, slot, fold, rows, t0, amp):
+    util = jnp.take_along_axis(levels, slot, axis=1)
+    t_grid = (t0 + jnp.arange(slot.shape[1], dtype=jnp.int64)).astype(
+        jnp.uint64)
+    noise = _mix_cheap(_cell_key(rows, t_grid) ^ fold)
+    return util, (noise - np.float32(0.5)) * amp
+
+
+@jax.jit
+def _add_clip_j(util, noise):
+    return jnp.clip(util + noise, 0.0, 1.0)
+
+
+# split before the ``* std``: XLA reassociates the back-to-back
+# multiplies ((u − ½)·√12·std) into a single rounding, which the
+# reference performs as two — a kernel boundary materializes the f32
+# intermediate, so the per-lead scale rounds exactly like NumPy
+@jax.jit
+def _forecast_zu_j(fold, rows, now, leads):
+    row_h = _sm64_j(rows ^ fold)[:, None]
+    key = row_h ^ ((now << _U64(20)) + leads[None, :])
+    z = _mix_cheap(key ^ fold)
+    return (z - np.float32(0.5)) * np.float32(np.sqrt(12.0))
+
+
+@jax.jit
+def _mul_std_j(z, std):
+    return z * std[None, :]
+
+
+@jax.jit
+def _score_ub_j(spare_ub, delta, m_min, m_max, sigma, dom, excess_col, dd):
+    ex = excess_col[dom]
+    reach_ub = jnp.minimum(spare_ub * dd, ex / delta)
+    ok = (reach_ub >= m_min) & (ex > 0)
+    ub = jnp.where(ok, sigma * jnp.minimum(reach_ub, m_max), -jnp.inf)
+    return ub, jnp.isfinite(ub).sum()
+
+
+@partial(jax.jit, static_argnums=1)
+def _top_m_j(ub, M):
+    vals, idx = jax.lax.top_k(ub, M)
+    return idx, vals[M - 1]
+
+
+@jax.jit
+def _take_matrix_j(spare, budget_rows, delta):
+    return jnp.minimum(spare, budget_rows / delta[:, None])
+
+
+@jax.jit
+def _greedy_scores_j(sigma, reach, m_min, m_max):
+    total = jnp.minimum(reach, m_max)
+    return sigma * total, total >= m_min
+
+
+@jax.jit
+def _margin_j(drain, dom_sel, budgets, doms):
+    def one(p):
+        mask = dom_sel == p
+        cd = jnp.cumsum(jnp.where(mask[:, None], drain, 0.0), axis=0)
+        okp = (cd <= budgets[p][None, :] * MARGIN).all(axis=1)
+        okp = okp & (budgets[p] >= 0.0).all()
+        return jnp.where(mask, okp, True)
+
+    return jax.vmap(one)(doms).all(axis=0)
+
+
+class JaxBackend(NumpyBackend):
+    name = "jax"
+
+    def __init__(self):
+        # the vmapped margin scan batches over this abstract axis; with
+        # >1 device the axis maps onto real hardware, on one device it
+        # lowers to a single batched scan
+        from repro.sharding.specs import make_abstract_mesh
+        self.domain_mesh = make_abstract_mesh((len(jax.devices()),),
+                                              ("domains",))
+
+    # -- counter-hash synthesis primitives -------------------------------
+    def _flat(self, fn, x, dtype, *extra):
+        """Pad-to-bucket → jit → slice/reshape for 1-d-able primitives."""
+        x = np.asarray(x, dtype=np.uint64)
+        flat = x.ravel()
+        n = flat.size
+        with enable_x64():
+            out = fn(jnp.asarray(_pad_rows(flat, _bucket(n))), *extra)
+            out = np.asarray(out[:n], dtype=dtype)
+        return out.reshape(x.shape)
+
+    def sm64(self, x):
+        return self._flat(_sm64_j, x, np.uint64)
+
+    def u01(self, h):
+        return self._flat(_u01_j, h, np.float64)
+
+    def cheap_u01(self, fold, key):
+        key = np.asarray(key, dtype=np.uint64)
+        flat = key.ravel()
+        n = flat.size
+        with enable_x64():
+            out = _cheap_u01_j(_U64(fold),
+                               jnp.asarray(_pad_rows(flat, _bucket(n))))
+            out = np.asarray(out[:n], dtype=np.float32)
+        return out.reshape(key.shape)
+
+    def hash64(self, seed, salt, *keys):
+        from .base import sm64 as host_sm64
+        h0 = host_sm64(np.asarray(
+            _U64(seed) ^ host_sm64(np.asarray(_U64(salt)))))
+        keys = [np.asarray(k, dtype=np.uint64) for k in keys]
+        if not keys:
+            return h0
+        shape = np.broadcast_shapes(*(k.shape for k in keys))
+        h = np.broadcast_to(np.asarray(h0), shape).copy()
+        for k in keys:
+            kb = np.ascontiguousarray(np.broadcast_to(k, shape))
+            n = h.size
+            with enable_x64():
+                out = _chain_j(jnp.asarray(_pad_rows(h.ravel(), _bucket(n))),
+                               jnp.asarray(_pad_rows(kb.ravel(), _bucket(n))))
+                h = np.asarray(out[:n], dtype=np.uint64).reshape(shape)
+        return h
+
+    # -- fused synthesis grids -------------------------------------------
+    def cell_noise(self, fold, rows, t_grid):
+        rows = np.asarray(rows, dtype=np.uint64)
+        t_grid = np.asarray(t_grid, dtype=np.uint64)
+        if rows.size * t_grid.size < _DEVICE_MIN_ROWS:
+            return super().cell_noise(fold, rows, t_grid)
+        rp = _bucket(rows.size)
+        with enable_x64():
+            out = _cell_noise_j(_U64(fold),
+                                jnp.asarray(_pad_rows(rows, rp)),
+                                jnp.asarray(t_grid))
+            return np.asarray(out[:rows.size], dtype=np.float32)
+
+    def piece_grid(self, levels, slot, fold, rows, t0, amp):
+        R, W = slot.shape
+        if R * W < _DEVICE_MIN_ROWS:
+            return super().piece_grid(levels, slot, fold, rows, t0, amp)
+        rp, wp = _bucket(R), _bucket(W)
+        levels = _pad_rows(np.ascontiguousarray(levels), rp)
+        slot_p = np.zeros((rp, wp), dtype=np.int64)
+        slot_p[:R, :W] = slot
+        rows_p = _pad_rows(np.asarray(rows, dtype=np.uint64), rp)
+        with enable_x64():
+            util, noise = _piece_parts_j(jnp.asarray(levels),
+                                         jnp.asarray(slot_p), _U64(fold),
+                                         jnp.asarray(rows_p),
+                                         np.int64(t0), np.float32(amp))
+            out = _add_clip_j(util, noise)
+            return np.array(out[:R, :W], dtype=np.float32)
+
+    def forecast_noise_z(self, fc_fold, rows, now, horizon, std):
+        rows = np.asarray(rows, dtype=np.uint64)
+        if rows.size * horizon < _DEVICE_MIN_ROWS:
+            return super().forecast_noise_z(fc_fold, rows, now, horizon, std)
+        rp, hp = _bucket(rows.size), _bucket(horizon)
+        leads = np.arange(1, hp + 1, dtype=np.uint64)
+        std_b = np.zeros(hp, dtype=np.float32)
+        std_b[:horizon] = np.broadcast_to(
+            np.asarray(std, dtype=np.float32), (horizon,))
+        with enable_x64():
+            zu = _forecast_zu_j(_U64(fc_fold),
+                                jnp.asarray(_pad_rows(rows, rp)),
+                                _U64(now), jnp.asarray(leads))
+            out = _mul_std_j(zu, jnp.asarray(std_b))
+            return np.array(out[:rows.size, :horizon], dtype=np.float32)
+
+    # -- greedy-solver elementwise math ----------------------------------
+    def take_matrix(self, spare, budget_rows, delta):
+        if spare.size < _DEVICE_MIN_ROWS:
+            return super().take_matrix(spare, budget_rows, delta)
+        B = spare.shape[0]
+        bp = _bucket(B)
+        with enable_x64():
+            out = _take_matrix_j(
+                jnp.asarray(_pad_rows(np.ascontiguousarray(spare), bp)),
+                jnp.asarray(_pad_rows(np.ascontiguousarray(budget_rows), bp)),
+                jnp.asarray(_pad_rows(np.asarray(delta), bp, fill=1.0)))
+            return np.asarray(out[:B])
+
+    def greedy_scores(self, sigma, reach, m_min, m_max):
+        if sigma.size < _DEVICE_MIN_ROWS:
+            return super().greedy_scores(sigma, reach, m_min, m_max)
+        B = sigma.shape[0]
+        bp = _bucket(B)
+        with enable_x64():
+            score, feas = _greedy_scores_j(
+                jnp.asarray(_pad_rows(sigma, bp)),
+                jnp.asarray(_pad_rows(reach, bp)),
+                jnp.asarray(_pad_rows(m_min, bp, fill=np.inf)),
+                jnp.asarray(_pad_rows(m_max, bp)))
+            return np.asarray(score[:B]), np.asarray(feas[:B])
+
+    # -- lazy-greedy candidate scoring / selection ------------------------
+    def fleet_cols(self, **cols):
+        """Move the per-round fleet columns device-resident, padded to
+        the jit shape bucket (pads score -inf and are never selected)."""
+        n = cols["delta"].shape[0]
+        kp = _bucket(n)
+        fills = {"delta": 1.0, "m_min": np.inf}
+        with enable_x64():
+            out = {k: jnp.asarray(_pad_rows(
+                np.ascontiguousarray(v), kp, fill=fills.get(k, 0)))
+                for k, v in cols.items()}
+        out["_rows"] = n
+        return out
+
+    def score_ub(self, cols, excess_col, dd):
+        with enable_x64():
+            ub, n_viable = _score_ub_j(
+                cols["spare_ub"], cols["delta"], cols["m_min"],
+                cols["m_max"], cols["sigma"], cols["dom"],
+                jnp.asarray(excess_col), np.float64(dd))
+        return ub, int(n_viable)
+
+    def top_m(self, ub, M):
+        with enable_x64():
+            idx, bound = _top_m_j(ub, int(M))
+        return np.asarray(idx, dtype=np.int64), float(bound)
+
+    # -- chunked admission ------------------------------------------------
+    def margin_prefix_ok(self, drain, dom_sel, budgets):
+        B = drain.shape[0]
+        if B * drain.shape[1] < _DEVICE_MIN_ROWS:
+            return super().margin_prefix_ok(drain, dom_sel, budgets)
+        bp = _bucket(B)
+        doms = np.arange(budgets.shape[0], dtype=np.int64)
+        with enable_x64():
+            ok = _margin_j(
+                jnp.asarray(_pad_rows(np.ascontiguousarray(drain), bp)),
+                jnp.asarray(_pad_rows(
+                    np.asarray(dom_sel, dtype=np.int64), bp)),
+                jnp.asarray(budgets), jnp.asarray(doms))
+            return np.asarray(ok[:B])
+
+    # -- misc -------------------------------------------------------------
+    def asnumpy(self, x):
+        return np.asarray(x)

@@ -77,7 +77,10 @@ class FleetSection:
     seed: int = 0
     min_epochs: float = 1.0
     max_epochs: float = 5.0
-    max_output: float = 800.0
+    # domain power cap in W: a scalar, or a per-domain [P] array — then
+    # build_scenario also sizes each domain's solar peak from it (the
+    # fleet's installations win over the scenario's uniform peak_w)
+    max_output: object = 800.0
     samples_per_client: Optional[np.ndarray] = None
 
 
@@ -109,7 +112,14 @@ class TrainerSection:
 class RunSection:
     """Simulation horizon and reporting cadence. ``until_step`` wins over
     ``days`` (which resolves to ``days·1440 − d_max − 1``, the benchmark
-    convention); both ``None`` runs to the end of the scenario."""
+    convention); both ``None`` runs to the end of the scenario.
+
+    ``backend`` picks the array backend for the scheduling hot path
+    (``repro.backend.available_backends()``: ``"numpy"`` is the bit-exact
+    host reference, ``"jax"`` the jit-compiled device path). It threads
+    into both the scenario store (sparse-util gather grids) and the
+    selection solvers, and wins over any ``backend`` in the strategy
+    section's options — the run decides where its math executes."""
 
     until_step: Optional[int] = None
     days: Optional[float] = None
@@ -118,6 +128,7 @@ class RunSection:
     eval_every: int = 5
     seed: int = 0
     verbose: bool = False
+    backend: str = "numpy"
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -161,6 +172,14 @@ class ExperimentConfig:
 # granular builders
 
 
+def _fleet_peak_w(cfg: ExperimentConfig):
+    """Solar peak per domain: a per-domain ``fleet.max_output`` array
+    sizes each domain's installation (caps and panels are the same
+    hardware), else the scenario's uniform ``peak_w``."""
+    mo = np.asarray(cfg.fleet.max_output, dtype=float)
+    return mo if mo.ndim else cfg.scenario.peak_w
+
+
 def build_scenario(cfg: ExperimentConfig) -> ScenarioStore:
     sc = cfg.scenario
     if sc.excess is not None or sc.util is not None:
@@ -174,11 +193,14 @@ def build_scenario(cfg: ExperimentConfig) -> ScenarioStore:
         return ScenarioStore(
             excess=sc.excess, util=sc.util, carbon=sc.carbon,
             domain_names=list(sc.domain_names or ()), seed=sc.seed,
-            error=sc.error, unlimited_domains=sc.unlimited_domains)
+            error=sc.error, unlimited_domains=sc.unlimited_domains,
+            backend=cfg.run.backend)
     return make_scenario(sc.name, n_clients=cfg.fleet.n_clients,
-                         days=sc.days, seed=sc.seed, peak_w=sc.peak_w,
+                         days=sc.days, seed=sc.seed,
+                         peak_w=_fleet_peak_w(cfg),
                          error=sc.error, util_mode=sc.util_mode,
-                         unlimited_domains=sc.unlimited_domains)
+                         unlimited_domains=sc.unlimited_domains,
+                         backend=cfg.run.backend)
 
 
 def build_registry(cfg: ExperimentConfig,
@@ -223,7 +245,10 @@ def build_experiment(cfg: ExperimentConfig, *,
     if registry is None:
         registry = build_registry(cfg, scenario)
     if strategy is None:
-        strategy = make_strategy(cfg.strategy, registry)
+        # the run section decides where the math executes: its backend
+        # overrides any 'backend' in the strategy options
+        strategy = make_strategy(cfg.strategy, registry,
+                                 backend=cfg.run.backend)
     if trainer is None:
         trainer = build_trainer(cfg, registry)
     return FLSimulation(registry, scenario, strategy, trainer,
@@ -279,10 +304,15 @@ def run_sweep(cfgs: Sequence[ExperimentConfig], *,
     registries: Dict[tuple, ClientRegistry] = {}
     out = []
     for cfg in cfgs:
-        # keyed by section identity AND fleet size: a synthesized store's
+        # keyed by section identity AND fleet size (a synthesized store's
         # util panel is [n_clients, T], so differently-sized fleets can
-        # never share one
-        key = (id(cfg.scenario), cfg.fleet.n_clients)
+        # never share one) AND the run backend + derived solar peaks,
+        # which both parameterize the store itself
+        mo = np.asarray(cfg.fleet.max_output, dtype=float)
+        bk = cfg.run.backend
+        key = (id(cfg.scenario), cfg.fleet.n_clients,
+               bk if isinstance(bk, str) else id(bk),
+               tuple(mo.tolist()) if mo.ndim else None)
         store = stores.get(key)
         if store is None:
             store = build_scenario(cfg)

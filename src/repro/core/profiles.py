@@ -40,9 +40,10 @@ def make_paper_registry(n_clients: int = 100, n_domains: int = 10,
                         samples_per_client: Optional[np.ndarray] = None,
                         min_epochs: float = 1.0, max_epochs: float = 5.0,
                         domain_names: Optional[List[str]] = None,
-                        max_output: float = 800.0) -> ClientRegistry:
+                        max_output=800.0) -> ClientRegistry:
     """The paper's experimental setup: 100 clients of 3 random types over
-    10 power domains with 800 W peak each.
+    10 power domains with 800 W peak each. ``max_output`` may be a
+    per-domain [P] array for heterogeneous domain caps.
 
     Fleet synthesis is fully vectorized onto
     :meth:`ClientRegistry.from_arrays`: the RNG draw order is unchanged

@@ -52,6 +52,7 @@ import numpy as np
 import scipy.sparse as sp
 from scipy.optimize import Bounds, LinearConstraint, milp
 
+from ..backend import get_backend
 from .types import ClientRegistry, Selection
 
 
@@ -70,6 +71,7 @@ class SelectionInputs:
     sigma: np.ndarray          # [K] statistical utility (0 = blocked)
     rows: np.ndarray           # [K] registry row per candidate
     dom: np.ndarray            # [K] domain row (into r_excess) per candidate
+    backend: object = None     # ArrayBackend / name / None (numpy)
 
     def arrays(self):
         """SoA client data gathered for the candidate rows (cached).
@@ -102,9 +104,10 @@ class _ProbeCache:
         delta, m_min, m_max, dom = inp.arrays()
         self.delta, self.m_min, self.m_max, self.dom = delta, m_min, m_max, dom
         self._inp = inp
+        self.bk = get_backend(inp.backend)
         self.excess_cum = np.cumsum(inp.r_excess, axis=1)
         self.reach_cum = np.cumsum(
-            np.minimum(inp.m_spare, inp.r_excess[dom] / delta[:, None]),
+            self.bk.take_matrix(inp.m_spare, inp.r_excess[dom], delta),
             axis=1)
         self._ub = None
         # greedy rank memo: rank depends on d only through the clamped
@@ -119,7 +122,7 @@ class _ProbeCache:
     def ub(self) -> np.ndarray:
         """Clipped m_spare slab — only the MIP needs it, built lazily."""
         if self._ub is None:
-            self._ub = np.maximum(self._inp.m_spare, 0.0)
+            self._ub = self.bk.relu(self._inp.m_spare)
         return self._ub
 
 
@@ -289,9 +292,9 @@ def _rank_candidates(inp: SelectionInputs, d: int, el: np.ndarray,
     delta, m_min, m_max, dom = soa
     if dd <= 0:
         return np.empty(0, dtype=int), soa
-    total = np.minimum(cache.reach_cum[el, dd - 1], m_max)
-    feas = total >= m_min
-    score = inp.sigma[el] * total
+    score, feas = cache.bk.greedy_scores(inp.sigma[el],
+                                         cache.reach_cum[el, dd - 1],
+                                         m_min, m_max)
     cand = np.nonzero(feas)[0]
     cand = cand[np.lexsort((-el[cand], -score[cand]))]
     cache._rank_memo[dd] = (el_key, cand, soa)
@@ -380,8 +383,8 @@ def _solve_greedy(inp: SelectionInputs, d: int, n: int, eligible: List[int],
     while rows.size and len(chosen) < n:
         nc = min(chunk_size, rows.size)
         r, dr = rows[:nc], drows[:nc]
-        take = np.minimum(inp.m_spare[srows[:nc], :d],
-                          budgets[dr] / delta[r, None])
+        take = cache.bk.take_matrix(inp.m_spare[srows[:nc], :d],
+                                    budgets[dr], delta[r])
         cum = np.cumsum(take, axis=1)
         total = np.minimum(cum[:, -1], m_max[r])
         feas = total >= m_min[r]
@@ -397,16 +400,9 @@ def _solve_greedy(inp: SelectionInputs, d: int, n: int, eligible: List[int],
                           np.maximum(take - overshoot, 0.0), take)
         # per-domain cumulative pre-cap drains within the chunk; rows of a
         # domain with ±ulp-negative budget residue degrade to sequential
+        # (backend op: decision-safe prefix scan, vmapped under jax)
         drain = take * delta[r, None]
-        ok = np.empty(r.size, dtype=bool)
-        for pi in np.unique(dr):
-            mask = dr == pi
-            if (budgets[pi] >= 0.0).all():
-                cd = np.cumsum(drain[mask], axis=0)
-                ok[mask] = (cd <= budgets[pi][None, :]
-                            * (1.0 - 1e-9)).all(axis=1)
-            else:
-                ok[mask] = False
+        ok = cache.bk.margin_prefix_ok(drain, dr, budgets)
         bad = np.nonzero(~ok)[0]
         npfx = int(bad[0]) if bad.size else r.size
         npfx = max(1, min(npfx, n - len(chosen)))
@@ -459,6 +455,7 @@ class LazySelectionInputs:
     # that set (the documented fleet-scale approximation; deterministic,
     # and identical to exact whenever cap ≥ the tie depth).
     candidate_cap: int = 0
+    backend: object = None     # ArrayBackend / name / None (numpy)
 
 
 class _LazyGreedy:
@@ -467,9 +464,10 @@ class _LazyGreedy:
     Per probed duration ``dd`` the engine computes a cheap per-candidate
     **score upper bound** (full spare every step against the domain's
     cumulative excess — the line-11 test's optimistic grant, clipped by
-    m_max and scaled by σ), selects the top-M candidates by that bound
-    with one O(K) ``argpartition`` (no full K-sized sort anywhere), and
-    gathers real forecasts only for them. Admission then walks the
+    m_max and scaled by σ), computed by the array backend over
+    backend-resident fleet columns, selects the top-M candidates by that
+    bound with one O(K) backend ``top_m`` (deterministic ties, no full
+    K-sized sort anywhere), and gathers real forecasts only for them. Admission then walks the
     evaluated candidates in true-score order — ties broken exactly like
     :func:`_rank_candidates` (descending candidate position) — and may
     touch a candidate only while its true score is strictly above
@@ -490,6 +488,7 @@ class _LazyGreedy:
         reg = inp.registry
         self.inp = inp
         self.n = n
+        self.bk = get_backend(inp.backend)
         rows = np.asarray(inp.rows, dtype=int)
         self.delta = reg.delta_arr[rows]
         self.m_min = reg.m_min_arr[rows]
@@ -500,30 +499,31 @@ class _LazyGreedy:
         self.excess_cum = np.cumsum(inp.r_excess, axis=1)
         self.H = self.excess_cum.shape[1]
         self._kept = np.nonzero(self.sigma > 0)[0]   # Alg. 1 line 8
-        self._ub_memo: dict = {}       # dd -> [kept] score upper bounds
+        self._cols = None              # backend-resident fleet columns
+        self._ub_memo: dict = {}       # dd -> (ub handle, n_viable)
         # evaluation store: doubling buffers, position -> buffer row
         self._eval_idx = np.full(self.sigma.size, -1, dtype=np.int64)
         self._reach_buf = np.empty((0, self.H))   # [E, H] reach cumsums
         self._spare_buf = np.empty((0, self.H))   # [E, H] m_spare rows
         self.evaluated = 0             # rows gathered (benchmark counter)
 
-    def _ub(self, dd: int) -> np.ndarray:
-        """[kept] score upper bounds at duration ``dd`` (-inf where the
-        candidate can never be admitted at dd)."""
+    def _ub(self, dd: int):
+        """(ub handle, n_viable) at duration ``dd`` — backend-computed
+        score upper bounds over the kept candidates (-inf where the
+        candidate can never be admitted at dd). The fleet columns move
+        backend-resident once per round, on first use."""
         hit = self._ub_memo.get(dd)
-        if hit is not None:
-            return hit
-        k = self._kept
-        reach_ub = np.minimum(self.spare_ub[k] * dd,
-                              self.excess_cum[self.dom[k], dd - 1]
-                              / self.delta[k])
-        ok = (reach_ub >= self.m_min[k]) \
-            & (self.excess_cum[self.dom[k], dd - 1] > 0)   # line 6 + 11
-        ub = np.where(ok, self.sigma[k] * np.minimum(reach_ub,
-                                                     self.m_max[k]),
-                      -np.inf)
-        self._ub_memo[dd] = ub
-        return ub
+        if hit is None:
+            if self._cols is None:
+                k = self._kept
+                self._cols = self.bk.fleet_cols(
+                    delta=self.delta[k], m_min=self.m_min[k],
+                    m_max=self.m_max[k], sigma=self.sigma[k],
+                    spare_ub=self.spare_ub[k], dom=self.dom[k])
+            hit = self.bk.score_ub(self._cols, self.excess_cum[:, dd - 1],
+                                   float(dd))   # line 6 + 11
+            self._ub_memo[dd] = hit
+        return hit
 
     def _evaluate(self, pos: np.ndarray):
         """Gather forecasts for the not-yet-evaluated candidates (one
@@ -533,8 +533,8 @@ class _LazyGreedy:
             return
         spare = np.asarray(self.inp.spare_of(miss), dtype=float)
         reach = np.cumsum(
-            np.minimum(spare, self.inp.r_excess[self.dom[miss]]
-                       / self.delta[miss, None]), axis=1)
+            self.bk.take_matrix(spare, self.inp.r_excess[self.dom[miss]],
+                                self.delta[miss]), axis=1)
         base = self.evaluated
         need = base + miss.size
         if need > self._reach_buf.shape[0]:
@@ -554,8 +554,7 @@ class _LazyGreedy:
         dd = min(d, self.H)
         if dd <= 0 or self._kept.size < self.n:
             return None
-        ub = self._ub(dd)
-        n_viable = int(np.isfinite(ub).sum())
+        ub, n_viable = self._ub(dd)
         if n_viable < self.n:
             return None
         cap = int(self.inp.candidate_cap)
@@ -563,11 +562,10 @@ class _LazyGreedy:
         M = min(max(int(self.inp.block), 4 * self.n, 64), ceiling)
         while True:
             if M >= n_viable:
-                top = np.nonzero(np.isfinite(ub))[0]
+                top = self.bk.viable_positions(ub)
                 bound = -np.inf
             else:
-                part = np.argpartition(-ub, M - 1)
-                top, bound = part[:M], float(ub[part[M - 1]])
+                top, bound = self.bk.top_m(ub, M)
             if M >= ceiling < n_viable:
                 # capped: admission is exact within the top-`ceiling`
                 # set; candidates beyond it are out of scope by contract
@@ -589,63 +587,74 @@ class _LazyGreedy:
     def _admit(self, cand: np.ndarray, dd: int, bound: float,
                feasibility_only: bool):
         """One admission pass over the evaluated candidate set; None if
-        the walk reaches ``bound`` (or runs dry) before n admissions.
+        the candidates scoring strictly above ``bound`` run out before n
+        admissions (an unevaluated candidate could rank among them).
 
-        Candidates are walked in exact (score desc, position desc) order,
-        extracted in score-partitioned chunks: a chunk is every remaining
-        candidate whose score is strictly above the partition pivot, so
-        ties never straddle a chunk boundary and no K-sized sort ever
-        runs — admission order is identical to sorting everyone.
+        Candidates are walked in exact (score desc, position desc) order
+        — one lexsort over the evaluated set — and admitted in batched
+        chunk passes mirroring :func:`_solve_greedy`: optimistic takes
+        for a whole chunk against its domains' current budgets
+        (backend ``take_matrix``), bulk rejection of rows that cannot
+        reach m_min (exact — reach only shrinks as budgets drain), then
+        commit of the longest prefix whose cumulative pre-cap drains
+        stay under their domain budgets by the 1e-9 relative margin
+        (backend ``margin_prefix_ok``). Margin-valid rows are
+        spare/m_max-limited at every step, so their takes are
+        bit-identical to a per-candidate sequential walk; a
+        budget-limited head row falls back to an exact single
+        admission, and every pass either admits ≥ 1 client or retires a
+        whole chunk. Selections match the sequential reference exactly
+        at O(passes) instead of O(walked candidates) Python iterations.
         """
         eids = self._eval_idx[cand]
         reach_dd = self._reach_buf[eids, dd - 1]
-        total = np.minimum(reach_dd, self.m_max[cand])
-        feas = total >= self.m_min[cand]
-        score = np.where(feas, self.sigma[cand] * total, -np.inf)
+        score, feas = self.bk.greedy_scores(self.sigma[cand], reach_dd,
+                                            self.m_min[cand],
+                                            self.m_max[cand])
+        score = np.where(feas, score, -np.inf)
+        order = np.lexsort((-cand, -score))
+        # the walk may only admit candidates scoring strictly above the
+        # bound; -score[order] is ascending, so the count of admissible
+        # candidates is one searchsorted (excludes -inf rows for free)
+        n_valid = int(np.searchsorted(-score[order], -float(bound),
+                                      side="left"))
+        queue = order[:n_valid]
         budgets = self.inp.r_excess[:, :dd].copy()
         chosen: List[int] = []
         batches = []
-        remaining = np.arange(cand.size)
         chunk = max(4 * self.n, 64)
-        while len(chosen) < self.n:
-            if remaining.size == 0:
-                return None   # ran dry; caller expands / finalizes
-            if remaining.size > chunk:
-                part = np.argpartition(-score[remaining], chunk - 1)
-                pivot = float(score[remaining[part[chunk - 1]]])
-                head_mask = score[remaining] > pivot
-                if head_mask.any():
-                    head = remaining[head_mask]
-                    rest = remaining[~head_mask]
-                else:       # massive tie at the pivot: no strict head
-                    head, rest = remaining, remaining[:0]
-            else:
-                head, rest = remaining, remaining[:0]
-            for j in head[np.lexsort((-cand[head], -score[head]))].tolist():
-                if len(chosen) == self.n:
-                    break
-                if not np.isfinite(score[j]):
-                    break   # sorted: only -inf (infeasible) rows follow
-                if score[j] <= bound:
-                    return None  # an unevaluated candidate could rank here
-                pj = int(cand[j])
-                pi, delta_j = self.dom[pj], self.delta[pj]
-                take = np.minimum(self._spare_buf[eids[j], :dd],
-                                  budgets[pi] / delta_j)
-                cum = np.cumsum(take)
-                if min(cum[-1], self.m_max[pj]) < self.m_min[pj]:
-                    continue   # budget-shrunk below m_min: reject exactly
-                overshoot = cum - self.m_max[pj]
-                take = np.where(overshoot > 0,
-                                np.maximum(take - overshoot, 0.0), take)
-                budgets[pi] -= take * delta_j
-                chosen.append(pj)
-                if not feasibility_only:
-                    batches.append(take)
-            else:
-                remaining = rest
+        while queue.size and len(chosen) < self.n:
+            nc = min(chunk, queue.size)
+            q = queue[:nc]
+            cj = cand[q]
+            dj = self.dom[cj]
+            delta_j = self.delta[cj]
+            take = self.bk.take_matrix(self._spare_buf[eids[q], :dd],
+                                       budgets[dj], delta_j)
+            cum = np.cumsum(take, axis=1)
+            total = np.minimum(cum[:, -1], self.m_max[cj])
+            ok_reach = total >= self.m_min[cj]
+            if not ok_reach.any():
+                queue = queue[nc:]
+                chunk *= 2      # unproductive pass: sweep faster
                 continue
-            break   # admission filled n (inner break)
+            keep = np.nonzero(ok_reach)[0]
+            q, cj, dj, delta_j = q[keep], cj[keep], dj[keep], delta_j[keep]
+            take, cum = take[keep], cum[keep]
+            overshoot = cum - self.m_max[cj][:, None]
+            capped = np.where(overshoot > 0,
+                              np.maximum(take - overshoot, 0.0), take)
+            drain = take * delta_j[:, None]
+            ok = self.bk.margin_prefix_ok(drain, dj, budgets)
+            bad = np.nonzero(~ok)[0]
+            npfx = int(bad[0]) if bad.size else q.size
+            npfx = max(1, min(npfx, self.n - len(chosen)))
+            for i in range(npfx):   # ≤ n tiny [dd] commits, identical
+                budgets[dj[i]] -= capped[i] * delta_j[i]  # to sequential
+                chosen.append(int(cj[i]))
+                if not feasibility_only:
+                    batches.append(capped[i])
+            queue = np.concatenate([q[npfx:], queue[nc:]])
         if len(chosen) < self.n:
             return None
         return chosen, (None if feasibility_only else np.array(batches))

@@ -208,10 +208,17 @@ class FLSimulation:
         return self.summary()
 
     # ------------------------------------------------------------------
-    def summary(self) -> Dict:
-        """Aggregate run statistics — the reporting boundary where row
-        counters are translated back to client names (schema unchanged
-        across the row-ID refactor)."""
+    def summary(self, names: bool = False) -> Dict:
+        """Aggregate run statistics.
+
+        ``participation`` is keyed by registry row by default — a [C]
+        list where entry r is row r's contribution count — so summarizing
+        a fleet-scale run never materializes the name list (array-built
+        registries generate names lazily, and a 1M-entry name-keyed dict
+        is exactly the O(C) Python-object cost the row-ID refactor
+        removed from the scheduling path). Pass ``names=True`` at the
+        reporting boundary to get the legacy name-keyed dict instead.
+        """
         total_energy = sum(r.energy_used for r in self.results)
         metrics, cum_e = [], 0.0
         for r in self.results:
@@ -235,7 +242,8 @@ class FLSimulation:
             "std_round_duration": float(np.std(durations)) if durations else 0,
             "participation": {name: int(count) for name, count in
                               zip(self.registry.client_names,
-                                  self.participation)},
+                                  self.participation)}
+            if names else self.participation.astype(int).tolist(),
         }
 
     def time_energy_to_metric(self, target: float):

@@ -78,12 +78,15 @@ class BaseStrategy:
 
     def __init__(self, registry: ClientRegistry, n: int = 10, d_max: int = 60,
                  seed: int = 0, over_select: float = 1.0,
-                 use_forecast_filter: bool = False):
+                 use_forecast_filter: bool = False, backend=None):
         self.registry = registry
         self.n = n
         self.d_max = d_max
         self.over_select = over_select
         self.use_forecast_filter = use_forecast_filter
+        # array backend threaded into the selection solvers; strategies
+        # that never build SelectionInputs simply ignore it
+        self.backend = backend
         self.rng = np.random.default_rng(seed)
         self.utility = UtilityTracker(registry.n_samples_arr)
 
@@ -317,7 +320,7 @@ class FedZeroStrategy(BaseStrategy):
                 inp = SelectionInputs(
                     registry=self.registry, m_spare=m_spare,
                     r_excess=excess_fc, sigma=sigma[cand], rows=cand,
-                    dom=env.dom_rows[cand])
+                    dom=env.dom_rows[cand], backend=self.backend)
             sel = select_clients(inp, self.n, self.d_max, solver=self.solver,
                                  search=self.search)
         if sel is not None:
@@ -351,7 +354,8 @@ class FedZeroStrategy(BaseStrategy):
         return LazySelectionInputs(
             registry=registry, spare_of=spare_of, m_spare_ub=cap_all[cand],
             r_excess=excess_fc, sigma=sigma[cand], rows=cand,
-            dom=env.dom_rows[cand], candidate_cap=self.candidate_cap)
+            dom=env.dom_rows[cand], candidate_cap=self.candidate_cap,
+            backend=self.backend)
 
     def record_round(self, contributors, selected, sample_losses):
         super().record_round(contributors, selected, sample_losses)

@@ -134,7 +134,12 @@ class ClientRegistry:
         self._name_fmt = "client_{:03d}"
         self._n = len(clients)
         self._domain_names = [p.name for p in domains]
-        self._max_output = domains[0].max_output if domains else 800.0
+        # per-domain W caps; collapses to a scalar when uniform so legacy
+        # single-cap registries round-trip unchanged
+        caps = {p.max_output for p in domains}
+        self._max_output = (caps.pop() if len(caps) == 1 else
+                            np.array([p.max_output for p in domains],
+                                     dtype=float)) if domains else 800.0
         self._domain_idx: Optional[np.ndarray] = None
         self._domain_of: Optional[Dict[str, str]] = \
             {c.name: c.domain for c in clients}
@@ -151,14 +156,19 @@ class ClientRegistry:
                     domain_names: Sequence[str],
                     names: Optional[Sequence[str]] = None,
                     name_fmt: str = "client_{:03d}",
-                    max_output: float = 800.0,
+                    max_output=800.0,
                     batches_per_epoch: Optional[np.ndarray] = None,
                     min_epochs=1.0, max_epochs=5.0) -> "ClientRegistry":
         """Canonical array-first constructor: adopt SoA columns directly.
 
         ``domain_idx[c]`` indexes ``domain_names``; ``names`` (or lazily
         ``name_fmt.format(row)``) exists only for the I/O boundary and is
-        not generated here. ``batches_per_epoch``/``min_epochs``/
+        not generated here. ``max_output`` is the domain power cap in W —
+        a scalar (paper §5.1: 800 W everywhere) or a per-domain
+        ``[len(domain_names)]`` array for heterogeneous solar
+        installations (``max_output_arr`` serves the broadcast view;
+        :func:`repro.core.experiment.build_scenario` sizes each domain's
+        solar peak from it). ``batches_per_epoch``/``min_epochs``/
         ``max_epochs`` parameterize the on-demand :class:`ClientSpec`
         view only — when omitted, view specs carry ``batches_per_epoch=1``
         with ``min/max_epochs`` equal to the batch bounds, so their
@@ -185,7 +195,16 @@ class ClientRegistry:
         if self._domain_idx.shape != (n,):
             raise ValueError("domain_idx shape mismatch")
         self._domain_names = list(domain_names)
-        self._max_output = float(max_output)
+        mo = np.asarray(max_output, dtype=float)
+        if mo.ndim == 0:
+            self._max_output = float(mo)
+        elif mo.shape == (len(self._domain_names),):
+            # per-domain W caps (heterogeneous solar installations)
+            self._max_output = mo.copy()
+        else:
+            raise ValueError(
+                f"max_output has shape {mo.shape}, expected a scalar or "
+                f"({len(self._domain_names)},) per-domain caps")
         self._n = n
         self._names = list(names) if names is not None else None
         if self._names is not None and len(self._names) != n:
@@ -294,6 +313,14 @@ class ClientRegistry:
         return self._materialize_specs()
 
     @property
+    def max_output_arr(self) -> np.ndarray:
+        """[P] per-domain power cap in W (a scalar cap broadcasts)."""
+        mo = np.asarray(self._max_output, dtype=float)
+        if mo.ndim == 0:
+            return np.full(len(self._domain_names), float(mo))
+        return mo
+
+    @property
     def domains(self) -> Dict[str, PowerDomain]:
         """name → :class:`PowerDomain` view (materialized on demand)."""
         if self._domains_dict is None:
@@ -302,10 +329,11 @@ class ClientRegistry:
                 {d: [] for d in self._domain_names}
             for i, di in enumerate(self._domain_idx):
                 dom_clients[self._domain_names[di]].append(names[i])
+            mo = self.max_output_arr
             self._domains_dict = {
                 d: PowerDomain(name=d, clients=dom_clients[d],
-                               max_output=self._max_output)
-                for d in self._domain_names}
+                               max_output=float(mo[j]))
+                for j, d in enumerate(self._domain_names)}
         return self._domains_dict
 
     # -- name↔row boundary (construction / reporting only) ---------------

@@ -65,6 +65,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 from scipy.signal import lfilter
 
+from ..backend import base as backend_base
+from ..backend import get_backend
+
 # (name, utc_offset_hours, typical cloudiness in [0,1])
 GLOBAL_CITIES = [
     ("berlin", 1, 0.45), ("san_francisco", -8, 0.25), ("new_york", -5, 0.35),
@@ -108,44 +111,17 @@ _U64 = np.uint64
 _SPARSE_SALTS = {"init": 201, "gap": 202, "level": 203, "noise": 204,
                  "fc_noise": 205}
 
-
-def _sm64(x: np.ndarray) -> np.ndarray:
-    """Vectorized splitmix64 finalizer over uint64. Wraparound is the
-    mixing mechanism — numpy warns about it only for 0-d inputs, so the
-    intended overflow is silenced explicitly."""
-    with np.errstate(over="ignore"):
-        x = (x + _U64(0x9E3779B97F4A7C15))
-        x = (x ^ (x >> _U64(30))) * _U64(0xBF58476D1CE4E5B9)
-        x = (x ^ (x >> _U64(27))) * _U64(0x94D049BB133111EB)
-        return x ^ (x >> _U64(31))
+# The mixers themselves live in repro.backend.base (the reference impl of
+# the pluggable-backend op surface); the thin wrappers here keep the
+# str-salt signature this module's callers and tests use.
+_sm64 = backend_base.sm64
+_u01 = backend_base.u01
+_cheap_u01 = backend_base.cheap_u01
 
 
 def _hash64(seed: int, salt: str, *keys) -> np.ndarray:
     """Chained splitmix64 over broadcastable non-negative integer keys."""
-    h = _sm64(np.asarray(_U64(seed) ^ _sm64(
-        np.asarray(_U64(_SPARSE_SALTS[salt])))))
-    for k in keys:
-        h = _sm64(h ^ np.asarray(k, dtype=np.uint64))
-    return h
-
-
-def _u01(h: np.ndarray) -> np.ndarray:
-    """uint64 hash → float64 uniform in [0, 1) (53 mantissa bits)."""
-    return (h >> _U64(11)).astype(np.float64) * (2.0 ** -53)
-
-
-def _cheap_u01(fold: np.uint64, key: np.ndarray) -> np.ndarray:
-    """float32 uniform in [0, 1) from a uint64 key grid via a two-round
-    multiply–xorshift mixer — the per-cell hot path (noise), where the
-    full splitmix chain would double the gather's memory traffic. The
-    ``fold`` scalar carries the (seed, salt) entropy."""
-    with np.errstate(over="ignore"):
-        h = key ^ fold
-        h = h * _U64(0xFF51AFD7ED558CCD)
-        h ^= h >> _U64(32)
-        h = h * _U64(0xC4CEB9FE1A85EC53)
-        h ^= h >> _U64(29)
-    return (h >> _U64(40)).astype(np.float32) * np.float32(2.0 ** -24)
+    return backend_base.hash64(seed, _SPARSE_SALTS[salt], *keys)
 
 
 class _SparseUtil:
@@ -183,11 +159,12 @@ class _SparseUtil:
     _CHUNK_STEPS = _DAY_STEPS
 
     def __init__(self, seed: int, n_clients: int, n_steps: int,
-                 chunk_steps: int = _CHUNK_STEPS):
+                 chunk_steps: int = _CHUNK_STEPS, backend=None):
         self.seed = seed & 0xFFFFFFFF
         self.n_clients = n_clients
         self.n_steps = n_steps
         self.cs = max(1, min(chunk_steps, n_steps) if n_steps else 1)
+        self.bk = get_backend(backend)
         self._log1mp = math.log1p(-self.P_SWITCH)
         # (seed, salt) folds for the per-cell cheap mixer
         self._noise_fold = _hash64(self.seed, "noise")
@@ -302,13 +279,10 @@ class _SparseUtil:
         u = _u01(_hash64(self.seed, "level", rows[:, None], seg_tab))
         busy = self._busy0(rows)[:, None] ^ ((seg_tab & 1) == 1)
         levels = np.where(busy, 0.5 + 0.45 * u, 0.3 * u).astype(np.float32)
-        util = np.take_along_axis(levels, slot, axis=1)
-        noise = self.noise_u(rows[:, None], t_grid[None, :])
-        noise -= np.float32(0.5)
-        noise *= np.float32(self._NOISE_AMP)
-        util += noise
-        np.clip(util, 0.0, 1.0, out=util)
-        return util
+        # grid-heavy tail (level gather + noise + clip) runs on the
+        # configured array backend; it is bit-exact across backends
+        return self.bk.piece_grid(levels, slot, self._noise_fold, rows, a,
+                                  self._NOISE_AMP)
 
     def forecast_noise(self, rows: Optional[np.ndarray], now: int,
                        horizon: int, std: np.ndarray) -> np.ndarray:
@@ -329,23 +303,21 @@ class _SparseUtil:
         # premix the row id into a full-width hash (O(rows), off the
         # grid), then fold the structured (now, lead) field in: no bit
         # budget for any field, so long traces/horizons cannot collide
-        # across rows the way packed bit fields would
-        row_h = _sm64(rows.astype(np.uint64) ^ self._fc_fold)[:, None]
-        key = row_h ^ ((_U64(now) << _U64(20))
-                       + np.arange(1, horizon + 1, dtype=np.uint64)[None, :])
-        z = _cheap_u01(self._fc_fold, key)
-        z -= np.float32(0.5)
-        z *= np.float32(math.sqrt(12.0))
-        z *= std.astype(np.float32)
+        # across rows the way packed bit fields would. The backend draws
+        # the pre-exp exponent; exp stays host-side (transcendentals are
+        # not bit-portable across backends — see repro.backend.base)
+        z = self.bk.forecast_noise_z(self._fc_fold, rows, now, horizon, std)
         return np.exp(z, out=z)
 
 
-def solar_curve(t_min: np.ndarray, utc_offset, peak_w: float,
+def solar_curve(t_min: np.ndarray, utc_offset, peak_w,
                 cloud: np.ndarray) -> np.ndarray:
     """Clear-sky diurnal curve in W at local solar time, × cloud factor.
 
     Broadcasts: ``t_min`` [n] with ``utc_offset``/``cloud`` of shape
     [P, 1] / [P, n] yields the whole [P, n] panel in one call.
+    ``peak_w`` is a scalar or a per-domain [P, 1] column (fleets whose
+    domains declare different ``max_output`` panels).
     """
     local_h = (t_min / 60.0 + utc_offset) % 24.0
     sunrise, sunset = 6.0, 20.0
@@ -395,11 +367,16 @@ class ScenarioStore:
                  error: str = "realistic", unlimited_domains: tuple = (),
                  carbon: Optional[np.ndarray] = None, *,
                  synth: Optional[dict] = None,
-                 util_chunk_elems: int = _UTIL_CHUNK_ELEMS):
+                 util_chunk_elems: int = _UTIL_CHUNK_ELEMS,
+                 backend=None):
         self.domain_names = list(domain_names or [])
         self.seed = seed
         self.error = error                # realistic | none | no_load
         self.unlimited_domains = tuple(unlimited_domains)
+        # array backend for the sparse-util gather grids; dense chunk
+        # generators stay host RNG code (np.random streams have no
+        # counter-hash equivalent on an accelerator)
+        self.backend = get_backend(backend)
         self._synth = synth
         self._forecast_cache: "OrderedDict[Tuple, Tuple]" = OrderedDict()
 
@@ -447,7 +424,8 @@ class ScenarioStore:
                 # sparse-activity util: no dense chunk generator, no
                 # [C, chunk] slab — the regime process is gathered per row
                 self._util_sparse = _SparseUtil(seed, self._n_clients,
-                                                self._n_steps)
+                                                self._n_steps,
+                                                backend=self.backend)
                 self._states = {"excess": [z0], "carbon": [None]}
             else:
                 busy0, lvl0 = self._util_init_state()
@@ -581,6 +559,13 @@ class ScenarioStore:
         sp = self._synth
         cities, peak_w, rho = sp["cities"], sp["peak_w"], 0.97
         P = len(cities)
+        peak_w = np.asarray(peak_w, dtype=float)
+        if peak_w.ndim:  # per-domain [P] peaks → column for broadcasting
+            if peak_w.shape != (P,):
+                raise ValueError(
+                    f"peak_w has shape {peak_w.shape}, expected scalar "
+                    f"or ({P},)")
+            peak_w = peak_w[:, None]
         c0 = i * self._cs["excess"]
         n = min(self._cs["excess"], self._n_steps - c0)
         n5 = -(-n // 5)
@@ -805,9 +790,10 @@ ScenarioData = ScenarioStore
 
 
 def make_scenario(name: str, n_clients: int = 100, days: int = 7, seed: int = 0,
-                  peak_w: float = 800.0, error: str = "realistic",
+                  peak_w=800.0, error: str = "realistic",
                   unlimited_domains: tuple = (),
-                  util_mode: str = "dense") -> ScenarioStore:
+                  util_mode: str = "dense",
+                  backend=None) -> ScenarioStore:
     """name: 'global' or 'co_located' (paper Fig. 2).
 
     Returns a lazily-synthesized :class:`ScenarioStore`: nothing is
@@ -817,10 +803,13 @@ def make_scenario(name: str, n_clients: int = 100, days: int = 7, seed: int = 0,
     ``util_mode="sparse"`` swaps the dense util chunk generator for the
     sparse-activity model (:class:`_SparseUtil`) — the million-client
     path, which synthesizes util values only for gathered rows.
+    ``peak_w`` may be a scalar or a per-domain [P] array (satellite of
+    per-domain ``max_output`` fleets); ``backend`` picks the array
+    backend serving the sparse-util gather grids.
     """
     cities = GLOBAL_CITIES if name == "global" else CO_LOCATED_CITIES
     return ScenarioStore(
         domain_names=[c[0] for c in cities], seed=seed, error=error,
-        unlimited_domains=unlimited_domains,
+        unlimited_domains=unlimited_domains, backend=backend,
         synth={"cities": cities, "peak_w": peak_w, "n_clients": n_clients,
                "n_steps": days * 24 * 60, "util_mode": util_mode})

@@ -54,7 +54,10 @@ def golden_config(strategy, error, options) -> ExperimentConfig:
 
 @pytest.mark.parametrize("key,strategy,error,kw", GOLDEN_CASES)
 def test_run_experiment_reproduces_golden_summary(key, strategy, error, kw):
-    s = run_experiment(golden_config(strategy, error, kw))
+    sims = []
+    run_experiment(golden_config(strategy, error, kw), sim_out=sims)
+    # goldens predate row-keyed summaries: compare the name-keyed view
+    s = sims[0].summary(names=True)
     s = json.loads(json.dumps(s))  # tuples -> lists, numpy -> python
     golden = GOLDEN[key]
     assert set(s) == set(golden)
@@ -195,6 +198,44 @@ def test_from_arrays_rejects_inconsistent_view_parameters():
     spec = reg.clients[reg.client_names[0]]
     assert spec.m_min_batches == 3.0 and spec.m_max_batches == 20.0
     assert reg.m_min_arr[0] == 3.0 and reg.m_max_arr[0] == 20.0
+
+
+def test_per_domain_max_output_sizes_solar_peaks():
+    """A per-domain fleet.max_output array drives both the registry's
+    domain caps and the synthesized scenario's solar peaks."""
+    from repro.core import build_registry, build_scenario
+
+    peaks = np.linspace(200.0, 2000.0, 10)
+    cfg = ExperimentConfig(
+        scenario=ScenarioSection(name="global", days=1, seed=5),
+        fleet=FleetSection(n_clients=40, seed=5, max_output=peaks),
+        run=RunSection(until_step=60, seed=5))
+    store = build_scenario(cfg)
+    reg = build_registry(cfg, store)
+    np.testing.assert_array_equal(reg.max_output_arr, peaks)
+    # PowerDomain views carry their own cap
+    caps = [reg.domains[d].max_output for d in store.domain_names]
+    np.testing.assert_array_equal(caps, peaks)
+    # at local noon each domain's excess scales with its peak: ratios of
+    # simultaneous excess across equal-cloud domains track the peak ratio
+    ex = store.excess  # [P, T]
+    assert ex.max() > 800.0  # the 2 kW domain exceeds the uniform default
+
+    # scalar max_output keeps the legacy uniform peak bit-identically
+    uni = ExperimentConfig(
+        scenario=ScenarioSection(name="global", days=1, seed=5),
+        fleet=FleetSection(n_clients=40, seed=5, max_output=800.0))
+    legacy = ExperimentConfig(
+        scenario=ScenarioSection(name="global", days=1, seed=5),
+        fleet=FleetSection(n_clients=40, seed=5))
+    np.testing.assert_array_equal(build_scenario(uni).excess,
+                                  build_scenario(legacy).excess)
+    # a wrong-length array fails fast
+    bad = ExperimentConfig(
+        scenario=ScenarioSection(name="global", days=1, seed=5),
+        fleet=FleetSection(n_clients=40, seed=5, max_output=peaks[:3]))
+    with pytest.raises(ValueError, match="peak_w"):
+        build_scenario(bad).excess_at(0)
 
 
 def test_build_registry_rejects_fleet_scenario_size_mismatch():

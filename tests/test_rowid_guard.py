@@ -119,8 +119,11 @@ def test_array_built_registry_stays_object_free():
     # selection + execution + fairness/utility updates touched no names
     assert reg._specs is None and reg._names is None
     assert reg._row_of is None and reg._domain_of is None
-    # summary() is the reporting boundary: names materialize only there
+    # the default (row-keyed) summary never materializes names either;
+    # only the opt-in name-keyed reporting view does
     sim.summary()
+    assert reg._names is None
+    sim.summary(names=True)
     assert reg._names is not None
 
 
@@ -155,8 +158,13 @@ def test_per_round_state_is_row_arrays():
             assert isinstance(field, np.ndarray)
             assert field.dtype.kind == "i"
         assert isinstance(rr.batches, np.ndarray)
-    # summary() remains the name boundary with an unchanged schema
-    assert set(s["participation"]) == set(reg.client_names)
+    # default summary keys participation by registry row; names=True is
+    # the name boundary and agrees count-for-count
+    part = s["participation"]
+    assert isinstance(part, list) and len(part) == len(reg)
+    named = sim.summary(names=True)["participation"]
+    assert set(named) == set(reg.client_names)
+    assert [named[n] for n in reg.client_names] == part
     assert set(s) == {
         "strategy", "rounds", "sim_minutes", "total_energy_wh",
         "grid_energy_wh", "carbon_g", "grid_rounds", "best_metric",
