@@ -27,9 +27,14 @@ each in its own subprocess so peak RSS is attributable:
   util values are synthesized only for gathered rows and candidate
   forecasts only for admission-relevant blocks, so peak RSS must stay
   under 4 GB — a dense [C, T] float32 util slab alone would be ~5.8 GB
-  at this size, before any per-round [K, H] forecast slabs.
+  at this size, before any per-round [K, H] forecast slabs. Since
+  schema 6 this configuration runs **uncapped**: the segment-domain
+  reach evaluator (``docs/architecture.md``) gives the lazy walk
+  per-candidate upper bounds tight enough to terminate without a
+  ``candidate_cap``, and admissions are pinned identical to the
+  materialized reference greedy by ``tests/test_selection_exactness.py``.
 
-Each JSON row records its array ``backend`` (schema 5); ``--check``
+Each JSON row records its array ``backend`` (schema 6); ``--check``
 fails if the committed rows were produced with a different backend
 than this script's configuration table declares. Any configuration can
 be pointed at the ``jax`` backend (``"backend": "jax"`` in ``CONFIGS``;
@@ -62,7 +67,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_e2e_simulation.json")
 
-SCHEMA = 5
+SCHEMA = 6
 CONFIGS = {
     "10k_3day": {"kind": "simulation", "clients": 10_000,
                  "scenario_days": 3, "sim_days": 3, "budget_wall_s": 60.0},
@@ -73,7 +78,6 @@ CONFIGS = {
                     "budget_wall_s": 10.0, "budget_rss_mb": 768.0},
     "1m_1day": {"kind": "simulation", "clients": 1_000_000,
                 "scenario_days": 1, "sim_days": 1, "util_mode": "sparse",
-                "candidate_cap": 32768,
                 "budget_wall_s": 600.0, "budget_rss_mb": 4096.0},
 }
 

@@ -5,7 +5,9 @@ stack is allowed to accelerate: the counter-hash synthesis primitives
 behind the sparse-activity util model (``sm64``/``hash64``/``u01``/
 ``cheap_u01`` and the fused grid draws built from them), the gathered
 elementwise math of the greedy solvers (``take_matrix``,
-``greedy_scores``, ``score_ub``), the top-M candidate selection
+``greedy_scores``, ``score_ub``), the segment-domain reach evaluator
+behind exact uncapped lazy selection (``reach_tables``/
+``segment_reach``/``adopt_scores``), the top-M candidate selection
 (``top_m``/``viable_positions``) and the per-domain prefix-scan margin
 check of the chunked admission walk (``margin_prefix_ok``). Everything
 else — Python control flow, binary search, LRU caches, the registry —
@@ -32,8 +34,11 @@ on, bit for bit):
   single-admission fallback, so final admissions are identical under
   any summation order (see docs/backends.md).
 * **selection sets** — ``top_m`` breaks upper-bound ties
-  deterministically: value descending, candidate position ascending
-  (the ``jax.lax.top_k`` rule, mirrored by the NumPy reference).
+  deterministically: value descending, candidate **position descending**
+  (``jax.lax.top_k`` over the reversed array, mirrored by the NumPy
+  reference), and returns the exact maximum upper bound over the
+  *unselected* remainder — the pair of properties the lazy walk's
+  tie-exact admission rule is built on (see ``core/selection.py``).
 
 The base class implements every op with reference NumPy semantics, so a
 subclass only overrides what it accelerates and inherits exact host
@@ -50,6 +55,56 @@ _U64 = np.uint64
 # budget — far above any f64 summation-reorder error (~1e-13), far below
 # any real budget slack, so every backend reaches the same admissions
 MARGIN = 1.0 - 1e-9
+
+# reach-evaluator inflation: segment-reach score upper bounds are
+# multiplied by this before use, the mirror of MARGIN — the 1e-9 relative
+# slack dwarfs the f64 rounding daylight between the evaluator's
+# sorted-order sums and the admission walk's time-order sums (~1e-13),
+# so a bound can never dip below the true score it certifies and the
+# lazy walk stays exact (see docs/architecture.md)
+REACH_SLACK = 1.0 + 1e-9
+
+
+def _reach_rank(vals, dom, w, dom_sort=None):
+    """[N] int64 per-query breakpoint rank: the count of ``vals[dom]``
+    entries strictly below ``w``. Integer-valued (comparisons only), so
+    it is computed on the host in **every** backend — trivially
+    bit-exact, and it keeps the device side of ``segment_reach`` purely
+    gathers + exactly-rounded float ops.
+
+    ``dom_sort`` is an optional precomputed grouping of the (fixed)
+    ``dom`` column — ``(order, starts, uniq)`` with ``order`` a stable
+    domain-ascending permutation and ``uniq[k]``'s queries at
+    ``order[starts[k]:starts[k+1]]``. Callers that query the same
+    segment set once per duration (the lazy selector) pay the
+    per-domain masking passes once instead of per call; ranks are
+    identical either way."""
+    j = np.empty(w.shape, dtype=np.int64)
+    if dom_sort is None:
+        for p in np.unique(dom):
+            m = dom == p
+            j[m] = np.searchsorted(vals[p], w[m], side="left")
+        return j
+    order, starts, uniq = dom_sort
+    ws = w[order]
+    js = np.empty_like(j)
+    for k, p in enumerate(uniq):
+        sl = slice(starts[k], starts[k + 1])
+        js[sl] = np.searchsorted(vals[p], ws[sl], side="left")
+    j[order] = js
+    return j
+
+
+def reach_dom_sort(dom) -> tuple:
+    """Precompute ``_reach_rank``'s domain grouping for a fixed flat
+    ``dom`` column: (stable domain-ascending order, group starts,
+    group domain ids)."""
+    dom = np.asarray(dom, dtype=np.int64)
+    order = np.argsort(dom, kind="stable")
+    uniq, counts = np.unique(dom, return_counts=True)
+    starts = np.zeros(uniq.size + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    return order, starts, uniq
 
 
 def sm64(x: np.ndarray) -> np.ndarray:
@@ -83,12 +138,15 @@ def cheap_u01(fold: np.uint64, key: np.ndarray) -> np.ndarray:
     full splitmix chain would double the gather's memory traffic. The
     ``fold`` scalar carries the (seed, salt) entropy."""
     with np.errstate(over="ignore"):
-        h = key ^ fold
-        h = h * _U64(0xFF51AFD7ED558CCD)
+        h = key ^ fold              # fresh array; never mutate the key
+        h *= _U64(0xFF51AFD7ED558CCD)
         h ^= h >> _U64(32)
-        h = h * _U64(0xC4CEB9FE1A85EC53)
+        h *= _U64(0xC4CEB9FE1A85EC53)
         h ^= h >> _U64(29)
-    return (h >> _U64(40)).astype(np.float32) * np.float32(2.0 ** -24)
+        h >>= _U64(40)
+    out = h.astype(np.float32)
+    out *= np.float32(2.0 ** -24)
+    return out
 
 
 class ArrayBackend:
@@ -191,18 +249,100 @@ class ArrayBackend:
         return np.nonzero(np.isfinite(np.asarray(ub)))[0]
 
     def top_m(self, ub, M):
-        """(positions of the top-M upper bounds, M-th value as bound).
+        """(positions of the top-M upper bounds, exact remainder bound).
 
-        Deterministic tie rule — value descending, position ascending —
-        matching ``jax.lax.top_k``, so capped candidate sets are
-        identical across backends. Requires M < number of finite ubs.
+        Deterministic tie rule — value descending, position
+        **descending** — so ties spilling past M keep their
+        largest-position members, the same head the admission walk's
+        (score desc, position desc) order would process first. The
+        returned bound is the (M+1)-th largest value: the exact maximum
+        upper bound over the *unselected* candidates, which is what lets
+        the walk admit evaluated bound-ties ahead of every unevaluated
+        candidate (the tie-exact rule in ``_LazyGreedy._admit``).
+        Requires M < number of finite ubs (so position M exists).
         """
         ub = np.asarray(ub)
-        part = np.argpartition(-ub, M - 1)
-        pivot = float(ub[part[M - 1]])
+        part = np.argpartition(-ub, M)
+        bound = float(ub[part[M]])
+        pivot = float(ub[part[:M]].min())
         strict = np.nonzero(ub > pivot)[0]
-        ties = np.nonzero(ub == pivot)[0][:M - strict.size]
-        return np.concatenate([strict, ties]), pivot
+        ties = np.nonzero(ub == pivot)[0][strict.size - M:]
+        return np.concatenate([strict, ties]), bound
+
+    def adopt_scores(self, ub):
+        """Adopt a host-assembled score array as a handle usable by
+        ``top_m`` / ``viable_positions`` / ``asnumpy``. Accelerated
+        backends pad to their shape buckets (inert ``-inf``) and move
+        the array device-resident; the reference is a host copy."""
+        return np.ascontiguousarray(np.asarray(ub, dtype=np.float64))
+
+    # -- segment-domain reach evaluator ----------------------------------
+    def reach_tables(self, r_excess):
+        """Per-domain prefix tables of the concave piecewise-linear
+        reach ``G_p(τ, x) = Σ_{t<τ} min(x, E[p, t])`` (energy units).
+
+        ``r_excess`` is the [P, H] per-domain per-step excess forecast.
+        Returns ``{"vals", "cnt", "csum"}``: ``vals[p]`` the sorted
+        breakpoints (the step energies), ``cnt[p, j, τ]`` how many of
+        the first ``τ`` steps hold one of the ``j`` smallest energies,
+        and ``csum[p, j, τ]`` their float64 sum, so a query is two
+        gathers: ``G_p(τ, x) = csum[p, j, τ] + x·(τ − cnt[p, j, τ])``
+        with ``j`` the count of breakpoints strictly below ``x``.
+
+        O(P·H²) memory — tiny at forecast horizons (H ≤ 60 → ≲ 1 MB for
+        a dozen domains). Built on the **host in every backend**: the
+        cumulative sums are float reductions, which the parity contract
+        (point 3) keeps host-side so the tables are bit-identical
+        everywhere.
+        """
+        ex = np.ascontiguousarray(np.asarray(r_excess, dtype=np.float64))
+        P, H = ex.shape
+        order = np.argsort(ex, axis=1, kind="stable")
+        vals = np.take_along_axis(ex, order, axis=1)
+        rank = np.empty((P, H), dtype=np.int64)
+        np.put_along_axis(
+            rank, order,
+            np.broadcast_to(np.arange(H, dtype=np.int64), (P, H)), axis=1)
+        below = rank[:, None, :] < np.arange(H + 1, dtype=np.int64)[None, :,
+                                                                    None]
+        cnt = np.zeros((P, H + 1, H + 1), dtype=np.int64)
+        cnt[:, :, 1:] = np.cumsum(below, axis=2)
+        csum = np.zeros((P, H + 1, H + 1), dtype=np.float64)
+        csum[:, :, 1:] = np.cumsum(np.where(below, ex[:, None, :], 0.0),
+                                   axis=2)
+        return {"vals": vals, "cnt": cnt, "csum": csum}
+
+    def segment_reach(self, tables, dom, a, b, w, dom_sort=None):
+        """[N] per-segment reach energies ``G_dom(b, w) − G_dom(a, w)``.
+
+        ``dom``/``a``/``b`` are flat int segment columns (CSR order,
+        step bounds in [0, H]), ``w`` the float64 per-segment spare
+        thresholds, ``dom_sort`` an optional precomputed
+        :func:`reach_dom_sort` of the ``dom`` column. Everything after
+        the host-side integer rank lookup is gathers plus
+        exactly-rounded float ops — one multiply, then adds — so
+        results are bit-identical across backends (accelerated impls
+        must split the multiply→add boundary into separate kernels; see
+        docs/backends.md). Padding-friendly: ``a == b`` or ``w == 0``
+        contributes exactly 0.
+        """
+        vals, cnt, csum = tables["vals"], tables["cnt"], tables["csum"]
+        dom = np.asarray(dom, dtype=np.int64)
+        a = np.asarray(a, dtype=np.int64)
+        b = np.asarray(b, dtype=np.int64)
+        w = np.asarray(w, dtype=np.float64)
+        j = _reach_rank(vals, dom, w, dom_sort)
+        # one flat (dom, j) base index instead of four 3-D fancy
+        # gathers — same elements, same float ops, same bits
+        H1 = cnt.shape[1]
+        base = (dom * H1 + j) * H1
+        fa = base + a
+        fb = base + b
+        cntf = cnt.reshape(-1)
+        csumf = csum.reshape(-1)
+        ga = csumf[fa] + w * (a - cntf[fa])
+        gb = csumf[fb] + w * (b - cntf[fb])
+        return gb - ga
 
     # -- chunked admission ------------------------------------------------
     def margin_prefix_ok(self, drain, dom_sel, budgets):

@@ -2,9 +2,10 @@
 
 Bit-exactness with the NumPy reference comes for free on the ops this
 backend accelerates: uint64 mixing, float elementwise math, gathers and
-``lax.top_k`` (whose tie rule — value descending, index ascending — the
-reference's ``top_m`` mirrors) are all exactly specified, so jitting
-them cannot change a single bit. Ops whose floating-point *reductions*
+``lax.top_k`` (run over the *reversed* score array so its
+lowest-index-first tie rule becomes the contract's position-descending
+rule) are all exactly specified, so jitting them cannot change a single
+bit. Ops whose floating-point *reductions*
 feed scheduling bits (``np.cumsum`` inside the evaluators, ``np.exp`` on
 the forecast exponent) are inherited from the host reference — see the
 parity contract in :mod:`repro.backend.base`. The one accelerated
@@ -39,6 +40,7 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from .base import MARGIN, ArrayBackend
+from .base import _reach_rank as base_reach_rank
 from .numpy_backend import NumpyBackend
 
 _U64 = np.uint64
@@ -146,10 +148,30 @@ def _score_ub_j(spare_ub, delta, m_min, m_max, sigma, dom, excess_col, dd):
     return ub, jnp.isfinite(ub).sum()
 
 
+# top-k over the reversed array: lax.top_k breaks value ties by lowest
+# index first, which on the reversed scores means *largest original
+# position* first — the contract's tie rule. k = M+1 so the last value
+# is the exact maximum upper bound over the unselected remainder.
 @partial(jax.jit, static_argnums=1)
 def _top_m_j(ub, M):
-    vals, idx = jax.lax.top_k(ub, M)
-    return idx, vals[M - 1]
+    n = ub.shape[0]
+    vals, ridx = jax.lax.top_k(ub[::-1], M + 1)
+    return (n - 1) - ridx[:M], vals[M]
+
+
+# split at the mul→add boundary (see docs/backends.md): the product
+# kernel's int→f64 convert + single multiply must round before the sum
+# kernel's adds, exactly like the NumPy reference
+@jax.jit
+def _reach_prod_j(cnt, dom, j, a, b, w):
+    pa = w * (a - cnt[dom, j, a])
+    pb = w * (b - cnt[dom, j, b])
+    return pa, pb
+
+
+@jax.jit
+def _reach_sum_j(csum, dom, j, a, b, pa, pb):
+    return (csum[dom, j, b] + pb) - (csum[dom, j, a] + pa)
 
 
 @jax.jit
@@ -329,6 +351,37 @@ class JaxBackend(NumpyBackend):
         with enable_x64():
             idx, bound = _top_m_j(ub, int(M))
         return np.asarray(idx, dtype=np.int64), float(bound)
+
+    def adopt_scores(self, ub):
+        ub = np.asarray(ub, dtype=np.float64)
+        if ub.size < _DEVICE_MIN_ROWS:
+            return super().adopt_scores(ub)
+        with enable_x64():
+            return jnp.asarray(_pad_rows(ub, _bucket(ub.size),
+                                         fill=-np.inf))
+
+    # -- segment-domain reach evaluator ----------------------------------
+    def segment_reach(self, tables, dom, a, b, w, dom_sort=None):
+        w = np.asarray(w, dtype=np.float64)
+        if w.size < _DEVICE_MIN_ROWS:
+            return super().segment_reach(tables, dom, a, b, w, dom_sort)
+        dom = np.asarray(dom, dtype=np.int64)
+        a = np.asarray(a, dtype=np.int64)
+        b = np.asarray(b, dtype=np.int64)
+        # the integer breakpoint rank stays host-side in every backend
+        # (parity contract); pads (all-zero queries) contribute exactly 0
+        j = base_reach_rank(tables["vals"], dom, w, dom_sort)
+        n = w.size
+        npad = _bucket(n)
+        with enable_x64():
+            di, ji, ai, bi = (jnp.asarray(_pad_rows(x, npad))
+                              for x in (dom, j, a, b))
+            wj = jnp.asarray(_pad_rows(w, npad))
+            pa, pb = _reach_prod_j(jnp.asarray(tables["cnt"]),
+                                   di, ji, ai, bi, wj)
+            out = _reach_sum_j(jnp.asarray(tables["csum"]),
+                               di, ji, ai, bi, pa, pb)
+            return np.array(out[:n])
 
     # -- chunked admission ------------------------------------------------
     def margin_prefix_ok(self, drain, dom_sel, budgets):

@@ -119,7 +119,16 @@ class RunSection:
     host reference, ``"jax"`` the jit-compiled device path). It threads
     into both the scenario store (sparse-util gather grids) and the
     selection solvers, and wins over any ``backend`` in the strategy
-    section's options — the run decides where its math executes."""
+    section's options — the run decides where its math executes.
+
+    ``exact_uncapped`` governs the exact uncapped sharded selection walk
+    (the segment-domain reach evaluator): ``None`` (default) lets each
+    strategy auto-detect — the overlay is used whenever the scenario
+    store provides one; ``True`` requires it (the run fails fast where
+    it cannot apply, e.g. dense stores or a positive ``candidate_cap``);
+    ``False`` forces the legacy optimistic bounds. Only ``True``/
+    ``False`` are forwarded to the strategy, so a strategy section's own
+    ``exact_uncapped`` option survives the default."""
 
     until_step: Optional[int] = None
     days: Optional[float] = None
@@ -129,6 +138,7 @@ class RunSection:
     seed: int = 0
     verbose: bool = False
     backend: str = "numpy"
+    exact_uncapped: Optional[bool] = None
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -246,9 +256,12 @@ def build_experiment(cfg: ExperimentConfig, *,
         registry = build_registry(cfg, scenario)
     if strategy is None:
         # the run section decides where the math executes: its backend
-        # overrides any 'backend' in the strategy options
-        strategy = make_strategy(cfg.strategy, registry,
-                                 backend=cfg.run.backend)
+        # overrides any 'backend' in the strategy options; exact_uncapped
+        # is forwarded only when explicitly set (None = strategy default)
+        run_kw = {"backend": cfg.run.backend}
+        if cfg.run.exact_uncapped is not None:
+            run_kw["exact_uncapped"] = cfg.run.exact_uncapped
+        strategy = make_strategy(cfg.strategy, registry, **run_kw)
     if trainer is None:
         trainer = build_trainer(cfg, registry)
     return FLSimulation(registry, scenario, strategy, trainer,

@@ -46,6 +46,7 @@ sparse-util stores.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable, List, Optional
 
 import numpy as np
@@ -53,6 +54,7 @@ import scipy.sparse as sp
 from scipy.optimize import Bounds, LinearConstraint, milp
 
 from ..backend import get_backend
+from ..backend.base import REACH_SLACK, reach_dom_sort
 from .types import ClientRegistry, Selection
 
 
@@ -440,7 +442,14 @@ class LazySelectionInputs:
     """
 
     registry: ClientRegistry
-    spare_of: Callable[[np.ndarray], np.ndarray]  # positions -> [B, H]
+    # positions -> [B, H] forecast block. Providers may accept a second
+    # parameter *named* ``h`` or ``horizon`` — (positions, h) -> [B, h];
+    # the engine detects it by name and then gathers only the leads a
+    # probe actually needs. The returned block must be the column prefix
+    # of the full-horizon gather, bit for bit (row-keyed noise makes
+    # this hold for both scenario stores; pinned by
+    # tests/test_selection_exactness.py).
+    spare_of: Callable[..., np.ndarray]
     m_spare_ub: np.ndarray     # [K] per-step upper bound on m_spare
     r_excess: np.ndarray       # [P, H] forecast excess energy (Wmin/step)
     sigma: np.ndarray          # [K] statistical utility (0 = blocked)
@@ -448,40 +457,72 @@ class LazySelectionInputs:
     dom: np.ndarray            # [K] domain row (into r_excess) per candidate
     block: int = 1024          # rows gathered per evaluation block
     # candidate_cap = 0 keeps the walk exact: it expands until admissions
-    # are provably identical to evaluating every candidate, which on
-    # degenerate score landscapes (near-uniform σ) can mean evaluating
-    # everyone. A positive cap bounds evaluation to the top-cap
-    # candidates by score upper bound — admission is then exact *within*
-    # that set (the documented fleet-scale approximation; deterministic,
-    # and identical to exact whenever cap ≥ the tie depth).
+    # are provably identical to evaluating every candidate. Without a
+    # segment overlay, degenerate score landscapes (near-uniform σ) can
+    # make that mean evaluating everyone; a positive cap then bounds
+    # evaluation to the top-cap candidates by score upper bound —
+    # admission exact *within* that set (a documented approximation,
+    # deterministic, identical to exact whenever cap ≥ the tie depth).
+    # With ``seg_overlay`` the exact walk terminates lazily even on tied
+    # landscapes (tight bounds + the tie-exact admission rule), so the
+    # cap is unnecessary — the `1m_1day` benchmark runs uncapped.
     candidate_cap: int = 0
     backend: object = None     # ArrayBackend / name / None (numpy)
+    # exact-uncapped reach evaluator inputs (optional): the candidates'
+    # spare-fraction upper bounds as regime segments over the forecast
+    # window (``ScenarioStore.spare_ub_overlay`` CSR dict, window-
+    # relative steps, indexed by candidate position) plus the per-lead
+    # forecast-noise multiplier bound. When present, score upper bounds
+    # come from the per-domain concave reach function Σ_t min(x, E_t)
+    # instead of the loose full-spare grant. Contract: every realizable
+    # ``spare_of(pos)`` cell in segment s at lead j must be
+    # ≤ min(x_ub[s]·noise_mult_ub[j], 1) · m_spare_ub[pos].
+    seg_overlay: Optional[dict] = None
+    noise_mult_ub: Optional[np.ndarray] = None
 
 
 class _LazyGreedy:
     """Greedy admission over lazily-evaluated top-candidate sets.
 
-    Per probed duration ``dd`` the engine computes a cheap per-candidate
-    **score upper bound** (full spare every step against the domain's
-    cumulative excess — the line-11 test's optimistic grant, clipped by
-    m_max and scaled by σ), computed by the array backend over
-    backend-resident fleet columns, selects the top-M candidates by that
-    bound with one O(K) backend ``top_m`` (deterministic ties, no full
-    K-sized sort anywhere), and gathers real forecasts only for them. Admission then walks the
-    evaluated candidates in true-score order — ties broken exactly like
-    :func:`_rank_candidates` (descending candidate position) — and may
-    touch a candidate only while its true score is strictly above
-    ``bound``, the maximum upper bound among the unselected remainder;
-    if the walk reaches the bound before admitting n clients, M expands
-    (geometrically, reusing every evaluation) and the probe replays.
-    Admissions are therefore bit-identical to materializing ``m_spare``
-    for all K candidates and running :func:`_solve_greedy` (pinned by
-    tests/test_sparse_util.py), but a round evaluates O(admitted +
-    near-miss) candidates — the property that makes 1M-candidate rounds
-    affordable. Evaluations and per-``dd`` bound arrays persist across
-    the O(log d_max) probes of one ``select_clients`` call; each probe
-    replays admission against its own budget copy, mirroring the
-    sequential reference commit loop.
+    Per probed duration ``dd`` the engine computes a per-candidate
+    **score upper bound**, selects the top-M candidates by that bound
+    with one O(K) backend ``top_m`` (deterministic position-descending
+    ties, no full K-sized sort anywhere), and gathers real forecasts
+    only for them. Two bound flavours:
+
+    * **legacy** (no overlay): full spare every step against the
+      domain's cumulative excess — the line-11 test's optimistic grant,
+      clipped by m_max and scaled by σ (backend ``score_ub``);
+    * **segment reach** (``seg_overlay`` present): the per-domain
+      concave piecewise-linear reach ``Σ_t min(x, E_t)`` queried per
+      candidate regime segment with its certified spare threshold
+      (backend ``reach_tables``/``segment_reach``, per-candidate sums
+      assembled on the host, inflated by ``REACH_SLACK`` — decision-
+      safe). Busy candidates price far below σ·m_max, which collapses
+      the degenerate tie plateaus that used to force ``candidate_cap``.
+
+    Admission walks the evaluated candidates in true-score order — ties
+    broken exactly like :func:`_rank_candidates` (descending candidate
+    position) — and may touch a candidate while its true score is
+    strictly above ``bound``, the exact maximum upper bound among the
+    unselected remainder (``top_m`` returns the (M+1)-th value). A
+    candidate whose true score *equals* the bound is still provably
+    admissible while its position exceeds every unselected bound-tie's
+    position (``top_m`` keeps the largest-position ties, so the
+    evaluated ties extend the global (score desc, pos desc) order as a
+    prefix down to that position) — the **tie-exact rule** that lets
+    fully-idle clients tied at σ·m_max admit without materializing the
+    whole plateau. If the walk still runs out before n admissions, M
+    expands geometrically, reusing every evaluation, and the probe
+    replays. Admissions are therefore bit-identical to materializing
+    ``m_spare`` for all K candidates and running :func:`_solve_greedy`
+    (pinned by tests/test_sparse_util.py and
+    tests/test_selection_exactness.py), but a round evaluates
+    O(admitted + near-miss) candidates — the property that makes exact
+    uncapped 1M-candidate rounds affordable. Evaluations and per-``dd``
+    bound arrays persist across the O(log d_max) probes of one
+    ``select_clients`` call; each probe replays admission against its
+    own budget copy, mirroring the sequential reference commit loop.
     """
 
     def __init__(self, inp: LazySelectionInputs, n: int):
@@ -501,52 +542,186 @@ class _LazyGreedy:
         self._kept = np.nonzero(self.sigma > 0)[0]   # Alg. 1 line 8
         self._cols = None              # backend-resident fleet columns
         self._ub_memo: dict = {}       # dd -> (ub handle, n_viable)
-        # evaluation store: doubling buffers, position -> buffer row
+        self._host_memo: dict = {}     # dd -> host f64 ub over kept
+        self._order_memo: dict = {}    # (dd, evaluated) -> admit order
+        self._exhausted_h = 0          # all viable(dd<=this) evaluated
+        # evaluation store: doubling buffers, position -> buffer row;
+        # rows are gathered only up to the horizon a probe needed
+        # (_eval_h), and re-gathered wider when a later probe asks
         self._eval_idx = np.full(self.sigma.size, -1, dtype=np.int64)
-        self._reach_buf = np.empty((0, self.H))   # [E, H] reach cumsums
-        self._spare_buf = np.empty((0, self.H))   # [E, H] m_spare rows
+        self._eval_h = np.zeros(self.sigma.size, dtype=np.int64)
+        # buffer width tracks the widest gather so far, not H: sweeps
+        # land at the binary search's mid durations, so full-H-wide
+        # buffers would be mostly dead columns written with 4x the
+        # memory traffic (the search descends after its first feasible
+        # probe; widening re-allocation is the rare case)
+        self._buf_w = 0
+        self._reach_buf = np.empty((0, 0))   # [E, W] reach cumsums
+        self._spare_buf = np.empty((0, 0))   # [E, W] m_spare rows
         self.evaluated = 0             # rows gathered (benchmark counter)
+        try:
+            params = list(inspect.signature(inp.spare_of)
+                          .parameters.values())
+            # horizon-aware providers NAME their second parameter h /
+            # horizon — a mere second default (e.g. a lambda capture)
+            # must not be mistaken for one
+            self._spare_takes_h = (len(params) >= 2 and params[1].name
+                                   in ("h", "horizon"))
+        except (TypeError, ValueError):
+            self._spare_takes_h = False
+        self._tables = None            # per-domain reach tables (overlay)
+        if inp.seg_overlay is not None and self._kept.size:
+            self._init_reach(inp.seg_overlay)
+
+    def _init_reach(self, ov: dict):
+        """Gather the kept candidates' window segments into flat CSR
+        columns and build the per-domain reach tables — once per round.
+        Flat layout (no [K, S_max] padding): ~1.33 segments/candidate on
+        the paper's regime process, so the evaluator's per-``dd`` query
+        is a couple of float passes over ~1.33·K segments."""
+        k = self._kept
+        ptr = np.asarray(ov["ptr"], dtype=np.int64)
+        lens = ptr[k + 1] - ptr[k]
+        kptr = np.zeros(k.size + 1, dtype=np.int64)
+        np.cumsum(lens, out=kptr[1:])
+        idx = np.repeat(ptr[k] - kptr[:-1], lens) \
+            + np.arange(kptr[-1], dtype=np.int64)
+        self._seg_a = np.clip(np.asarray(ov["a"], dtype=np.int64)[idx],
+                              0, self.H)
+        self._seg_b = np.clip(np.asarray(ov["b"], dtype=np.int64)[idx],
+                              0, self.H)
+        self._seg_x = np.asarray(ov["x_ub"], dtype=np.float64)[idx]
+        owner = np.repeat(np.arange(k.size, dtype=np.int64), lens)
+        kk = k[owner]
+        self._seg_owner = owner
+        self._seg_dom = self.dom[kk]
+        # energy threshold base: spare fraction → Wmin/step is ·cap·δ
+        self._seg_capd = self.spare_ub[kk] * self.delta[kk]
+        nu = self.inp.noise_mult_ub
+        self._noise_ub = None if nu is None \
+            else np.asarray(nu, dtype=np.float64)
+        self._tables = self.bk.reach_tables(self.inp.r_excess[:, :self.H])
+        # the segment set is fixed for the round but queried once per
+        # probed duration: group the domain column and gather the kept
+        # fleet columns once
+        self._dom_sort = reach_dom_sort(self._seg_dom)
+        self._k_delta = self.delta[k]
+        self._k_m_min = self.m_min[k]
+        self._k_m_max = self.m_max[k]
+        self._k_sigma = self.sigma[k]
+        self._k_dom = self.dom[k]
+
+    def _reach_scores(self, dd: int):
+        """Segment-reach score upper bounds at ``dd`` (host-assembled).
+
+        Per candidate: ``Σ_s [G_p(min(b_s, dd), w_s) − G_p(min(a_s, dd),
+        w_s)] / δ`` with ``w_s = min(x_s·ν_dd, 1)·cap·δ`` — ν is
+        nondecreasing in lead, so ν at dd bounds every step of the
+        prefix. The backend returns bit-exact per-segment energies; the
+        per-candidate sum runs on the host (same code every backend) and
+        is inflated by REACH_SLACK, so the bound can never dip below the
+        true score it certifies (decision-safe; see backend.base)."""
+        nu = 1.0 if self._noise_ub is None else float(self._noise_ub[dd - 1])
+        a = np.minimum(self._seg_a, dd)
+        b = np.minimum(self._seg_b, dd)
+        w = np.minimum(self._seg_x * nu, 1.0) * self._seg_capd
+        g = self.bk.segment_reach(self._tables, self._seg_dom, a, b, w,
+                                  dom_sort=self._dom_sort)
+        k = self._kept
+        sums = np.bincount(self._seg_owner, weights=g, minlength=k.size)
+        reach_ub = sums / self._k_delta * REACH_SLACK
+        ex = self.excess_cum[:, dd - 1][self._k_dom]
+        ok = (reach_ub >= self._k_m_min) & (ex > 0)
+        ub = np.where(ok, self._k_sigma * np.minimum(reach_ub,
+                                                     self._k_m_max),
+                      -np.inf)
+        return ub, int(np.isfinite(ub).sum())
 
     def _ub(self, dd: int):
-        """(ub handle, n_viable) at duration ``dd`` — backend-computed
-        score upper bounds over the kept candidates (-inf where the
-        candidate can never be admitted at dd). The fleet columns move
-        backend-resident once per round, on first use."""
+        """(ub handle, n_viable) at duration ``dd`` — score upper bounds
+        over the kept candidates (-inf where the candidate can never be
+        admitted at dd). With a segment overlay the bounds come from the
+        reach evaluator and are adopted by the backend; otherwise the
+        backend computes the optimistic full-spare grant over fleet
+        columns moved backend-resident once per round."""
         hit = self._ub_memo.get(dd)
         if hit is None:
-            if self._cols is None:
-                k = self._kept
-                self._cols = self.bk.fleet_cols(
-                    delta=self.delta[k], m_min=self.m_min[k],
-                    m_max=self.m_max[k], sigma=self.sigma[k],
-                    spare_ub=self.spare_ub[k], dom=self.dom[k])
-            hit = self.bk.score_ub(self._cols, self.excess_cum[:, dd - 1],
-                                   float(dd))   # line 6 + 11
+            if self._tables is not None:
+                ub_np, n_viable = self._reach_scores(dd)
+                self._host_memo[dd] = ub_np
+                hit = (self.bk.adopt_scores(ub_np), n_viable)
+            else:
+                if self._cols is None:
+                    k = self._kept
+                    self._cols = self.bk.fleet_cols(
+                        delta=self.delta[k], m_min=self.m_min[k],
+                        m_max=self.m_max[k], sigma=self.sigma[k],
+                        spare_ub=self.spare_ub[k], dom=self.dom[k])
+                hit = self.bk.score_ub(self._cols,
+                                       self.excess_cum[:, dd - 1],
+                                       float(dd))   # line 6 + 11
             self._ub_memo[dd] = hit
         return hit
 
-    def _evaluate(self, pos: np.ndarray):
-        """Gather forecasts for the not-yet-evaluated candidates (one
-        provider call; results land in amortized-doubling buffers)."""
-        miss = pos[self._eval_idx[pos] < 0]
+    def _ub_host(self, dd: int) -> np.ndarray:
+        """Host float64 view of the ``dd`` bounds over the kept
+        candidates — the tie-exact admission rule compares score bits
+        against it (same bits as the backend handle by contract)."""
+        h = self._host_memo.get(dd)
+        if h is None:
+            handle, _ = self._ub(dd)
+            h = np.asarray(self.bk.asnumpy(handle),
+                           dtype=np.float64)[:self._kept.size]
+            self._host_memo[dd] = h
+        return h
+
+    def _evaluate(self, pos: np.ndarray, h: int):
+        """Gather forecasts for the candidates not yet evaluated out to
+        lead ``h`` (one provider call; results land in amortized-doubling
+        buffers). Horizon-aware providers hand back only ``h`` columns —
+        the bulk of an exhaustive low-``dd`` probe's cost — and a row is
+        re-gathered wider iff a later probe needs more leads (binary
+        search descends after its first feasible probe, so widening is
+        the rare case)."""
+        h = int(h)
+        miss = pos[(self._eval_idx[pos] < 0) | (self._eval_h[pos] < h)]
         if not miss.size:
             return
-        spare = np.asarray(self.inp.spare_of(miss), dtype=float)
+        if self._spare_takes_h:
+            spare = np.asarray(self.inp.spare_of(miss, h), dtype=float)
+        else:
+            spare = np.asarray(self.inp.spare_of(miss), dtype=float)
+        got = spare.shape[1]           # legacy providers return full H
         reach = np.cumsum(
-            self.bk.take_matrix(spare, self.inp.r_excess[self.dom[miss]],
+            self.bk.take_matrix(spare,
+                                self.inp.r_excess[self.dom[miss], :got],
                                 self.delta[miss]), axis=1)
+        fresh = miss[self._eval_idx[miss] < 0]
         base = self.evaluated
-        need = base + miss.size
-        if need > self._reach_buf.shape[0]:
-            cap = max(2 * self._reach_buf.shape[0], need, 256)
+        need = base + fresh.size
+        rcap = self._reach_buf.shape[0]
+        if need > rcap:
+            rcap = max(2 * rcap, need, 256)
+        w = max(self._buf_w, got)
+        if (rcap, w) != self._reach_buf.shape:
             for name in ("_reach_buf", "_spare_buf"):
-                buf = np.empty((cap, self.H))
-                buf[:base] = getattr(self, name)[:base]
+                buf = np.empty((rcap, w))
+                buf[:base, :self._buf_w] = \
+                    getattr(self, name)[:base, :self._buf_w]
                 setattr(self, name, buf)
-        self._eval_idx[miss] = base + np.arange(miss.size)
-        self._reach_buf[base:need] = reach
-        self._spare_buf[base:need] = spare
+            self._buf_w = w
+        self._eval_idx[fresh] = base + np.arange(fresh.size)
         self.evaluated = need
+        if fresh.size == miss.size:
+            # all-new rows (the exhaustive sweep): slots are consecutive
+            # in miss order by construction — block write, no scatter
+            self._reach_buf[base:need, :got] = reach
+            self._spare_buf[base:need, :got] = spare
+        else:
+            slots = self._eval_idx[miss]
+            self._reach_buf[slots, :got] = reach
+            self._spare_buf[slots, :got] = spare
+        self._eval_h[miss] = got
 
     def probe(self, d: int, feasibility_only: bool = False):
         """Admit up to n clients at duration ``d`` — the lazy equivalent
@@ -554,16 +729,28 @@ class _LazyGreedy:
         dd = min(d, self.H)
         if dd <= 0 or self._kept.size < self.n:
             return None
+        cap = int(self.inp.candidate_cap)
+        if cap <= 0 and dd <= self._exhausted_h:
+            return self._probe_exhausted(dd, feasibility_only)
         ub, n_viable = self._ub(dd)
         if n_viable < self.n:
             return None
-        cap = int(self.inp.candidate_cap)
         ceiling = n_viable if cap <= 0 else min(n_viable, cap)
         M = min(max(int(self.inp.block), 4 * self.n, 64), ceiling)
         while True:
             if M >= n_viable:
                 top = self.bk.viable_positions(ub)
                 bound = -np.inf
+                if cap <= 0:
+                    # every viable-at-dd candidate is evaluated out to
+                    # >= dd leads after this gather; viability only
+                    # grows with dd (excess is nonnegative), so this
+                    # probe — and any later probe at a shorter duration
+                    # — can admit straight off the buffers, skipping
+                    # the bound machinery (and memoizing the sort)
+                    self._evaluate(self._kept[top], dd)
+                    self._exhausted_h = max(self._exhausted_h, dd)
+                    return self._probe_exhausted(dd, feasibility_only)
             else:
                 top, bound = self.bk.top_m(ub, M)
             if M >= ceiling < n_viable:
@@ -571,8 +758,8 @@ class _LazyGreedy:
                 # set; candidates beyond it are out of scope by contract
                 bound = -np.inf
             cand = self._kept[top]
-            self._evaluate(cand)
-            result = self._admit(cand, dd, bound, feasibility_only)
+            self._evaluate(cand, dd)
+            result = self._admit(cand, top, dd, bound, feasibility_only)
             if result is not None or M >= ceiling:
                 return result
             # the walk hit the bound: widen the set geometrically, and
@@ -584,11 +771,93 @@ class _LazyGreedy:
             if M * 4 >= ceiling:
                 M = ceiling
 
-    def _admit(self, cand: np.ndarray, dd: int, bound: float,
-               feasibility_only: bool):
+    def _probe_exhausted(self, dd: int, feasibility_only: bool):
+        """Probe at a duration the walk has already swept exhaustively.
+
+        An exhaustive uncapped probe at duration ``d`` evaluates every
+        viable-at-``d`` candidate out to ``>= d`` leads, and viability
+        is monotone in duration (excess is nonnegative, reach bounds
+        and ``ν`` are nondecreasing in ``dd``), so for any ``dd <= d``
+        the evaluated rows with ``_eval_h >= dd`` are a superset of
+        viable(dd): admission can run straight off the buffers —
+        realized scores, no upper bounds, no expansion loop. Rows
+        outside viable(dd) score ``-inf`` (their realized reach is
+        below ``m_min`` or their domain has no excess), so the walk
+        order equals the exhaustive path's bit for bit. The score/
+        order construction is lazy and memoized per (dd, evaluated):
+        the admission walk usually resolves within the first few
+        hundred candidates of the order, so the first try sorts only
+        an exact top-K prefix (argpartition, not a full lexsort over
+        the evaluated pool) and falls back to the complete order iff
+        the prefix walk runs dry — which is how an infeasible duration
+        proves itself, so that path pays what it always had to."""
+        key = (dd, self.evaluated)
+        hit = self._order_memo.get(key)
+        if hit is None:
+            pos = np.nonzero((self._eval_idx >= 0)
+                             & (self._eval_h >= dd))[0]
+            eids = self._eval_idx[pos]
+            score, feas = self.bk.greedy_scores(
+                self.sigma[pos], self._reach_buf[eids, dd - 1],
+                self.m_min[pos], self.m_max[pos])
+            score = np.where(feas, score, -np.inf)
+            fin = np.nonzero(score > -np.inf)[0]
+            hit = [pos, score, fin, None]
+            self._order_memo[key] = hit
+        pos, score, fin, order = hit
+        if order is None:
+            order = self._order_prefix(pos, score, fin,
+                                       max(8 * self.n, 512))
+            hit[3] = order
+        res = self._admit(pos, None, dd, -np.inf, feasibility_only,
+                          pre=(score, order))
+        if res is not None or order.size >= fin.size:
+            return res
+        # the prefix ran out with fewer than n admissions: replay the
+        # walk over the complete order (deterministic — identical
+        # admissions up to where the prefix ended)
+        hit[3] = self._order_prefix(pos, score, fin, fin.size)
+        return self._admit(pos, None, dd, -np.inf, feasibility_only,
+                           pre=(score, hit[3]))
+
+    def _order_prefix(self, pos: np.ndarray, score: np.ndarray,
+                      fin: np.ndarray, k: int) -> np.ndarray:
+        """Exact first ``min(k, fin.size)`` elements of the admission
+        order (score desc, position desc) over the finite-score rows.
+
+        Bit-identical to ``fin[lexsort(...)][:k]`` by construction:
+        rows scoring strictly above the k-th largest score all belong
+        to the prefix, and the boundary tie class — position-descending
+        in the full order — contributes exactly its top positions. Near-
+        uniform sigma makes that tie class hundreds of thousands deep,
+        which is precisely when O(F) partitions beat an O(F log F)
+        two-key lexsort of everyone."""
+        if k >= fin.size:
+            return fin[np.lexsort((-pos[fin], -score[fin]))]
+        s = score[fin]
+        s_k = s[np.argpartition(-s, k - 1)[k - 1]]
+        strict = fin[s > s_k]
+        tied = fin[s == s_k]
+        need = k - strict.size
+        if need < tied.size:
+            tied = tied[np.argpartition(-pos[tied], need - 1)[:need]]
+        sel = np.concatenate([strict, tied])
+        return sel[np.lexsort((-pos[sel], -score[sel]))]
+
+    def _admit(self, cand: np.ndarray, top: Optional[np.ndarray],
+               dd: int, bound: float, feasibility_only: bool,
+               pre=None):
         """One admission pass over the evaluated candidate set; None if
-        the candidates scoring strictly above ``bound`` run out before n
-        admissions (an unevaluated candidate could rank among them).
+        the admissible candidates run out before n admissions (an
+        unevaluated candidate could rank among the remainder). The
+        admissible queue is everyone scoring strictly above ``bound``
+        plus the tie-exact prefix: evaluated candidates whose score
+        *equals* the bound, walked in position-descending order down to
+        (exclusive) the largest position among unselected bound-ties —
+        ``top_m`` keeps the largest-position ties, so up to that point
+        no unevaluated candidate can precede them in the global (score
+        desc, position desc) order, and past it one could, so the walk
+        must stop there rather than skip (budget drain order matters).
 
         Candidates are walked in exact (score desc, position desc) order
         — one lexsort over the evaluated set — and admitted in batched
@@ -607,18 +876,45 @@ class _LazyGreedy:
         at O(passes) instead of O(walked candidates) Python iterations.
         """
         eids = self._eval_idx[cand]
-        reach_dd = self._reach_buf[eids, dd - 1]
-        score, feas = self.bk.greedy_scores(self.sigma[cand], reach_dd,
-                                            self.m_min[cand],
-                                            self.m_max[cand])
-        score = np.where(feas, score, -np.inf)
-        order = np.lexsort((-cand, -score))
-        # the walk may only admit candidates scoring strictly above the
-        # bound; -score[order] is ascending, so the count of admissible
-        # candidates is one searchsorted (excludes -inf rows for free)
+        if pre is not None:
+            score, order = pre
+        else:
+            reach_dd = self._reach_buf[eids, dd - 1]
+            score, feas = self.bk.greedy_scores(self.sigma[cand],
+                                                reach_dd,
+                                                self.m_min[cand],
+                                                self.m_max[cand])
+            score = np.where(feas, score, -np.inf)
+            # lexsort only the feasible rows: on infeasible probes most
+            # of a large evaluated pool scores -inf, never admissible
+            fin = np.nonzero(score > -np.inf)[0]
+            order = fin[np.lexsort((-cand[fin], -score[fin]))]
+        # candidates scoring strictly above the bound are always
+        # admissible; -score[order] is ascending, so the count is one
+        # searchsorted (excludes -inf rows for free)
         n_valid = int(np.searchsorted(-score[order], -float(bound),
                                       side="left"))
         queue = order[:n_valid]
+        if np.isfinite(bound):
+            end = int(np.searchsorted(-score[order], -float(bound),
+                                      side="right"))
+            ties = order[n_valid:end]
+            if ties.size:
+                # U = largest position among *unselected* upper-bound
+                # ties (-1 if none): score-ties above U are admissible,
+                # the first at or below U stops the walk (score bits
+                # compare exactly — bound and ub_host share one array)
+                ub_host = self._ub_host(dd)
+                tie_kept = np.nonzero(ub_host == bound)[0]
+                n_sel = int(np.count_nonzero(ub_host[top] == bound))
+                if n_sel >= tie_kept.size:
+                    u_pos = -1
+                else:
+                    u_pos = int(self._kept[tie_kept[-(n_sel + 1)]])
+                cand_t = cand[ties]          # position-descending
+                n_tie = int(np.searchsorted(-cand_t, -u_pos,
+                                            side="left"))
+                queue = order[:n_valid + n_tie]
         budgets = self.inp.r_excess[:, :dd].copy()
         chosen: List[int] = []
         batches = []
@@ -672,7 +968,14 @@ def _select_clients_lazy(inp: LazySelectionInputs, n: int, d_max: int,
             if best is not None:
                 return _to_selection(inp, best, d)
         return None
-    lo_d, hi_d, found_d = 1, d_max, None
+    # feasibility is monotone in d (paper §4.3), so one probe at d_max
+    # settles the common idle-minute case without the binary search's
+    # O(log d_max) ascending — and individually expensive — infeasible
+    # probes; at d_max the certified bounds saturate hardest, so this
+    # probe is also the one most likely to resolve from bounds alone
+    if eng.probe(d_max, feasibility_only=True) is None:
+        return None
+    lo_d, hi_d, found_d = 1, d_max - 1, d_max
     while lo_d <= hi_d:
         mid = (lo_d + hi_d) // 2
         if eng.probe(mid, feasibility_only=True) is not None:
@@ -680,8 +983,6 @@ def _select_clients_lazy(inp: LazySelectionInputs, n: int, d_max: int,
             hi_d = mid - 1
         else:
             lo_d = mid + 1
-    if found_d is None:
-        return None
     return _to_selection(inp, eng.probe(found_d), found_d)
 
 

@@ -63,12 +63,15 @@ class EnvView:
         """[P, H] excess-power forecast."""
         return self.scenario.excess_forecast(self.now, self.horizon)
 
-    def spare_fc(self, rows: Optional[np.ndarray] = None
-                 ) -> Optional[np.ndarray]:
+    def spare_fc(self, rows: Optional[np.ndarray] = None,
+                 horizon: Optional[int] = None) -> Optional[np.ndarray]:
         """[C, H] (or [len(rows), H]) spare-fraction forecast; None under
         the no-load-forecast ablation. Pass candidate rows to gather
-        before the noise draw."""
-        return self.scenario.spare_forecast(self.now, self.horizon,
+        before the noise draw; pass a shorter ``horizon`` to gather only
+        the leading columns (row-keyed noise makes the result the exact
+        prefix of the full-horizon gather)."""
+        return self.scenario.spare_forecast(self.now,
+                                            horizon or self.horizon,
                                             rows=rows)
 
 
@@ -78,7 +81,8 @@ class BaseStrategy:
 
     def __init__(self, registry: ClientRegistry, n: int = 10, d_max: int = 60,
                  seed: int = 0, over_select: float = 1.0,
-                 use_forecast_filter: bool = False, backend=None):
+                 use_forecast_filter: bool = False, backend=None,
+                 exact_uncapped: Optional[bool] = None):
         self.registry = registry
         self.n = n
         self.d_max = d_max
@@ -87,6 +91,11 @@ class BaseStrategy:
         # array backend threaded into the selection solvers; strategies
         # that never build SelectionInputs simply ignore it
         self.backend = backend
+        # exact-uncapped reach evaluator: None = auto (use the segment
+        # overlay whenever the scenario store provides one), True =
+        # require it (raise where it cannot apply), False = legacy
+        # bounds. Strategies without a sharded path ignore it.
+        self.exact_uncapped = exact_uncapped
         self.rng = np.random.default_rng(seed)
         self.utility = UtilityTracker(registry.n_samples_arr)
 
@@ -272,9 +281,15 @@ class FedZeroStrategy(BaseStrategy):
         # fail fast: the sharded path exists for the greedy solver only,
         # and candidate_cap means nothing outside it — a mismatch would
         # otherwise surface mid-run, at the first round with candidates
-        if solver != "greedy" and (sharded or candidate_cap):
-            raise ValueError("sharded selection and candidate_cap require "
-                             "solver='greedy'")
+        if solver != "greedy" and (sharded or candidate_cap
+                                   or self.exact_uncapped):
+            raise ValueError("sharded selection, candidate_cap and "
+                             "exact_uncapped require solver='greedy'")
+        # exact_uncapped=True asserts the walk is exact over *everyone*;
+        # a candidate cap contradicts that by construction
+        if self.exact_uncapped and candidate_cap:
+            raise ValueError("exact_uncapped=True is incompatible with a "
+                             "positive candidate_cap")
         self.sharded = sharded
         # 0 = exact sharded walk; > 0 bounds per-round evaluation to the
         # top-cap candidates by optimistic reach (fleet-scale mode)
@@ -343,19 +358,37 @@ class FedZeroStrategy(BaseStrategy):
         cap_all = registry.capacity_arr
         horizon = excess_fc.shape[1]
 
-        def spare_of(pos: np.ndarray) -> np.ndarray:
+        def spare_of(pos: np.ndarray, h: Optional[int] = None) -> np.ndarray:
             rows = cand[pos]
-            spare_fc = env.spare_fc(rows)
+            spare_fc = env.spare_fc(rows, horizon=h)
             cap = cap_all[rows]
             if spare_fc is None:  # no-load-forecast ablation
-                return np.repeat(cap[:, None], horizon, axis=1)
+                return np.repeat(cap[:, None], h or horizon, axis=1)
             return spare_fc * cap[:, None]
+
+        # exact-uncapped reach evaluator: fetch the candidates' certified
+        # spare-segment overlay from the store (None for dense stores and
+        # the no-load ablation — under no-load the capacity grant is
+        # already exact, so the walk stays exact without an overlay)
+        overlay = noise_ub = None
+        if self.exact_uncapped is not False:
+            get_ov = getattr(env.scenario, "spare_ub_overlay", None)
+            ov = get_ov(env.now, horizon, cand) if get_ov else None
+            if ov is not None:
+                noise_ub = ov["noise_mult_ub"]
+                overlay = ov
+        if self.exact_uncapped and overlay is None \
+                and getattr(env.scenario, "error", None) != "no_load":
+            raise ValueError(
+                "exact_uncapped=True needs a scenario store exposing "
+                "spare_ub_overlay (sparse util mode)")
 
         return LazySelectionInputs(
             registry=registry, spare_of=spare_of, m_spare_ub=cap_all[cand],
             r_excess=excess_fc, sigma=sigma[cand], rows=cand,
             dom=env.dom_rows[cand], candidate_cap=self.candidate_cap,
-            backend=self.backend)
+            backend=self.backend, seg_overlay=overlay,
+            noise_mult_ub=noise_ub)
 
     def record_round(self, contributors, selected, sample_losses):
         super().record_round(contributors, selected, sample_losses)

@@ -87,6 +87,11 @@ CO_LOCATED_CITIES = [  # ten largest German cities — aligned diurnal phase
 # process and would make draws irreproducible across runs)
 _KIND_IDS = {"excess": 1, "load": 2}
 _FIELD_SALTS = {"excess": 101, "util": 102, "carbon": 103, "util_init": 104}
+# forecast-noise folds per kind. "load" deliberately equals the sparse
+# model's "fc_noise" salt: dense and sparse stores draw *identical* load
+# noise for the same (seed, row, now, lead) — one per-row keying contract
+# across util modes (see ScenarioStore._noise)
+_FC_SALTS = {"load": 205, "excess": 206}
 
 # forecast memo: bounded both by entry count and by total elements so a
 # 100k-client fleet cannot pin hundreds of MB of [C, H] slabs
@@ -172,6 +177,9 @@ class _SparseUtil:
         # boundary states: _states[i] = (seg[C] int64, next_switch[C] int64)
         # at step i*cs; built lazily, index 0 from the t=0 definition
         self._states: list = []
+        # recently-advanced full-fleet states keyed by exact step
+        # (see _state_at)
+        self._adv_states: dict = {}
 
     # -- stateless draws -------------------------------------------------
     def _gap(self, rows: np.ndarray, seg: np.ndarray) -> np.ndarray:
@@ -218,6 +226,45 @@ class _SparseUtil:
             a.flags.writeable = False
         return out
 
+    def _state_at(self, t: int):
+        """Full-fleet pinned (seg, next_switch) at step ``t`` exactly
+        (``seg`` counts the switches ≤ ``t``).
+
+        Gathers used to walk their row subset here from the chunk
+        boundary on every call — O(gathered rows × switches since the
+        boundary), paid again each round. Simulation time only moves
+        forward (and a round touches a couple of nearby steps: the
+        selection gathers at ``now``, forecasts one lead later, the
+        executor back at ``now``), so this memoizes the last few states
+        by exact step and advances incrementally from the nearest one
+        at or below the target: a round pays a couple of cheap
+        fleet-wide steps instead of re-walking every gathered row from
+        the chunk boundary. Bit-exact by construction — the state at
+        ``t`` is the unique fixed point (#switches ≤ t, first switch
+        > t) of the same stateless gap draws, regardless of which
+        earlier state the walk started from; segment indices are global
+        to the trace, so a cached state serves any later step in any
+        chunk. Backward access beyond the memo (tests, cold reads)
+        rebuilds from the pinned chunk checkpoint.
+        """
+        c = self._adv_states.get(t)
+        if c is not None:
+            return c
+        lower = [tt for tt in self._adv_states if tt < t]
+        if lower:
+            s0, n0 = self._adv_states[max(lower)]
+        else:
+            s0, n0 = self._state(t // self.cs)
+        seg = s0.astype(np.int64)
+        nxt = n0.astype(np.int64)
+        self._advance(np.arange(self.n_clients, dtype=np.int64),
+                      seg, nxt, t)
+        pinned = self._pin(seg, nxt)
+        self._adv_states[t] = pinned
+        while len(self._adv_states) > 4:    # a round's working set + slack
+            del self._adv_states[min(self._adv_states)]
+        return pinned
+
     # -- gathers ---------------------------------------------------------
     def window(self, rows: Optional[np.ndarray], start: int, stop: int
                ) -> np.ndarray:
@@ -255,11 +302,11 @@ class _SparseUtil:
         clip) plus the cheap-mixer hash; segment structure costs
         O(rows × switches), never O(rows × window).
         """
-        seg0, nxt0 = self._state(i)
+        # full-fleet state advanced to a: switches in (i*cs, a] happened
+        # before the window and are already counted
+        seg0, nxt0 = self._state_at(a)
         seg = seg0[rows].astype(np.int64)
         nxt = nxt0[rows].astype(np.int64)
-        # switches in (i*cs, a] happened before the window: count them
-        self._advance(rows, seg, nxt, a)
         t_grid = np.arange(a, b, dtype=np.int64)
         seg_start = seg.copy()
         # slot[r, t] = how many switches of row r are in (a, t]; segment
@@ -308,6 +355,77 @@ class _SparseUtil:
         # not bit-portable across backends — see repro.backend.base)
         z = self.bk.forecast_noise_z(self._fc_fold, rows, now, horizon, std)
         return np.exp(z, out=z)
+
+    def spare_ub_segments(self, rows: Optional[np.ndarray], start: int,
+                          stop: int):
+        """Regime segments of the gathered rows over [start, stop), each
+        carrying a certified upper bound on every spare-fraction cell
+        (1 − util) the window can realize inside it.
+
+        Returns CSR columns ``(ptr [R+1], a [N], b [N], x_ub [N])``:
+        row ``r``'s segments are ``ptr[r]:ptr[r+1]``, consecutive with
+        absolute step bounds clipped to the window (``a < b``). The
+        bound chain uses only monotone rounded float32 ops, mirroring
+        the realized grid: the per-cell noise is ≥ −amp/2 *exactly*
+        (a power-of-two scale of the centered uniform), so
+        ``util ≥ clip(level − amp/2)`` cell-wise and hence
+        ``1 − clip(level − amp/2) ≥ 1 − util`` for every realizable
+        cell — certified, not sampled. O(rows × switches) host work,
+        never O(rows × window); this is the segment structure the exact
+        uncapped reach evaluator prices (see ``core/selection.py``).
+        """
+        if rows is None:
+            rows = np.arange(self.n_clients, dtype=np.int64)
+        else:
+            rows = np.asarray(rows, dtype=np.int64)
+        R = rows.size
+        if stop <= start or R == 0:
+            z = np.zeros(0, dtype=np.int64)
+            return (np.zeros(R + 1, dtype=np.int64), z, z,
+                    np.zeros(0, dtype=np.float64))
+        seg0, nxt0 = self._state_at(start)
+        seg = seg0[rows].astype(np.int64)
+        nxt = nxt0[rows].astype(np.int64)
+        seg_start = seg.copy()
+        cuts = []  # absolute end of slot s per row (stop once inactive)
+        active = nxt < stop
+        while active.any():
+            idx = np.nonzero(active)[0]
+            cut = np.full(R, stop, dtype=np.int64)
+            cut[idx] = nxt[idx]
+            cuts.append(cut)
+            seg[idx] += 1
+            nxt[idx] += self._gap(rows[idx], seg[idx])
+            active[idx] = nxt[idx] < stop
+        S = len(cuts) + 1
+        bnd = np.empty((R, S + 1), dtype=np.int64)
+        bnd[:, 0] = start
+        for s, cut in enumerate(cuts):
+            bnd[:, s + 1] = cut
+        bnd[:, S] = stop
+        a2, b2 = bnd[:, :-1], bnd[:, 1:]
+        keep = a2 < b2
+        ptr = np.zeros(R + 1, dtype=np.int64)
+        np.cumsum(keep.sum(axis=1), out=ptr[1:])
+        # hash levels for the kept segments only: rows average ~1.33
+        # live segments but the (row, slot) rectangle is S wide, so
+        # flattening first cuts the level-hash grid ~S-fold. Same hash
+        # inputs per surviving cell — bit-identical to hashing the
+        # rectangle and filtering after
+        flat = np.nonzero(keep.ravel())[0]
+        r = flat // S
+        seg_flat = seg_start[r] + (flat - r * S)
+        u = _u01(_hash64(self.seed, "level", rows[r], seg_flat))
+        busy = self._busy0(rows)[r] ^ ((seg_flat & 1) == 1)
+        levels = np.where(busy, 0.5 + 0.45 * u, 0.3 * u).astype(np.float32)
+        util_lb = np.clip(levels - np.float32(0.5 * self._NOISE_AMP),
+                          0.0, 1.0)
+        x = (np.float32(1.0) - util_lb).astype(np.float64)
+        # a2[r, s] and b2[r, s] live at bnd.flat[flat + r] and +1 (the
+        # bnd row is one wider than the keep grid) — index the flat
+        # buffer instead of materializing strided ravel copies
+        bf = bnd.ravel()
+        return ptr, bf[flat + r], bf[flat + r + 1], x
 
 
 def solar_curve(t_min: np.ndarray, utc_offset, peak_w,
@@ -644,15 +762,15 @@ class ScenarioStore:
                rows: Optional[np.ndarray] = None) -> Optional[np.ndarray]:
         """[n_rows, horizon] multiplicative forecast error for lead 1..h.
 
-        Dense stores draw one batched float32 slab per call,
-        counter-seeded from ``(seed, kind, now)`` — row r is the r-th
-        independent error stream of that instant, whatever the batch
-        shape (a gathered row subset draws only ``len(rows)`` streams,
-        but the streams are positional). Sparse-util stores key **load**
-        noise by registry row instead (:meth:`_SparseUtil.forecast_noise`)
-        so block-gathered and full-fleet draws agree bit-for-bit — which
-        is what lets the sharded selection path probe candidates in
-        blocks.
+        Keyed **per row** in every util mode: the cell for (seed, row,
+        now, lead) is a stateless counter hash, so a gathered row subset
+        draws exactly the rows it asks for and equals the full-fleet
+        draw bit-for-bit — the contract the sharded selection path's
+        block-gathered probes rely on. Load noise is keyed by registry
+        row (sparse and dense stores share the fold, so both modes draw
+        identical load noise), excess noise by domain row. The
+        unit-variance shape is uniform (matched mean/std, bounded
+        support), one cheap-mixer draw per cell.
         """
         if self.error == "none":
             return None  # exact forecast: no draw at all
@@ -662,10 +780,10 @@ class ScenarioStore:
         std = 0.05 + 0.20 * np.minimum(lead / 1440.0, 1.0)
         if kind == "load" and self._util_sparse is not None:
             return self._util_sparse.forecast_noise(rows, now, horizon, std)
-        rng = np.random.default_rng(
-            (self.seed & 0xFFFFFFFF, _KIND_IDS[kind], now))
-        z = rng.standard_normal((n_rows, horizon), dtype=np.float32)
-        z *= std.astype(np.float32)
+        fold = backend_base.hash64(self.seed & 0xFFFFFFFF, _FC_SALTS[kind])
+        rows_arr = np.arange(n_rows, dtype=np.int64) if rows is None \
+            else np.asarray(rows, dtype=np.int64)
+        z = self.backend.forecast_noise_z(fold, rows_arr, now, horizon, std)
         return np.exp(z, out=z)
 
     def _forecast(self, kind: str, field: str, now: int, horizon: int,
@@ -725,6 +843,48 @@ class ScenarioStore:
             return None
         return self._forecast("load", "util", now, horizon, invert=True,
                               rows=rows)
+
+    def spare_ub_overlay(self, now: int, horizon: int,
+                         rows: Optional[np.ndarray] = None
+                         ) -> Optional[dict]:
+        """Inputs of the exact uncapped reach evaluator: certified
+        spare-fraction upper bounds as regime segments over the forecast
+        window now+1..now+horizon, plus the per-lead noise-multiplier
+        bound (consumed by ``core/selection.py``'s ``_LazyGreedy``).
+
+        None when util is dense (no segment structure to expose) or
+        under the no-load-forecast ablation (``spare_forecast`` is None
+        and the lazy walk's capacity grant is already exact). Keys:
+        ``ptr``/``a``/``b``/``x_ub`` — CSR segments with
+        **window-relative** step bounds; segments past the trace end are
+        absent, and forecasts zero-pad there, so absent means zero
+        spare — and ``noise_mult_ub``, [horizon] float64 ν with ν[j] an
+        upper bound on every realizable multiplicative forecast-noise
+        factor at lead j+1 (ν is nondecreasing in lead, so ν at a probe
+        duration bounds the whole prefix).
+        """
+        if self._util_sparse is None or self.error == "no_load":
+            return None
+        start = now + 1
+        stop = min(start + horizon, self._n_steps)
+        ptr, a, b, x = self._util_sparse.spare_ub_segments(rows, start,
+                                                           stop)
+        return {"ptr": ptr, "a": a - start, "b": b - start, "x_ub": x,
+                "noise_mult_ub": self._noise_mult_ub(horizon)}
+
+    def _noise_mult_ub(self, horizon: int) -> np.ndarray:
+        """[horizon] certified upper bounds on the multiplicative
+        forecast-noise factor per lead. The drawn float32 exponent is
+        (u − ½)·√12·std with |u − ½| ≤ ½ and std nondecreasing in lead,
+        so exp(√3·std) dominates every realizable factor; the 1e-6
+        relative slack absorbs the few-ulp float32 roundings of the
+        exponent chain, of the host exp, and of the forecast's
+        actual × noise product (≲ 5e-7 combined)."""
+        if self.error == "none":
+            return np.ones(horizon)
+        lead = np.arange(1, horizon + 1, dtype=np.float32)
+        std = 0.05 + 0.20 * np.minimum(lead / 1440.0, 1.0)
+        return np.exp(np.sqrt(3.0) * std.astype(np.float64)) * (1.0 + 1e-6)
 
     # ---- actuals -------------------------------------------------------
     def excess_at(self, step: int) -> np.ndarray:

@@ -12,9 +12,12 @@ Three layers, mirroring how the backend is consumed:
    bits directly).
 3. **Decision parity** — greedy admission over both the materialized and
    the lazy/sharded path must pick the same rows at the same minimal
-   feasible duration. The slow markers pin the issue's acceptance
-   scenarios: a seeded 10k-client dense store and a 1M-client sparse
-   store, compared round for round.
+   feasible duration; since PR 7 that includes the reach-evaluator ops
+   (``reach_tables`` / ``segment_reach`` / ``adopt_scores`` and the
+   position-descending ``top_m``) that make the uncapped lazy walk
+   exact. The slow markers pin the acceptance scenarios: a seeded
+   10k-client dense store and an **uncapped** 1M-client sparse store,
+   compared round for round.
 """
 import numpy as np
 import pytest
@@ -186,6 +189,67 @@ def test_margin_prefix_decisions_agree(rng):
         JX.margin_prefix_ok(drain, dom_sel, budgets))
 
 
+def test_reach_tables_and_segment_reach_bit_identical(rng):
+    """Reach-evaluator ops over device-crossover shapes (> 4096 queries),
+    including zero rows, duplicated breakpoints and w at breakpoints —
+    the 4-point contract in docs/backends.md demands bit equality, and
+    the tie-exact lazy walk consumes these bits as admission bounds."""
+    P, H, N = 8, 60, 9000
+    excess = (rng.integers(0, 64, size=(P, H)) / 8.0)
+    excess[2] = 0.0                        # dead domain
+    excess[3, :10] = excess[3, 10]         # duplicated breakpoints
+    ta, tb = NP.reach_tables(excess), JX.reach_tables(excess)
+    dom = rng.integers(0, P, N)
+    a = rng.integers(0, H + 1, N).astype(np.int64)
+    b = np.minimum(a + rng.integers(0, H + 1, N), H).astype(np.int64)
+    w = rng.integers(0, 80, N) / 8.0
+    w[:P * 4] = excess[dom[:P * 4], rng.integers(0, H, P * 4)]  # on-breakpoint
+    w[N - 16:] = 0.0
+    ga = NP.segment_reach(ta, dom, a, b, w)
+    gb = JX.segment_reach(tb, dom, a, b, w)
+    np.testing.assert_array_equal(ga, gb)
+    # below the crossover too (host fallback path)
+    np.testing.assert_array_equal(
+        NP.segment_reach(ta, dom[:100], a[:100], b[:100], w[:100]),
+        JX.segment_reach(tb, dom[:100], a[:100], b[:100], w[:100]))
+
+
+def test_top_m_parity_degenerate_all_ties(rng):
+    """A wall-to-wall tie plateau (uniform sigma * m_max) is the landscape
+    the retired candidate_cap existed for: both backends must select the
+    same M positions (the LARGEST, per the position-descending tie rule)
+    and report the identical remainder bound."""
+    K, M = 20000, 512
+    ub = np.full(K, 36.75)                  # dyadic: no rounding slack
+    ub[rng.integers(0, K, 64)] = -np.inf    # a few non-viable holes
+    ha, hb = NP.adopt_scores(ub), JX.adopt_scores(ub)
+    ia, ba = NP.top_m(ha, M)
+    ib, bb = JX.top_m(hb, M)
+    assert ba == bb == 36.75                # bound == plateau value
+    np.testing.assert_array_equal(np.sort(np.asarray(ia)),
+                                  np.sort(np.asarray(ib)))
+    finite = np.nonzero(np.isfinite(ub))[0]
+    np.testing.assert_array_equal(          # largest finite positions win
+        np.sort(np.asarray(ia)), finite[-M:])
+
+
+def test_adopt_scores_roundtrip_parity(rng):
+    """Host-assembled overlay scores adopted into each backend must gather
+    back bit-identically and agree on viability and top-M selection."""
+    K, M = 6000, 128
+    ub = np.where(rng.random(K) < 0.1, -np.inf, rng.random(K) * 50)
+    ha, hb = NP.adopt_scores(ub), JX.adopt_scores(ub)
+    np.testing.assert_array_equal(np.asarray(NP.asnumpy(ha))[:K],
+                                  np.asarray(JX.asnumpy(hb))[:K])
+    np.testing.assert_array_equal(NP.viable_positions(ha),
+                                  JX.viable_positions(hb))
+    ia, ba = NP.top_m(ha, M)
+    ib, bb = JX.top_m(hb, M)
+    assert ba == bb
+    np.testing.assert_array_equal(np.sort(np.asarray(ia)),
+                                  np.sort(np.asarray(ib)))
+
+
 def _random_selection_inputs(backend, seed, K=3000, P=10, H=60):
     rng = np.random.default_rng(seed)
     reg = make_paper_registry(n_clients=K, seed=seed)
@@ -248,7 +312,8 @@ def test_greedy_admission_parity_lazy(seed, cap):
 # acceptance scenarios: whole simulations, round for round
 
 
-def _run_rounds(backend, util_mode, n_clients, max_rounds, cap=0):
+def _run_rounds(backend, util_mode, n_clients, max_rounds, cap=0,
+                exact_uncapped=None):
     options = {"solver": "greedy"}
     if cap:
         options["candidate_cap"] = cap
@@ -256,13 +321,23 @@ def _run_rounds(backend, util_mode, n_clients, max_rounds, cap=0):
         scenario=ScenarioSection(util_mode=util_mode, days=1, seed=0),
         fleet=FleetSection(n_clients=n_clients, seed=0),
         strategy=StrategySection(n=10, d_max=60, seed=0, options=options),
-        run=RunSection(max_rounds=max_rounds, backend=backend))
+        run=RunSection(max_rounds=max_rounds, backend=backend,
+                       exact_uncapped=exact_uncapped))
     sims = []
     run_experiment(cfg, sim_out=sims)
     sim = sims[0]
     assert sim.results, "no rounds ran"
     return [(r.round_idx, r.start_step, r.duration, r.participants.tolist(),
              r.contributors.tolist()) for r in sim.results]
+
+
+def test_experiment_parity_sparse_exact_uncapped():
+    """The selection-exactness CI step: a full (small) FedZero run with
+    the reach-evaluator path *required*, compared round for round across
+    backends. Fast enough for tier-1; the 1M variant is the slow pin."""
+    a = _run_rounds("numpy", "sparse", 20_000, 2, exact_uncapped=True)
+    b = _run_rounds("jax", "sparse", 20_000, 2, exact_uncapped=True)
+    assert a == b
 
 
 @pytest.mark.slow
@@ -274,6 +349,7 @@ def test_experiment_parity_10k_dense():
 
 @pytest.mark.slow
 def test_experiment_parity_1m_sparse():
-    a = _run_rounds("numpy", "sparse", 1_000_000, 2, cap=32768)
-    b = _run_rounds("jax", "sparse", 1_000_000, 2, cap=32768)
+    # uncapped since schema 6: the reach evaluator replaced candidate_cap
+    a = _run_rounds("numpy", "sparse", 1_000_000, 2)
+    b = _run_rounds("jax", "sparse", 1_000_000, 2)
     assert a == b

@@ -1,0 +1,248 @@
+"""Segment-domain reach evaluator: exactness, concavity, gather parity.
+
+The reach evaluator is the analytical core of the exact uncapped lazy
+selection path (PR 7). Per power domain ``p`` it answers
+
+    G_p(tau, w) = sum_{t < tau} min(w, E_{p, t})
+
+from O(P * H^2) precomputed tables (``Backend.reach_tables``) in O(1)
+per query (``Backend.segment_reach``), where ``E_{p, t}`` is the
+per-step excess-energy forecast. ``_LazyGreedy`` turns window queries
+``G(b, w) - G(a, w)`` into per-candidate score upper bounds, so the
+evaluator must be
+
+  1. **exact** — bit-equal to the brute-force sum for dyadic inputs,
+     where float64 addition loses nothing, and within a 1-ulp-per-term
+     tolerance for arbitrary floats;
+  2. **concave and nondecreasing in w** — min(w, E) is concave in w and
+     sums preserve concavity; the lazy walk's early termination leans on
+     the resulting bound monotonicity;
+  3. **gather-stable** — a subset query (fewer rows, fewer segments)
+     must return exactly the restriction of the full-fleet query, the
+     same contract ``tests/test_sparse_util.py`` pins for util gathers;
+  4. **certified** — the spare-fraction upper bounds exposed by
+     ``_SparseUtil.spare_ub_segments`` must dominate every realizable
+     spare cell, else a "tight" bound could wrongly prune an admissible
+     candidate and break exactness.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.backend import get_backend
+from repro.data.traces import make_scenario
+
+NP = get_backend("numpy")
+
+
+def brute_reach(excess, dom, a, b, w):
+    """Reference: sum_{a <= t < b} min(w, E_{dom, t}) per query."""
+    out = np.zeros(w.shape, dtype=np.float64)
+    for i in range(w.size):
+        e = excess[dom[i], a[i]:b[i]]
+        out[i] = np.minimum(w[i], e).sum()
+    return out
+
+
+def dyadic_excess(rng, P, H, scale=8.0):
+    """Excess grids whose sums are exact in float64: k / 16 with small k."""
+    return (rng.integers(0, int(scale * 16), size=(P, H)) / 16.0)
+
+
+def random_queries(rng, N, P, H):
+    dom = rng.integers(0, P, size=N)
+    a = rng.integers(0, H + 1, size=N)
+    b = np.minimum(a + rng.integers(0, H + 1, size=N), H)
+    return dom, a.astype(np.int64), b.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# 1. exactness against the brute-force sum
+
+
+def test_dyadic_queries_bit_equal_to_bruteforce():
+    rng = np.random.default_rng(0)
+    P, H, N = 5, 60, 4000
+    excess = dyadic_excess(rng, P, H)
+    tables = NP.reach_tables(excess)
+    dom, a, b = random_queries(rng, N, P, H)
+    w = rng.integers(0, 12 * 16, size=N) / 16.0
+    got = NP.segment_reach(tables, dom, a, b, w)
+    np.testing.assert_array_equal(got, brute_reach(excess, dom, a, b, w))
+
+
+def test_queries_at_breakpoints_and_edges_bit_equal():
+    """w exactly at table breakpoints (and 0, and above max) is where the
+    searchsorted rank logic can be off by one — pin it cell-exactly."""
+    rng = np.random.default_rng(1)
+    P, H = 3, 48
+    excess = dyadic_excess(rng, P, H)
+    excess[0, :5] = excess[0, 5]            # duplicated breakpoints
+    excess[1, :] = 0.0                      # an all-zero domain
+    tables = NP.reach_tables(excess)
+    ws, doms = [], []
+    for p in range(P):
+        ws += [0.0, float(excess[p].max()) + 1.0] + excess[p, :8].tolist()
+        doms += [p] * 10
+    w = np.asarray(ws, dtype=np.float64)
+    dom = np.asarray(doms)
+    a = np.zeros(w.size, dtype=np.int64)
+    b = np.full(w.size, H, dtype=np.int64)
+    got = NP.segment_reach(tables, dom, a, b, w)
+    np.testing.assert_array_equal(got, brute_reach(excess, dom, a, b, w))
+    # empty windows (a == b) are exactly zero, not just small
+    np.testing.assert_array_equal(
+        NP.segment_reach(tables, dom, b, b, w), np.zeros(w.size))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), P=st.integers(1, 6),
+           H=st.integers(1, 40))
+    def test_property_dyadic_bruteforce_equality(seed, P, H):
+        rng = np.random.default_rng(seed)
+        excess = dyadic_excess(rng, P, H)
+        tables = NP.reach_tables(excess)
+        dom, a, b = random_queries(rng, 200, P, H)
+        w = rng.integers(0, 10 * 16, size=200) / 16.0
+        got = NP.segment_reach(tables, dom, a, b, w)
+        np.testing.assert_array_equal(got, brute_reach(excess, dom, a, b, w))
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_property_float_bruteforce_close(seed):
+        """Arbitrary floats: sorted-order table sums may round differently
+        from time-order brute sums, but only by ~H ulps — the daylight
+        REACH_SLACK absorbs in the selection bound."""
+        rng = np.random.default_rng(seed)
+        P, H, N = 4, 60, 300
+        excess = rng.random((P, H)) * rng.random((P, 1)) * 10.0
+        tables = NP.reach_tables(excess)
+        dom, a, b = random_queries(rng, N, P, H)
+        w = rng.random(N) * 8.0
+        got = NP.segment_reach(tables, dom, a, b, w)
+        ref = brute_reach(excess, dom, a, b, w)
+        np.testing.assert_allclose(got, ref, rtol=1e-12, atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# 2. concavity and monotonicity in w
+
+
+def test_reach_concave_and_nondecreasing_in_x():
+    rng = np.random.default_rng(2)
+    P, H = 4, 60
+    excess = dyadic_excess(rng, P, H)
+    tables = NP.reach_tables(excess)
+    # dyadic w grid -> slopes are exact, concavity check needs no epsilon
+    w_grid = np.arange(0, 12 * 16 + 1) / 16.0
+    for p in range(P):
+        for (a, b) in [(0, H), (5, 40), (17, 18), (0, 1)]:
+            dom = np.full(w_grid.size, p)
+            aa = np.full(w_grid.size, a, dtype=np.int64)
+            bb = np.full(w_grid.size, b, dtype=np.int64)
+            g = NP.segment_reach(tables, dom, aa, bb, w_grid)
+            slopes = np.diff(g)
+            assert (slopes >= 0.0).all()              # nondecreasing
+            assert (np.diff(slopes) <= 0.0).all()     # concave
+            assert g[0] == 0.0                        # G(., 0) == 0
+            # saturation: beyond max E the value is the plain window sum
+            assert g[-1] == excess[p, a:b].sum()
+
+
+# ---------------------------------------------------------------------------
+# 3. gather parity: subset queries == full-fleet restriction
+
+
+def test_spare_ub_segments_subset_equals_full_restriction():
+    sc = make_scenario("global", n_clients=400, days=2, seed=7,
+                       util_mode="sparse")
+    su = sc._util_sparse
+    start, stop = 1400, 1520                 # spans the chunk boundary
+    full = np.arange(400, dtype=np.int64)
+    ptr_f, a_f, b_f, x_f = su.spare_ub_segments(full, start, stop)
+    rows = np.array([0, 3, 17, 199, 399], dtype=np.int64)
+    ptr_s, a_s, b_s, x_s = su.spare_ub_segments(rows, start, stop)
+    for i, r in enumerate(rows):
+        sl_f = slice(ptr_f[r], ptr_f[r + 1])
+        sl_s = slice(ptr_s[i], ptr_s[i + 1])
+        np.testing.assert_array_equal(a_s[sl_s], a_f[sl_f])
+        np.testing.assert_array_equal(b_s[sl_s], b_f[sl_f])
+        np.testing.assert_array_equal(x_s[sl_s], x_f[sl_f])
+
+
+def test_spare_ub_overlay_subset_equals_full_restriction():
+    sc = make_scenario("global", n_clients=300, days=1, seed=11,
+                       util_mode="sparse")
+    now, H = 600, 60
+    ov_full = sc.spare_ub_overlay(now, H)
+    rows = np.array([5, 42, 120, 299], dtype=np.int64)
+    ov_sub = sc.spare_ub_overlay(now, H, rows=rows)
+    np.testing.assert_array_equal(ov_full["noise_mult_ub"],
+                                  ov_sub["noise_mult_ub"])
+    pf, ps = ov_full["ptr"], ov_sub["ptr"]
+    for i, r in enumerate(rows):
+        sl_f = slice(pf[r], pf[r + 1])
+        sl_s = slice(ps[i], ps[i + 1])
+        np.testing.assert_array_equal(ov_sub["a"][sl_s], ov_full["a"][sl_f])
+        np.testing.assert_array_equal(ov_sub["b"][sl_s], ov_full["b"][sl_f])
+        np.testing.assert_array_equal(ov_sub["x_ub"][sl_s],
+                                      ov_full["x_ub"][sl_f])
+
+
+def test_overlay_segments_tile_the_window():
+    sc = make_scenario("global", n_clients=64, days=1, seed=3,
+                       util_mode="sparse")
+    now, H = 300, 60
+    ov = sc.spare_ub_overlay(now, H)
+    ptr, a, b = ov["ptr"], ov["a"], ov["b"]
+    n_steps = 24 * 60
+    width = min(now + 1 + H, n_steps) - (now + 1)
+    for r in range(64):
+        sa, sb = a[ptr[r]:ptr[r + 1]], b[ptr[r]:ptr[r + 1]]
+        assert sa.size >= 1
+        assert sa[0] == 0 and sb[-1] == width
+        assert (sb > sa).all()                      # non-degenerate
+        np.testing.assert_array_equal(sa[1:], sb[:-1])   # consecutive
+
+
+def test_overlay_absent_for_dense_and_no_load_stores():
+    dense = make_scenario("global", n_clients=32, days=1, seed=0)
+    assert dense.spare_ub_overlay(100, 60) is None
+    noload = make_scenario("global", n_clients=32, days=1, seed=0,
+                           util_mode="sparse", error="no_load")
+    assert noload.spare_ub_overlay(100, 60) is None
+
+
+# ---------------------------------------------------------------------------
+# 4. certification: x_ub * noise_mult_ub dominates every realizable cell
+
+
+@pytest.mark.parametrize("error", ["realistic", "none"])
+def test_x_ub_dominates_every_forecast_cell(error):
+    sc = make_scenario("global", n_clients=200, days=1, seed=13,
+                       util_mode="sparse", error=error)
+    now, H = 500, 60
+    rows = np.arange(200, dtype=np.int64)
+    ov = sc.spare_ub_overlay(now, H, rows=rows)
+    fc = sc.spare_forecast(now, H, rows=rows)        # [R, H] realized cells
+    nu = ov["noise_mult_ub"]
+    ptr, a, b, x = ov["ptr"], ov["a"], ov["b"], ov["x_ub"]
+    for i in range(rows.size):
+        for s in range(ptr[i], ptr[i + 1]):
+            cells = fc[i, a[s]:b[s]]
+            cap = np.minimum(x[s] * nu[a[s]:b[s]], 1.0)
+            assert (cells <= cap).all(), (i, s)
+
+
+def test_noise_mult_ub_is_one_without_forecast_error():
+    sc = make_scenario("global", n_clients=16, days=1, seed=0,
+                       util_mode="sparse", error="none")
+    ov = sc.spare_ub_overlay(100, 60)
+    np.testing.assert_array_equal(ov["noise_mult_ub"], np.ones(60))

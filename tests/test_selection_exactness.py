@@ -1,0 +1,163 @@
+"""Selection-exactness harness: uncapped lazy greedy == reference greedy.
+
+PR 7's tentpole claim is that the sharded lazy walk, armed with the
+segment-domain reach evaluator (``Backend.reach_tables`` /
+``Backend.segment_reach``), admits **provably the same clients** as
+``_solve_greedy`` over fully materialized spare forecasts — with no
+``candidate_cap`` and without materializing tied tails. This suite pins
+that claim against the ground truth:
+
+* the *divergence* half: the retired ``candidate_cap`` heuristic
+  (cap=32768, the value the ``1m_1day`` benchmark shipped with through
+  schema 5) is shown to change at least one admission versus
+  materializing everyone on a seeded 50k-client scenario — the cap was
+  a real approximation, not a free lunch;
+* the *exactness* half: the uncapped overlay walk matches the reference
+  row-for-row (rows, duration, expected batches) on the same scenarios.
+
+All scenarios here use uniform sigma, so the score landscape is wall-to-
+wall ties (every unsaturated candidate scores sigma * m_max): the lazy
+walk's tie-exact U-prefix rule (see ``_LazyGreedy``) is exercised on
+every probe, not just in a corner case. The fast 50k variants run in
+tier-1; the 1M-client variant — the benchmark's actual operating point —
+runs under the ``slow`` marker and needs ~0.5 GB for the materialized
+reference slab.
+"""
+import numpy as np
+import pytest
+
+from repro.core.profiles import make_paper_registry
+from repro.core.selection import (LazySelectionInputs, SelectionInputs,
+                                  select_clients)
+from repro.core.strategies import FedZeroStrategy
+from repro.data.traces import make_scenario
+
+D_MAX = 60
+
+
+def build_inputs(n_clients, seed, now, cap=0, overlay=True,
+                 materialize=True):
+    """Reference (materialized) and lazy inputs over one seeded store."""
+    sc = make_scenario("global", n_clients=n_clients, days=1, seed=seed,
+                       util_mode="sparse")
+    reg = make_paper_registry(n_clients=n_clients,
+                              domain_names=sc.domain_names)
+    dom_rows = np.arange(n_clients) % len(sc.domain_names)
+    excess_fc = sc.excess_forecast(now, D_MAX)
+    sigma = np.ones(n_clients)
+    cap_arr = reg.capacity_arr
+    cand = np.nonzero((excess_fc.sum(axis=1) > 0)[dom_rows])[0]
+
+    def spare_of(pos, h=None):
+        rows = cand[pos]
+        return (sc.spare_forecast(now, h or D_MAX, rows=rows)
+                * cap_arr[rows][:, None])
+
+    ov = sc.spare_ub_overlay(now, D_MAX, cand) if overlay else None
+    lazy = LazySelectionInputs(
+        registry=reg, spare_of=spare_of,
+        m_spare_ub=cap_arr[cand].astype(float), r_excess=excess_fc,
+        sigma=sigma[cand], rows=cand, dom=dom_rows[cand],
+        candidate_cap=cap, seg_overlay=ov,
+        noise_mult_ub=None if ov is None else ov["noise_mult_ub"])
+    mat = None
+    if materialize:
+        m_spare = (sc.spare_forecast(now, D_MAX, rows=cand)
+                   * cap_arr[cand][:, None])
+        mat = SelectionInputs(registry=reg, m_spare=m_spare,
+                              r_excess=excess_fc, sigma=sigma[cand],
+                              rows=cand, dom=dom_rows[cand])
+    return mat, lazy
+
+
+def as_tuple(sel):
+    if sel is None:
+        return None
+    return (sel.rows.tolist(), sel.expected_duration,
+            sel.expected_batches.tolist())
+
+
+# ---------------------------------------------------------------------------
+# the retired cap was a real approximation: 32768 changes an admission
+
+
+def test_candidate_cap_32768_changed_admissions_at_50k():
+    mat, capped = build_inputs(50_000, seed=3, now=540, cap=32768,
+                               overlay=False)
+    ref = select_clients(mat, 20, D_MAX, solver="greedy")
+    cut = select_clients(capped, 20, D_MAX, solver="greedy")
+    assert ref is not None and cut is not None
+    assert as_tuple(ref) != as_tuple(cut)
+    # the divergence is substantive: different rows, not just reordering
+    assert set(ref.rows.tolist()) != set(cut.rows.tolist())
+
+
+# ---------------------------------------------------------------------------
+# the uncapped overlay walk is admission-identical to the reference
+
+
+@pytest.mark.parametrize("seed,now,n", [
+    (3, 540, 20),      # the scenario the cap demonstrably corrupted
+    (1, 300, 10),
+    (1, 660, 20),
+    (3, 780, 5),
+])
+def test_uncapped_lazy_matches_reference_greedy_50k(seed, now, n):
+    mat, lazy = build_inputs(50_000, seed=seed, now=now)
+    ref = select_clients(mat, n, D_MAX, solver="greedy")
+    got = select_clients(lazy, n, D_MAX, solver="greedy")
+    assert as_tuple(got) == as_tuple(ref)
+    assert ref is not None     # these scenarios must stay feasible
+
+
+def test_forecast_gather_is_horizon_prefix_consistent():
+    """The lazy engine gathers only the leads a probe needs, so a
+    short-horizon forecast MUST be the bit-exact column prefix of the
+    full-horizon one — true because noise is keyed per (row, now, lead),
+    never dealt positionally. Exactness of every horizon-limited probe
+    rests on this."""
+    for util_mode in ("sparse", "dense"):
+        sc = make_scenario("global", n_clients=300, days=1, seed=9,
+                           util_mode=util_mode)
+        rows = np.array([0, 17, 120, 299])
+        full = sc.spare_forecast(700, 60, rows=rows)
+        for h in (1, 13, 59):
+            np.testing.assert_array_equal(
+                sc.spare_forecast(700, h, rows=rows), full[:, :h])
+
+
+def test_uncapped_lazy_matches_reference_on_infeasible_round():
+    # n too large for the excess budget: both sides must return None
+    mat, lazy = build_inputs(8_000, seed=2, now=60)
+    assert select_clients(mat, 500, D_MAX, solver="greedy") is None
+    assert select_clients(lazy, 500, D_MAX, solver="greedy") is None
+
+
+# ---------------------------------------------------------------------------
+# knob plumbing: exact_uncapped fails fast where it cannot be honoured
+
+
+def test_exact_uncapped_rejects_candidate_cap():
+    reg = make_paper_registry(n_clients=16)
+    with pytest.raises(ValueError, match="incompatible"):
+        FedZeroStrategy(reg, n=10, d_max=60, solver="greedy",
+                        exact_uncapped=True, candidate_cap=1024)
+
+
+def test_exact_uncapped_requires_greedy_solver():
+    reg = make_paper_registry(n_clients=16)
+    with pytest.raises(ValueError, match="greedy"):
+        FedZeroStrategy(reg, n=10, d_max=60, solver="mip",
+                        exact_uncapped=True)
+
+
+# ---------------------------------------------------------------------------
+# the benchmark's operating point: 1M clients, uncapped, admission-exact
+
+
+@pytest.mark.slow
+def test_uncapped_lazy_matches_reference_greedy_1m():
+    mat, lazy = build_inputs(1_000_000, seed=0, now=540)
+    ref = select_clients(mat, 10, D_MAX, solver="greedy")
+    got = select_clients(lazy, 10, D_MAX, solver="greedy")
+    assert as_tuple(got) == as_tuple(ref)

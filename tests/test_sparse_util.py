@@ -81,11 +81,16 @@ def test_forecast_noise_is_keyed_per_row():
     full = np.asarray(sc.spare_forecast(10, 60))
     sub = np.asarray(sc.spare_forecast(10, 60, rows=rows))
     np.testing.assert_array_equal(full[rows], sub)
-    # dense stores draw positional streams: subset != full-slab rows
+    # dense stores share the per-row keying contract (and the load-noise
+    # fold): subset draws equal full-fleet rows, and both util modes draw
+    # identical load noise for the same (seed, row, now, lead)
     dn = make_scenario("global", n_clients=120, days=2, seed=4)
-    assert not np.array_equal(np.asarray(dn.spare_forecast(10, 60))[rows],
-                              np.asarray(dn.spare_forecast(10, 60,
-                                                           rows=rows)))
+    np.testing.assert_array_equal(np.asarray(dn.spare_forecast(10, 60))[rows],
+                                  np.asarray(dn.spare_forecast(10, 60,
+                                                               rows=rows)))
+    np.testing.assert_array_equal(
+        np.asarray(dn._noise("load", 10, 120, 60)),
+        np.asarray(sc._noise("load", 10, 120, 60)))
 
 
 def test_forecast_noise_keys_do_not_collide_across_rows_on_long_traces():
