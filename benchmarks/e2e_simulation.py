@@ -34,15 +34,20 @@ each in its own subprocess so peak RSS is attributable:
   ``candidate_cap``, and admissions are pinned identical to the
   materialized reference greedy by ``tests/test_selection_exactness.py``.
 
-Each JSON row records its array ``backend`` (schema 6); ``--check``
-fails if the committed rows were produced with a different backend
-than this script's configuration table declares. Any configuration can
-be pointed at the ``jax`` backend (``"backend": "jax"`` in ``CONFIGS``;
-decisions are parity-pinned by ``tests/test_backend_parity.py``), but
-on a single CPU device the dispatch-heavy scheduler loses to the NumPy
-reference (~5.4 s vs ~1.0 s per round at 1M clients), so the committed
-figures stay on ``numpy`` until an accelerator runs the gate — see
-``docs/backends.md``.
+Each JSON row records its array ``backend`` (schema 6) and, since
+schema 7, the backend **dispatch ledger** for the simulated rounds:
+``dispatch_total`` / ``dispatches_per_round`` / per-op
+``dispatch_counts`` read from ``ArrayBackend.dispatch_counts`` (reset
+after setup, so the figures cover the round loop only). Schema 7 also
+adds the ``1m_1day_jax`` row — the same uncapped 1M-client day on
+``backend="jax"`` (decisions parity-pinned by
+``tests/test_backend_parity.py``): with the fused device-resident
+selection pipeline (``probe_scores`` / ``synth_window`` /
+``admit_domains``) and the measured per-op placement policy (branch/
+bandwidth-bound ops route host when the only device is the CPU — see
+``docs/backends.md``) the JAX backend holds a single CPU device to
+≤ 1.5× the NumPy per-round wall (``ms_per_round_vs_numpy``, enforced
+as a budget), versus ~3× before the fusion.
 
 Emits ``BENCH_e2e_simulation.json`` at the repo root. CI runs the
 benchmark on every push (a failing run or a blown budget fails the job)
@@ -67,7 +72,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_e2e_simulation.json")
 
-SCHEMA = 6
+SCHEMA = 7
 CONFIGS = {
     "10k_3day": {"kind": "simulation", "clients": 10_000,
                  "scenario_days": 3, "sim_days": 3, "budget_wall_s": 60.0},
@@ -78,8 +83,16 @@ CONFIGS = {
                     "budget_wall_s": 10.0, "budget_rss_mb": 768.0},
     "1m_1day": {"kind": "simulation", "clients": 1_000_000,
                 "scenario_days": 1, "sim_days": 1, "util_mode": "sparse",
-                "budget_wall_s": 600.0, "budget_rss_mb": 4096.0},
+                "budget_wall_s": 900.0, "budget_rss_mb": 4096.0},
+    # same day on the fused JAX backend; gated at ≤ 1.5× the numpy row's
+    # per-round wall (ms_per_round_vs_numpy, computed by main())
+    "1m_1day_jax": {"kind": "simulation", "clients": 1_000_000,
+                    "scenario_days": 1, "sim_days": 1, "util_mode": "sparse",
+                    "backend": "jax", "budget_wall_s": 900.0,
+                    "budget_rss_mb": 6144.0},
 }
+# the jax row may be at most this × the numpy row's ms_per_round
+BACKEND_RATIO_BUDGET = 1.5
 
 
 def _peak_rss_mb() -> float:
@@ -114,13 +127,20 @@ def run_e2e(n_clients: int, scenario_days: int, sim_days: int, n: int = 10,
         run=RunSection(until_step=sim_days * 24 * 60 - d_max - 1,
                        eval_every=5, seed=seed, backend=backend))
 
+    from repro.backend import get_backend
+
     t0 = time.perf_counter()
     sim = build_experiment(cfg)
     t_setup = time.perf_counter() - t0
 
+    # dispatch ledger covers the round loop only (setup synthesis reset)
+    bk = get_backend(backend)
+    bk.reset_dispatch_counts()
     t1 = time.perf_counter()
     summary = sim.run(until_step=cfg.run.until_step)
     t_sim = time.perf_counter() - t1
+    dispatch_counts = dict(sorted(bk.dispatch_counts.items()))
+    dispatch_total = sum(dispatch_counts.values())
 
     peak_rss_mb = _peak_rss_mb()
     return {
@@ -145,6 +165,10 @@ def run_e2e(n_clients: int, scenario_days: int, sim_days: int, n: int = 10,
                          if summary["rounds"] else None),
         "ms_per_sim_minute": (1000.0 * t_sim / summary["sim_minutes"]
                               if summary["sim_minutes"] else None),
+        "dispatch_total": dispatch_total,
+        "dispatches_per_round": (dispatch_total / summary["rounds"]
+                                 if summary["rounds"] else None),
+        "dispatch_counts": dispatch_counts,
     }
 
 
@@ -232,6 +256,13 @@ def check_committed(path: str) -> int:
         if not row.get("ok"):
             print(f"[e2e --check] {key} recorded as failing its budget")
             return 1
+    jx = configs.get("1m_1day_jax", {})
+    ratio = jx.get("ms_per_round_vs_numpy")
+    if not (isinstance(ratio, (int, float))
+            and ratio <= BACKEND_RATIO_BUDGET):
+        print(f"[e2e --check] 1m_1day_jax ms_per_round_vs_numpy={ratio!r} "
+              f"missing or above the {BACKEND_RATIO_BUDGET}x budget")
+        return 1
     print(f"[e2e --check] {path} is fresh")
     return 0
 
@@ -290,6 +321,19 @@ def main():
                   f"rounds={row['rounds']}  rss={row['peak_rss_mb']:.0f}MB  "
                   f"ok={row['ok']}")
         failed = failed or not row["ok"]
+    # cross-row gate: the jax day must hold ≤ BACKEND_RATIO_BUDGET × the
+    # numpy day's per-round wall (the fused-pipeline acceptance bar)
+    base = payload["configs"].get("1m_1day")
+    jx = payload["configs"].get("1m_1day_jax")
+    if base and jx and base.get("ms_per_round") and jx.get("ms_per_round"):
+        ratio = jx["ms_per_round"] / base["ms_per_round"]
+        jx["ms_per_round_vs_numpy"] = ratio
+        jx["within_backend_ratio"] = bool(ratio <= BACKEND_RATIO_BUDGET)
+        jx["ok"] = bool(jx["ok"] and jx["within_backend_ratio"])
+        print(f"[e2e] 1m_1day_jax: {ratio:.2f}x numpy ms_per_round "
+              f"(budget {BACKEND_RATIO_BUDGET}x)  "
+              f"dispatches/round={jx.get('dispatches_per_round'):.0f}")
+        failed = failed or not jx["ok"]
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1, default=float)
     print(f"wrote {os.path.abspath(args.out)}")

@@ -4,7 +4,8 @@ The scheduling stack (``data/traces.py`` synthesis, ``core/selection.py``
 solvers) calls array math through an :class:`ArrayBackend` instead of
 ``np.*`` directly. ``get_backend("numpy")`` returns the bit-exact host
 reference; ``get_backend("jax")`` returns the jit-compiled JAX backend
-with device-resident fleet columns. The parity contract between them is
+with device-resident fleet columns; ``get_backend("pallas")`` layers the
+Pallas counter-hash synthesis kernels on top of the JAX backend. The parity contract between them is
 documented in :mod:`repro.backend.base` and docs/backends.md; selection
 is surfaced as the ``backend=`` knob on
 :class:`repro.core.experiment.RunSection`.
@@ -34,7 +35,7 @@ def register_backend(name: str, factory: Callable[[], ArrayBackend]):
 def available_backends():
     """Names ``get_backend`` accepts (the jax one may still fail to
     import at resolution time if jax is absent)."""
-    return tuple(sorted({"numpy", "jax", *_FACTORIES}))
+    return tuple(sorted({"numpy", "jax", "pallas", *_FACTORIES}))
 
 
 def get_backend(spec=None) -> ArrayBackend:
@@ -52,15 +53,18 @@ def get_backend(spec=None) -> ArrayBackend:
         return got
     if name == "numpy":
         bk: ArrayBackend = NumpyBackend()
-    elif name == "jax":
+    elif name in ("jax", "pallas"):
         try:
-            from .jax_backend import JaxBackend
+            if name == "jax":
+                from .jax_backend import JaxBackend as cls
+            else:
+                from .pallas_backend import PallasBackend as cls
         except ImportError as exc:  # pragma: no cover - env-dependent
             raise RuntimeError(
-                "backend 'jax' needs the jax toolchain, which failed to "
-                f"import: {exc}. Use backend='numpy' or install jax."
+                f"backend {name!r} needs the jax toolchain, which failed "
+                f"to import: {exc}. Use backend='numpy' or install jax."
             ) from exc
-        bk = JaxBackend()
+        bk = cls()
     elif name in _FACTORIES:
         bk = _FACTORIES[name]()
     else:

@@ -159,45 +159,107 @@ class ArrayBackend:
 
     name = "numpy"
 
+    # -- dispatch accounting ---------------------------------------------
+    # Every op implementation ticks the counter once per *dispatch*: for
+    # the host reference that is one tick per op call; accelerated
+    # backends tick once per device executable launched, so the counter
+    # is the per-round dispatch budget the benchmarks and the CI
+    # regression step read (see docs/backends.md, "fused ops & dispatch
+    # budget").
+
+    @property
+    def dispatch_counts(self) -> dict:
+        d = self.__dict__.get("_dispatch_counts")
+        if d is None:
+            d = self.__dict__["_dispatch_counts"] = {}
+        return d
+
+    def _tick(self, op: str, n: int = 1):
+        c = self.dispatch_counts
+        c[op] = c.get(op, 0) + n
+
+    def reset_dispatch_counts(self):
+        self.dispatch_counts.clear()
+
+    def dispatch_total(self) -> int:
+        return sum(self.dispatch_counts.values())
+
     # -- counter-hash synthesis primitives -------------------------------
     def sm64(self, x):
+        self._tick("sm64")
         return sm64(np.asarray(x, dtype=np.uint64))
 
     def hash64(self, seed, salt, *keys):
+        self._tick("hash64")
         return hash64(seed, salt, *keys)
 
     def u01(self, h):
+        self._tick("u01")
         return u01(np.asarray(h, dtype=np.uint64))
 
     def cheap_u01(self, fold, key):
+        self._tick("cheap_u01")
         return cheap_u01(_U64(fold), np.asarray(key, dtype=np.uint64))
+
+    # -- dense-store chunk RNG -------------------------------------------
+    def chunk_rng(self, seed, salt, i) -> np.random.Generator:
+        """Counter-seeded generator behind the dense chunk synthesizers
+        (``ScenarioStore._excess_chunk``/``_util_chunk``/etc.).
+
+        Routed through the backend so ``RunSection(backend=...)`` reaches
+        every synthesis path, but **host-pinned in every backend**:
+        NumPy's bit-stream generators (PCG64) have no counter-hash
+        equivalent on an accelerator, and the dense goldens pin their
+        exact streams. Accelerated backends inherit this reference —
+        overriding it would change dense-store bits and break the golden
+        suite by contract.
+        """
+        self._tick("chunk_rng")
+        return np.random.default_rng((int(seed) & 0xFFFFFFFF, int(salt),
+                                      int(i)))
 
     # -- fused synthesis grids -------------------------------------------
     def cell_noise(self, fold, rows, t_grid):
         """[R, W] float32 uniform [0,1) noise cell per (row, step)."""
+        self._tick("cell_noise")
         key = (np.asarray(rows, dtype=np.uint64)[:, None] << _U64(24)) \
             ^ np.asarray(t_grid, dtype=np.uint64)[None, :]
         return cheap_u01(_U64(fold), key)
 
-    def piece_grid(self, levels, slot, fold, rows, t0, amp):
+    def synth_window(self, levels, slot, fold, rows, t0, amp):
         """[R, W] util window: per-slot level gather + centered per-cell
         noise + clip to [0, 1] — the grid-heavy tail of a sparse-util
         gather (the data-dependent segment walk that produced ``levels``
-        and ``slot`` stays on the host)."""
+        and ``slot`` stays on the host).
+
+        The whole chain is elementwise IEEE float ops (parity-contract
+        point 2), so accelerated backends fuse it into a single
+        dispatch; the float32 multiply→add seam (``noise·amp`` then
+        ``util + noise``) must be fenced against FMA contraction (see
+        docs/backends.md, "fused ops & dispatch budget")."""
+        self._tick("synth_window")
         util = np.take_along_axis(levels, slot, axis=1)
         t_grid = t0 + np.arange(slot.shape[1], dtype=np.int64)
-        noise = self.cell_noise(fold, rows, t_grid)
+        key = (np.asarray(rows, dtype=np.uint64)[:, None] << _U64(24)) \
+            ^ np.asarray(t_grid, dtype=np.uint64)[None, :]
+        noise = cheap_u01(_U64(fold), key)
         noise -= np.float32(0.5)
         noise *= np.float32(amp)
         util += noise
         np.clip(util, 0.0, 1.0, out=util)
         return util
 
+    def piece_grid(self, levels, slot, fold, rows, t0, amp):
+        """Back-compat alias for :meth:`synth_window` (the fused op the
+        synthesis path now calls)."""
+        return self.synth_window(levels, slot, fold, rows, t0, amp)
+
     def forecast_noise_z(self, fc_fold, rows, now, horizon, std):
         """[R, horizon] pre-``exp`` multiplicative forecast-error
         exponent keyed per registry row. The caller applies the host
         ``np.exp`` (transcendentals are not bit-portable — see module
         docstring); returns a fresh writable float32 array."""
+        self._tick("forecast_noise_z")
         fold = _U64(fc_fold)
         row_h = sm64(np.asarray(rows, dtype=np.uint64) ^ fold)[:, None]
         key = row_h ^ ((_U64(now) << _U64(20))
@@ -215,10 +277,26 @@ class ArrayBackend:
 
     def take_matrix(self, spare, budget_rows, delta):
         """[B, d] optimistic per-step takes: min(spare, budget/δ)."""
+        self._tick("take_matrix")
         return np.minimum(spare, budget_rows / delta[:, None])
+
+    def take_reach(self, spare, budget_rows, delta):
+        """[B, d] cumulative reach of the optimistic takes:
+        ``cumsum(min(spare, budget/δ), axis=1)``.
+
+        The cumulative sum is a float reduction whose *bits* feed
+        admissions, so accelerated backends must reproduce NumPy's
+        left-to-right column order exactly (a sequential per-column
+        scan — bit-exact, unlike a tree-reduction ``cumsum``; see
+        docs/backends.md). Fusing it with the take avoids one full
+        [B, d] round-trip per evaluation batch."""
+        self._tick("take_reach")
+        return np.cumsum(np.minimum(spare, budget_rows / delta[:, None]),
+                         axis=1)
 
     def greedy_scores(self, sigma, reach, m_min, m_max):
         """(score[B], feas[B]) for ranked greedy admission."""
+        self._tick("greedy_scores")
         total = np.minimum(reach, m_max)
         return sigma * total, total >= m_min
 
@@ -227,6 +305,7 @@ class ArrayBackend:
         """Adopt the per-round fleet columns (delta/m_min/m_max/sigma/
         spare_ub/dom over the kept candidates). Accelerated backends
         move them device-resident here, once per round."""
+        self._tick("fleet_cols")
         return {k: np.ascontiguousarray(v) for k, v in cols.items()}
 
     def score_ub(self, cols, excess_col, dd):
@@ -236,6 +315,7 @@ class ArrayBackend:
         candidate can reach m_min and its domain has excess, else -inf
         (Alg. 1 lines 6 + 11, optimistically granting the whole budget).
         """
+        self._tick("score_ub")
         ex = excess_col[cols["dom"]]
         reach_ub = np.minimum(cols["spare_ub"] * dd, ex / cols["delta"])
         ok = (reach_ub >= cols["m_min"]) & (ex > 0)
@@ -261,6 +341,7 @@ class ArrayBackend:
         candidate (the tie-exact rule in ``_LazyGreedy._admit``).
         Requires M < number of finite ubs (so position M exists).
         """
+        self._tick("top_m")
         ub = np.asarray(ub)
         part = np.argpartition(-ub, M)
         bound = float(ub[part[M]])
@@ -274,6 +355,7 @@ class ArrayBackend:
         ``top_m`` / ``viable_positions`` / ``asnumpy``. Accelerated
         backends pad to their shape buckets (inert ``-inf``) and move
         the array device-resident; the reference is a host copy."""
+        self._tick("adopt_scores")
         return np.ascontiguousarray(np.asarray(ub, dtype=np.float64))
 
     # -- segment-domain reach evaluator ----------------------------------
@@ -295,6 +377,7 @@ class ArrayBackend:
         (point 3) keeps host-side so the tables are bit-identical
         everywhere.
         """
+        self._tick("reach_tables")
         ex = np.ascontiguousarray(np.asarray(r_excess, dtype=np.float64))
         P, H = ex.shape
         order = np.argsort(ex, axis=1, kind="stable")
@@ -326,6 +409,7 @@ class ArrayBackend:
         docs/backends.md). Padding-friendly: ``a == b`` or ``w == 0``
         contributes exactly 0.
         """
+        self._tick("segment_reach")
         vals, cnt, csum = tables["vals"], tables["cnt"], tables["csum"]
         dom = np.asarray(dom, dtype=np.int64)
         a = np.asarray(a, dtype=np.int64)
@@ -344,6 +428,102 @@ class ArrayBackend:
         gb = csumf[fb] + w * (b - cntf[fb])
         return gb - ga
 
+    # -- fused probe pipeline ---------------------------------------------
+    def reach_state(self, r_excess, seg, kept, noise_mult_ub=None):
+        """Adopt the per-round reach-evaluator state consumed by
+        :meth:`probe_scores`, once per ``select_clients`` call.
+
+        ``r_excess`` is the [P, H] per-domain excess forecast; ``seg``
+        the flat CSR segment columns over kept candidates
+        (``a``/``b``/``x``/``owner``/``dom``/``capd``); ``kept`` the
+        per-candidate columns (``delta``/``m_min``/``m_max``/``sigma``/
+        ``dom``); ``noise_mult_ub`` the per-lead [H] sup multiplicative
+        noise bound ν (or None for exact spares). Accelerated backends
+        move the prefix tables and segment columns device-resident here,
+        so each probe re-uploads only its per-duration thresholds.
+        """
+        self._tick("reach_state")
+        seg = {k: np.ascontiguousarray(v) for k, v in seg.items()}
+        kept = {k: np.ascontiguousarray(v) for k, v in kept.items()}
+        nu = None if noise_mult_ub is None else np.ascontiguousarray(
+            np.asarray(noise_mult_ub, dtype=np.float64))
+        return {
+            "tables": self.reach_tables(r_excess),
+            "seg": seg,
+            "kept": kept,
+            "nu": nu,
+            "dom_sort": reach_dom_sort(seg["dom"]),
+        }
+
+    def probe_segment_w(self, state, dd):
+        """(w[N], a[N], b[N], j[N]) — the per-segment thresholds, step
+        bounds clipped to the probed duration, and host breakpoint ranks
+        for a probe at duration ``dd``.
+
+        Per-window noise bound: segment *s* only overlaps the probed
+        window up to step ``min(b_s, dd)``, so its spare upper bound
+        needs only ``ν[min(b_s, dd) − 1]`` — the sup noise multiplier
+        over the leads it can actually occupy — rather than the global
+        ``ν[dd − 1]``. Any per-segment threshold yields a valid concave
+        upper bound (each segment's reach is evaluated independently),
+        so admissions are unchanged while far-future segments stop
+        inflating near-term probes (see docs/architecture.md).
+
+        Host in every backend: ``w`` feeds the host breakpoint rank
+        (integer comparisons) and must match the reference bits.
+        """
+        seg, nu = state["seg"], state["nu"]
+        a = np.minimum(seg["a"], dd)
+        b = np.minimum(seg["b"], dd)
+        nu_s = 1.0 if nu is None else nu[b - 1]
+        w = np.minimum(seg["x"] * nu_s, 1.0) * seg["capd"]
+        j = _reach_rank(state["tables"]["vals"], seg["dom"], w,
+                        state["dom_sort"])
+        return w, a, b, j
+
+    def probe_scores(self, state, dd, excess_col):
+        """(ub handle, n_viable) — reach-evaluator score upper bounds at
+        duration ``dd`` over the kept candidates.
+
+        Fuses the per-probe chain (segment thresholds → PWL reach
+        queries → per-candidate sums → viability → scores) behind one
+        op so accelerated backends can run the float-heavy middle as a
+        fixed small number of device dispatches against the resident
+        :meth:`reach_state`. The per-candidate segment sum and the
+        ``/δ·SLACK`` tail stay host-side (float reductions, parity
+        point 3): bits must equal this reference exactly.
+        """
+        self._tick("probe_scores")
+        seg, kept = state["seg"], state["kept"]
+        w, a, b, j = self.probe_segment_w(state, dd)
+        tables = state["tables"]
+        H1 = tables["cnt"].shape[1]
+        base = (seg["dom"] * H1 + j) * H1
+        fa = base + a
+        fb = base + b
+        cntf = tables["cnt"].reshape(-1)
+        csumf = tables["csum"].reshape(-1)
+        ga = csumf[fa] + w * (a - cntf[fa])
+        gb = csumf[fb] + w * (b - cntf[fb])
+        g = gb - ga
+        return self._probe_tail(state, dd, excess_col, g)
+
+    def _probe_tail(self, state, dd, excess_col, g):
+        """Host tail shared by every backend: per-candidate segment sums
+        → reach bound → viability → scores. ``np.bincount`` is the one
+        float reduction; its (CSR) order is part of the reference bits,
+        so no backend may reorder it."""
+        kept = state["kept"]
+        sums = np.bincount(state["seg"]["owner"], weights=g,
+                           minlength=kept["delta"].size)
+        reach_ub = sums / kept["delta"] * REACH_SLACK
+        ex = excess_col[kept["dom"]]
+        ok = (reach_ub >= kept["m_min"]) & (ex > 0)
+        ub = np.where(ok, kept["sigma"] * np.minimum(reach_ub,
+                                                     kept["m_max"]),
+                      -np.inf)
+        return ub, int(np.isfinite(ub).sum())
+
     # -- chunked admission ------------------------------------------------
     def margin_prefix_ok(self, drain, dom_sel, budgets):
         """[B] bool: cumulative pre-cap drains of each row's prefix stay
@@ -355,6 +535,13 @@ class ArrayBackend:
         under any summation order (see module docstring), which is what
         lets accelerated backends batch the scan over domains.
         """
+        self._tick("margin_prefix_ok")
+        return self._margin_prefix(drain, dom_sel, budgets)
+
+    def _margin_prefix(self, drain, dom_sel, budgets):
+        """Un-ticked margin-scan core: :meth:`admit_domains` fuses the
+        scan into its own single ledger entry, so it calls this instead
+        of the public op (which ticks ``margin_prefix_ok``)."""
         ok = np.empty(drain.shape[0], dtype=bool)
         for pi in np.unique(dom_sel):
             mask = dom_sel == pi
@@ -364,6 +551,36 @@ class ArrayBackend:
             else:
                 ok[mask] = False
         return ok
+
+    def admit_domains(self, spare, budgets, dom_sel, delta, m_min, m_max):
+        """(feas[B], ok[B], capped[B, d]) — one fused admission chunk
+        pass: optimistic takes, feasibility, overshoot capping, and the
+        per-domain margin prefix-check, in chunk order.
+
+        ``spare`` is the [B, d] spare block of the chunk rows,
+        ``budgets`` the [P, d] residual domain budgets, ``dom_sel``/
+        ``delta``/``m_min``/``m_max`` the per-row columns. Infeasible
+        rows contribute exactly-zero drain to the margin scan (adding
+        +0.0 preserves every prefix bit), so ``ok`` over the feasible
+        rows equals the reference's filtered-subset scan; ``ok`` at
+        infeasible rows is meaningless and must be ignored.
+
+        The take/cap math is elementwise (bit-portable); the row-wise
+        ``cumsum`` bits feed admissions, so accelerated backends scan it
+        sequentially per column like :meth:`take_reach`; the margin scan
+        is decision-safe (see :meth:`margin_prefix_ok`).
+        """
+        self._tick("admit_domains")
+        take = np.minimum(spare, budgets[dom_sel] / delta[:, None])
+        cum = np.cumsum(take, axis=1)
+        total = np.minimum(cum[:, -1], m_max)
+        feas = total >= m_min
+        overshoot = cum - m_max[:, None]
+        capped = np.where(overshoot > 0.0, np.maximum(take - overshoot, 0.0),
+                          take)
+        drain = np.where(feas[:, None], take * delta[:, None], 0.0)
+        ok = self._margin_prefix(drain, dom_sel, budgets)
+        return feas, ok, capped
 
     # -- misc -------------------------------------------------------------
     def asnumpy(self, x):

@@ -54,7 +54,6 @@ import scipy.sparse as sp
 from scipy.optimize import Bounds, LinearConstraint, milp
 
 from ..backend import get_backend
-from ..backend.base import REACH_SLACK, reach_dom_sort
 from .types import ClientRegistry, Selection
 
 
@@ -108,9 +107,8 @@ class _ProbeCache:
         self._inp = inp
         self.bk = get_backend(inp.backend)
         self.excess_cum = np.cumsum(inp.r_excess, axis=1)
-        self.reach_cum = np.cumsum(
-            self.bk.take_matrix(inp.m_spare, inp.r_excess[dom], delta),
-            axis=1)
+        self.reach_cum = self.bk.take_reach(inp.m_spare,
+                                            inp.r_excess[dom], delta)
         self._ub = None
         # greedy rank memo: rank depends on d only through the clamped
         # duration dd (reach_cum column), so probes at the same dd reuse
@@ -385,26 +383,19 @@ def _solve_greedy(inp: SelectionInputs, d: int, n: int, eligible: List[int],
     while rows.size and len(chosen) < n:
         nc = min(chunk_size, rows.size)
         r, dr = rows[:nc], drows[:nc]
-        take = cache.bk.take_matrix(inp.m_spare[srows[:nc], :d],
-                                    budgets[dr], delta[r])
-        cum = np.cumsum(take, axis=1)
-        total = np.minimum(cum[:, -1], m_max[r])
-        feas = total >= m_min[r]
+        # one fused backend pass: takes, feasibility, overshoot capping
+        # and the per-domain margin prefix-scan (decision-safe, vmapped
+        # under jax) — a single device dispatch per chunk
+        feas, ok_m, capped = cache.bk.admit_domains(
+            inp.m_spare[srows[:nc], :d], budgets, dr, delta[r],
+            m_min[r], m_max[r])
         if not feas.any():
             rows, drows, srows = rows[nc:], drows[nc:], srows[nc:]
             chunk_size *= 2  # unproductive pass: sweep faster
             continue
         keep = np.nonzero(feas)[0]
         r, dr = r[keep], dr[keep]
-        take, cum = take[keep], cum[keep]
-        overshoot = cum - m_max[r, None]
-        capped = np.where(overshoot > 0,
-                          np.maximum(take - overshoot, 0.0), take)
-        # per-domain cumulative pre-cap drains within the chunk; rows of a
-        # domain with ±ulp-negative budget residue degrade to sequential
-        # (backend op: decision-safe prefix scan, vmapped under jax)
-        drain = take * delta[r, None]
-        ok = cache.bk.margin_prefix_ok(drain, dr, budgets)
+        capped, ok = capped[keep], ok_m[keep]
         bad = np.nonzero(~ok)[0]
         npfx = int(bad[0]) if bad.size else r.size
         npfx = max(1, min(npfx, n - len(chosen)))
@@ -593,49 +584,40 @@ class _LazyGreedy:
         self._seg_x = np.asarray(ov["x_ub"], dtype=np.float64)[idx]
         owner = np.repeat(np.arange(k.size, dtype=np.int64), lens)
         kk = k[owner]
-        self._seg_owner = owner
-        self._seg_dom = self.dom[kk]
-        # energy threshold base: spare fraction → Wmin/step is ·cap·δ
-        self._seg_capd = self.spare_ub[kk] * self.delta[kk]
         nu = self.inp.noise_mult_ub
-        self._noise_ub = None if nu is None \
-            else np.asarray(nu, dtype=np.float64)
-        self._tables = self.bk.reach_tables(self.inp.r_excess[:, :self.H])
-        # the segment set is fixed for the round but queried once per
-        # probed duration: group the domain column and gather the kept
-        # fleet columns once
-        self._dom_sort = reach_dom_sort(self._seg_dom)
-        self._k_delta = self.delta[k]
-        self._k_m_min = self.m_min[k]
-        self._k_m_max = self.m_max[k]
-        self._k_sigma = self.sigma[k]
-        self._k_dom = self.dom[k]
+        # one backend op adopts the whole per-round evaluator state —
+        # tables, segment columns, kept fleet columns, noise bound —
+        # and (under jax) moves the probe-invariant pieces device-
+        # resident, so each probe ships only its per-dd thresholds
+        self._tables = self.bk.reach_state(
+            self.inp.r_excess[:, :self.H],
+            seg={"a": self._seg_a, "b": self._seg_b, "x": self._seg_x,
+                 "owner": owner, "dom": self.dom[kk],
+                 # energy threshold base: spare fraction → Wmin/step
+                 # is ·cap·δ
+                 "capd": self.spare_ub[kk] * self.delta[kk]},
+            kept={"delta": self.delta[k], "m_min": self.m_min[k],
+                  "m_max": self.m_max[k], "sigma": self.sigma[k],
+                  "dom": self.dom[k]},
+            noise_mult_ub=None if nu is None
+            else np.asarray(nu, dtype=np.float64))
 
     def _reach_scores(self, dd: int):
-        """Segment-reach score upper bounds at ``dd`` (host-assembled).
+        """Segment-reach score upper bounds at ``dd``.
 
-        Per candidate: ``Σ_s [G_p(min(b_s, dd), w_s) − G_p(min(a_s, dd),
-        w_s)] / δ`` with ``w_s = min(x_s·ν_dd, 1)·cap·δ`` — ν is
-        nondecreasing in lead, so ν at dd bounds every step of the
-        prefix. The backend returns bit-exact per-segment energies; the
-        per-candidate sum runs on the host (same code every backend) and
-        is inflated by REACH_SLACK, so the bound can never dip below the
-        true score it certifies (decision-safe; see backend.base)."""
-        nu = 1.0 if self._noise_ub is None else float(self._noise_ub[dd - 1])
-        a = np.minimum(self._seg_a, dd)
-        b = np.minimum(self._seg_b, dd)
-        w = np.minimum(self._seg_x * nu, 1.0) * self._seg_capd
-        g = self.bk.segment_reach(self._tables, self._seg_dom, a, b, w,
-                                  dom_sort=self._dom_sort)
-        k = self._kept
-        sums = np.bincount(self._seg_owner, weights=g, minlength=k.size)
-        reach_ub = sums / self._k_delta * REACH_SLACK
-        ex = self.excess_cum[:, dd - 1][self._k_dom]
-        ok = (reach_ub >= self._k_m_min) & (ex > 0)
-        ub = np.where(ok, self._k_sigma * np.minimum(reach_ub,
-                                                     self._k_m_max),
-                      -np.inf)
-        return ub, int(np.isfinite(ub).sum())
+        One backend op (``probe_scores``): per candidate
+        ``Σ_s [G_p(min(b_s, dd), w_s) − G_p(min(a_s, dd), w_s)] / δ``
+        with the per-window thresholds ``w_s = min(x_s·ν[min(b_s, dd)],
+        1)·cap·δ`` — each segment is priced with the sup noise
+        multiplier over the leads it can actually occupy, not the
+        global ν at dd (any per-segment threshold yields a valid
+        concave upper bound, so admissions are unchanged while
+        far-future segments stop inflating near-term probes). Bits are
+        the host reference's by contract; the bound is inflated by
+        REACH_SLACK, so it can never dip below the true score it
+        certifies (decision-safe; see backend.base)."""
+        return self.bk.probe_scores(self._tables, dd,
+                                    self.excess_cum[:, dd - 1])
 
     def _ub(self, dd: int):
         """(ub handle, n_viable) at duration ``dd`` — score upper bounds
@@ -692,10 +674,9 @@ class _LazyGreedy:
         else:
             spare = np.asarray(self.inp.spare_of(miss), dtype=float)
         got = spare.shape[1]           # legacy providers return full H
-        reach = np.cumsum(
-            self.bk.take_matrix(spare,
-                                self.inp.r_excess[self.dom[miss], :got],
-                                self.delta[miss]), axis=1)
+        reach = self.bk.take_reach(spare,
+                                   self.inp.r_excess[self.dom[miss], :got],
+                                   self.delta[miss])
         fresh = miss[self._eval_idx[miss] < 0]
         base = self.evaluated
         need = base + fresh.size
@@ -925,23 +906,19 @@ class _LazyGreedy:
             cj = cand[q]
             dj = self.dom[cj]
             delta_j = self.delta[cj]
-            take = self.bk.take_matrix(self._spare_buf[eids[q], :dd],
-                                       budgets[dj], delta_j)
-            cum = np.cumsum(take, axis=1)
-            total = np.minimum(cum[:, -1], self.m_max[cj])
-            ok_reach = total >= self.m_min[cj]
-            if not ok_reach.any():
+            # one fused backend pass (single device dispatch): takes,
+            # feasibility, overshoot capping and the decision-safe
+            # per-domain margin prefix-scan
+            feas, ok_m, capped = self.bk.admit_domains(
+                self._spare_buf[eids[q], :dd], budgets, dj, delta_j,
+                self.m_min[cj], self.m_max[cj])
+            if not feas.any():
                 queue = queue[nc:]
                 chunk *= 2      # unproductive pass: sweep faster
                 continue
-            keep = np.nonzero(ok_reach)[0]
+            keep = np.nonzero(feas)[0]
             q, cj, dj, delta_j = q[keep], cj[keep], dj[keep], delta_j[keep]
-            take, cum = take[keep], cum[keep]
-            overshoot = cum - self.m_max[cj][:, None]
-            capped = np.where(overshoot > 0,
-                              np.maximum(take - overshoot, 0.0), take)
-            drain = take * delta_j[:, None]
-            ok = self.bk.margin_prefix_ok(drain, dj, budgets)
+            capped, ok = capped[keep], ok_m[keep]
             bad = np.nonzero(~ok)[0]
             npfx = int(bad[0]) if bad.size else q.size
             npfx = max(1, min(npfx, self.n - len(chosen)))

@@ -327,9 +327,10 @@ class _SparseUtil:
         busy = self._busy0(rows)[:, None] ^ ((seg_tab & 1) == 1)
         levels = np.where(busy, 0.5 + 0.45 * u, 0.3 * u).astype(np.float32)
         # grid-heavy tail (level gather + noise + clip) runs on the
-        # configured array backend; it is bit-exact across backends
-        return self.bk.piece_grid(levels, slot, self._noise_fold, rows, a,
-                                  self._NOISE_AMP)
+        # configured array backend as one fused window op; it is
+        # bit-exact across backends
+        return self.bk.synth_window(levels, slot, self._noise_fold, rows, a,
+                                    self._NOISE_AMP)
 
     def forecast_noise(self, rows: Optional[np.ndarray], now: int,
                        horizon: int, std: np.ndarray) -> np.ndarray:
@@ -491,9 +492,10 @@ class ScenarioStore:
         self.seed = seed
         self.error = error                # realistic | none | no_load
         self.unlimited_domains = tuple(unlimited_domains)
-        # array backend for the sparse-util gather grids; dense chunk
-        # generators stay host RNG code (np.random streams have no
-        # counter-hash equivalent on an accelerator)
+        # array backend for the sparse-util gather grids and for the
+        # dense chunk generators' RNG streams (``chunk_rng`` — host-pinned
+        # PCG64 by contract in every backend, so dense goldens stay
+        # bit-identical regardless of ``RunSection(backend=...)``)
         self.backend = get_backend(backend)
         self._synth = synth
         self._forecast_cache: "OrderedDict[Tuple, Tuple]" = OrderedDict()
@@ -668,7 +670,7 @@ class ScenarioStore:
 
     # ---- chunk generators (pure in (seed, field, chunk, state)) --------
     def _rng(self, salt: int, i: int) -> np.random.Generator:
-        return np.random.default_rng((self.seed & 0xFFFFFFFF, salt, i))
+        return self.backend.chunk_rng(self.seed, salt, i)
 
     def _excess_chunk(self, i: int, z_state: np.ndarray):
         """Solar excess [P, n]: diurnal curve × AR(1) cloud attenuation,

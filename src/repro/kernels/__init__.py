@@ -1,10 +1,14 @@
-"""Pallas TPU kernels for the clients' compute hot-spots.
+"""Pallas kernels for the repo's compute hot-spots.
 
 FedZero itself is a scheduling contribution (no kernel in the paper), but
 the client training workloads it schedules have three hot loops that we
 implement TPU-native: flash attention (+sliding window), the MoE grouped
 GEMM, and the RWKV6 chunked scan. Each has a pure-jnp oracle in ref.py and
-is validated in interpret mode over shape/dtype sweeps.
+is validated in interpret mode over shape/dtype sweeps. The scheduler
+side contributes the counter-hash synthesis kernels
+(:mod:`.counter_hash`: piece-grid window + forecast exponent), validated
+in interpret mode against the NumPy counter-hash reference bit-for-bit
+and selected via ``backend="pallas"`` in the backend registry.
 
 jax-version compat policy: Pallas renamed ``pltpu.TPUCompilerParams`` to
 ``pltpu.CompilerParams`` across jax releases. Kernels must not reference
@@ -33,7 +37,8 @@ def compiler_params(**kwargs):
 
 
 from . import ops, ref
-from .ops import flash_attention, moe_gemm, rwkv_scan
+from .ops import (flash_attention, forecast_z, moe_gemm, piece_window,
+                  rwkv_scan)
 
 __all__ = ["compiler_params", "ops", "ref", "flash_attention", "moe_gemm",
-           "rwkv_scan"]
+           "rwkv_scan", "piece_window", "forecast_z"]

@@ -11,6 +11,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .counter_hash import forecast_z as _forecast_z
+from .counter_hash import piece_window as _piece_window
 from .flash_attention import flash_attention as _flash
 from .moe_gemm import moe_gemm as _moe_gemm
 from .rwkv_scan import rwkv_scan as _rwkv_scan
@@ -18,6 +20,12 @@ from .rwkv_scan import rwkv_scan as _rwkv_scan
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _hash_interpret(flag):
+    """The counter-hash kernels mix uint64, which has no native TPU
+    lowering yet — they always interpret unless explicitly forced."""
+    return True if flag is None else flag
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
@@ -43,3 +51,22 @@ def moe_gemm(x, w, block_c: int = 128, block_f: int = 128, block_d: int = 128,
 def rwkv_scan(r, k, v, w, u, chunk: int = 32, interpret: bool | None = None):
     interpret = _default_interpret() if interpret is None else interpret
     return _rwkv_scan(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+# the counter-hash synthesis kernels trace uint64/float64 — call under
+# jax.experimental.enable_x64 (the pallas backend and the parity tests do)
+@functools.partial(jax.jit, static_argnames=("block_r", "block_w",
+                                             "interpret"))
+def piece_window(levels, slot, fold, rows, t0, amp, block_r: int = 256,
+                 block_w: int = 256, interpret: bool | None = None):
+    return _piece_window(levels, slot, fold, rows, t0, amp,
+                         block_r=block_r, block_w=block_w,
+                         interpret=_hash_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_w",
+                                             "interpret"))
+def forecast_z(fold, rows, now, std, block_r: int = 256,
+               block_w: int = 256, interpret: bool | None = None):
+    return _forecast_z(fold, rows, now, std, block_r=block_r,
+                       block_w=block_w, interpret=_hash_interpret(interpret))

@@ -1,10 +1,35 @@
-"""Pure-jnp oracles for every Pallas kernel (ground truth in tests)."""
+"""Oracles for every Pallas kernel (ground truth in tests).
+
+Training-workload kernels get pure-jnp oracles. The scheduler-facing
+counter-hash kernels are different: their ground truth is the **NumPy
+counter-hash reference** in :mod:`repro.backend.base` — the bit-exactness
+contract every backend is pinned against — so their oracles delegate to
+it and return host arrays.
+"""
 from __future__ import annotations
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+
+
+def piece_window_ref(levels, slot, fold, rows, t0, amp) -> np.ndarray:
+    """NumPy counter-hash reference for :func:`ops.piece_window`."""
+    from ..backend.numpy_backend import NumpyBackend
+    return NumpyBackend().synth_window(
+        np.array(levels, dtype=np.float32), np.asarray(slot, np.int64),
+        fold, np.asarray(rows, np.uint64), int(t0), amp)
+
+
+def forecast_z_ref(fold, rows, now, std) -> np.ndarray:
+    """NumPy counter-hash reference for :func:`ops.forecast_z`."""
+    from ..backend.numpy_backend import NumpyBackend
+    std = np.asarray(std, np.float32)
+    return NumpyBackend().forecast_noise_z(
+        fold, np.asarray(rows, np.uint64), int(now), std.shape[0], std)
 
 
 def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,

@@ -1,0 +1,183 @@
+"""Dispatch-count regression: the fused JAX ops' per-call device budget.
+
+Every backend op ticks ``ArrayBackend._tick`` once per dispatch (host
+reference: one per op call; JAX backend: one per device executable
+launched), so ``dispatch_counts`` is an exact ledger. These tests pin
+the fused budget the tentpole bought — CI fails if a tracked op's
+per-call (or the probe path's per-probe) dispatch count rises:
+
+* ``synth_window`` / ``forecast_noise_z`` / ``take_reach`` /
+  ``admit_domains``: **1** dispatch per call on the device path;
+* ``probe_scores``: **2** dispatches per probe against the
+  device-resident reach state (+1 when the probe's ``top_m`` runs →
+  ≤ 3 per probe, vs ~20 before the fusion).
+
+Budgets are exact equalities on purpose: a fused op that silently
+splits into more executables is a perf regression even when its bits
+stay correct.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.backend import get_backend
+from repro.backend import jax_backend
+from repro.backend.jax_backend import _DEVICE_MIN_ROWS
+from repro.core.experiment import (ExperimentConfig, FleetSection,
+                                   RunSection, ScenarioSection,
+                                   StrategySection, run_experiment)
+
+JX = get_backend("jax")
+
+
+@pytest.fixture
+def force_device(monkeypatch):
+    """Disable the measured CPU host-routing so the per-call budgets
+    below pin the *device* kernels even on CPU CI."""
+    monkeypatch.setattr(jax_backend, "_CPU_HOST_OPS", frozenset())
+
+
+def _counts_of(fn):
+    JX.reset_dispatch_counts()
+    fn()
+    return dict(JX.dispatch_counts)
+
+
+def test_synth_and_forecast_windows_one_dispatch(rng):
+    R, S, W = 4096, 6, 32
+    levels = rng.random((R, S), dtype=np.float32)
+    slot = rng.integers(0, S, (R, W)).astype(np.int64)
+    rows = np.arange(R, dtype=np.uint64)
+    fold = np.uint64(7)
+    c = _counts_of(lambda: JX.synth_window(levels, slot, fold, rows,
+                                           100, 0.1732))
+    assert c == {"synth_window": 1}
+
+    std = np.full(W, 0.07, dtype=np.float32)
+    c = _counts_of(lambda: JX.forecast_noise_z(fold, rows, 9, W, std))
+    assert c == {"forecast_noise_z": 1}
+
+
+def test_take_reach_and_admit_one_dispatch(rng, force_device):
+    B, W, P = 512, 60, 8
+    assert B * W >= _DEVICE_MIN_ROWS
+    spare = rng.random((B, W))
+    budgets = rng.random((P, W)) * 50
+    dom_sel = rng.integers(0, P, B)
+    delta = rng.random(B) + 0.5
+    excess_rows = rng.random((B, W)) * 50
+    c = _counts_of(lambda: JX.take_reach(spare, excess_rows, delta))
+    assert c == {"take_reach": 1}
+
+    m_min, m_max = np.full(B, 0.5), np.full(B, 40.0)
+    c = _counts_of(lambda: JX.admit_domains(spare, budgets, dom_sel,
+                                            delta, m_min, m_max))
+    # the margin prefix-scan is fused inside — it must NOT tick separately
+    assert c == {"admit_domains": 1}
+
+
+def test_host_route_is_bit_identical_and_keeps_fused_ledger(rng):
+    """The measured placement policy (docs/backends.md) may route the
+    admission / top-k ops to the host reference on CPU-only platforms.
+    Whichever side runs, the bits and the ledger shape are invariant:
+    one ``admit_domains`` entry per chunk pass (no separate margin
+    tick), and identical outputs on both routes."""
+    B, W, P = 512, 60, 8
+    spare = rng.random((B, W))
+    budgets = rng.random((P, W)) * 50
+    dom_sel = rng.integers(0, P, B)
+    delta = rng.random(B) + 0.5
+    m_min, m_max = np.full(B, 0.5), np.full(B, 40.0)
+
+    args = (spare, budgets, dom_sel, delta, m_min, m_max)
+    old = jax_backend._CPU_HOST_OPS
+    try:
+        jax_backend._CPU_HOST_OPS = frozenset(old | {"admit_domains"})
+        JX.reset_dispatch_counts()
+        host = JX.admit_domains(*args)
+        assert dict(JX.dispatch_counts) == {"admit_domains": 1}
+        jax_backend._CPU_HOST_OPS = frozenset()
+        dev = JX.admit_domains(*args)
+    finally:
+        jax_backend._CPU_HOST_OPS = old
+    for h, d in zip(host, dev):
+        np.testing.assert_array_equal(h, d)
+
+    # non-power-of-two size: the device handle carries -inf shape pads,
+    # which both routes must keep out of the selection
+    ub = np.where(rng.random(8000) < 0.1, -np.inf, rng.random(8000) * 50)
+    try:
+        jax_backend._CPU_HOST_OPS = frozenset()
+        handle = JX.adopt_scores(ub)      # device-resident padded handle
+        i_dev, b_dev = JX.top_m(handle, 128)
+        jax_backend._CPU_HOST_OPS = frozenset({"top_m"})
+        i_host, b_host = JX.top_m(handle, 128)
+    finally:
+        jax_backend._CPU_HOST_OPS = old
+    assert b_dev == b_host
+    np.testing.assert_array_equal(np.sort(np.asarray(i_dev)),
+                                  np.sort(np.asarray(i_host)))
+
+
+def _device_reach_state(rng, N=4096, K=512, P=8, H=60):
+    owner = rng.integers(0, K, N)
+    a = rng.integers(0, H - 1, N)
+    b = a + rng.integers(1, H, N).clip(max=H - a)
+    seg = {"a": a.astype(np.int64), "b": b.astype(np.int64),
+           "x": rng.random(N), "owner": owner.astype(np.int64),
+           "dom": rng.integers(0, P, N).astype(np.int64),
+           "capd": rng.random(N) * 4}
+    kept = {"delta": rng.random(K) + 0.5, "m_min": np.full(K, 0.1),
+            "m_max": np.full(K, 50.0), "sigma": rng.random(K),
+            "dom": rng.integers(0, P, K).astype(np.int64)}
+    r_excess = rng.random((P, H)) * 100
+    state = JX.reach_state(r_excess, seg, kept,
+                           noise_mult_ub=1.0 + 0.1 * np.arange(H) / H)
+    return state, P
+
+
+def test_probe_scores_two_dispatches_per_probe(rng, force_device):
+    state, P = _device_reach_state(rng)
+    assert "_dev" in state, "probe path must be device-resident"
+    excess_col = rng.random(P) * 300
+    JX.reset_dispatch_counts()
+    for dd in (8, 24, 60):
+        JX.probe_scores(state, dd, excess_col)
+    assert dict(JX.dispatch_counts) == {"probe_scores": 6}
+
+
+def test_sparse_select_probe_budget_end_to_end(monkeypatch):
+    """Whole-run regression on the acceptance path: a sparse
+    exact-uncapped round on ``backend="jax"`` must average ≤ 3 device
+    dispatches per reach probe (2 fused probe kernels + at most one
+    ``top_m``), and the legacy per-probe op chain must stay gone."""
+    probes = {"n": 0}
+    orig = type(JX).probe_scores
+
+    def counting(self, state, dd, excess_col):
+        probes["n"] += 1
+        return orig(self, state, dd, excess_col)
+
+    monkeypatch.setattr(type(JX), "probe_scores", counting)
+    JX.reset_dispatch_counts()
+    cfg = ExperimentConfig(
+        scenario=ScenarioSection(util_mode="sparse", days=1, seed=0),
+        fleet=FleetSection(n_clients=20_000, seed=0),
+        strategy=StrategySection(n=10, d_max=60, seed=0,
+                                 options={"solver": "greedy"}),
+        run=RunSection(max_rounds=2, backend="jax", exact_uncapped=True))
+    sims = []
+    run_experiment(cfg, sim_out=sims)
+    assert sims[0].results, "no rounds ran"
+    c = dict(JX.dispatch_counts)
+
+    assert probes["n"] > 0
+    assert c["probe_scores"] == 2 * probes["n"]
+    assert c.get("top_m", 0) <= probes["n"]
+    per_probe = (c["probe_scores"] + c.get("top_m", 0)) / probes["n"]
+    assert per_probe <= 3.0
+    # ops the fused probe replaced may not reappear on the probe path
+    assert c.get("segment_reach", 0) == 0
+    assert c.get("score_ub", 0) == 0
+    assert c.get("cell_noise", 0) == 0

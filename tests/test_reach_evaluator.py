@@ -246,3 +246,85 @@ def test_noise_mult_ub_is_one_without_forecast_error():
                        util_mode="sparse", error="none")
     ov = sc.spare_ub_overlay(100, 60)
     np.testing.assert_array_equal(ov["noise_mult_ub"], np.ones(60))
+
+
+# ---------------------------------------------------------------------------
+# 5. per-window noise bound: tighter probes, identical admissions
+
+
+def _ramp_state(seed, nu, N=600, K=64, P=4, H=60):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, H - 1, N)
+    b = a + np.minimum(rng.integers(1, H, N), H - a)
+    seg = {"a": a.astype(np.int64), "b": b.astype(np.int64),
+           "x": rng.random(N), "owner": rng.integers(0, K, N),
+           "dom": rng.integers(0, P, N).astype(np.int64),
+           "capd": rng.random(N) * 3}
+    kept = {"delta": rng.random(K) + 0.5, "m_min": np.full(K, 0.1),
+            "m_max": np.full(K, 40.0), "sigma": rng.random(K),
+            "dom": rng.integers(0, P, K).astype(np.int64)}
+    return NP.reach_state(rng.random((P, H)) * 60, seg, kept,
+                          noise_mult_ub=nu), P
+
+
+def test_per_window_noise_bound_is_valid_and_tighter():
+    """probe_segment_w uses ν[min(b_s, dd) − 1] per segment. Against the
+    old global sup ν[dd − 1] (recovered exactly by passing a constant ν
+    array at that value) the tight bound must stay a valid upper bound
+    — never above the sup bound — and strictly prune somewhere when ν
+    ramps and segments end early."""
+    H, dd = 60, 48
+    nu = 1.0 + 0.5 * np.arange(1, H + 1) / H          # nondecreasing ramp
+    rng = np.random.default_rng(3)
+    state, P = _ramp_state(3, nu)
+    state_sup, _ = _ramp_state(3, np.full(H, nu[dd - 1]))
+    excess_col = rng.random(P) * 200
+    ub_tight, n_tight = NP.probe_scores(state, dd, excess_col)
+    ub_sup, n_sup = NP.probe_scores(state_sup, dd, excess_col)
+    fin = np.isfinite(ub_sup)
+    assert (ub_tight[fin] <= ub_sup[fin] + 1e-12).all()
+    assert n_tight <= n_sup
+    assert (ub_tight[fin] < ub_sup[fin] - 1e-12).any(), \
+        "ramped ν with early-ending segments must tighten some bound"
+
+
+def test_per_window_noise_bound_admissions_unchanged(monkeypatch):
+    """Pin: tightening the probe bound changes NO admission — the lazy
+    walk re-verifies every adopted candidate exactly, so any valid upper
+    bound yields the same selections. Run the sparse exact-uncapped
+    scenario with the tight per-window bound and with the old global sup
+    bound force-restored, and compare round for round."""
+    from repro.backend.base import ArrayBackend, _reach_rank
+    from repro.core.experiment import (ExperimentConfig, FleetSection,
+                                       RunSection, ScenarioSection,
+                                       StrategySection, run_experiment)
+
+    def run():
+        cfg = ExperimentConfig(
+            scenario=ScenarioSection(util_mode="sparse", days=1, seed=0),
+            fleet=FleetSection(n_clients=20_000, seed=0),
+            strategy=StrategySection(n=10, d_max=60, seed=0,
+                                     options={"solver": "greedy"}),
+            run=RunSection(max_rounds=2, backend="numpy",
+                           exact_uncapped=True))
+        sims = []
+        run_experiment(cfg, sim_out=sims)
+        return [(r.round_idx, r.start_step, r.duration,
+                 r.participants.tolist(), r.contributors.tolist())
+                for r in sims[0].results]
+
+    tight = run()
+
+    def sup_probe_segment_w(self, state, dd):   # the pre-PR-8 bound
+        seg, nu = state["seg"], state["nu"]
+        a = np.minimum(seg["a"], dd)
+        b = np.minimum(seg["b"], dd)
+        nu_s = 1.0 if nu is None else nu[dd - 1]
+        w = np.minimum(seg["x"] * nu_s, 1.0) * seg["capd"]
+        j = _reach_rank(state["tables"]["vals"], seg["dom"], w,
+                        state["dom_sort"])
+        return w, a, b, j
+
+    monkeypatch.setattr(ArrayBackend, "probe_segment_w",
+                        sup_probe_segment_w)
+    assert run() == tight

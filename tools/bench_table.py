@@ -27,23 +27,31 @@ def _load(name):
 def e2e_table() -> str:
     payload = _load("BENCH_e2e_simulation.json")
     lines = [
-        "| Config | Clients | Simulated | Wall | Peak RSS | Rounds | Gates |",
-        "|---|---|---|---|---|---|---|",
+        "| Config | Clients | Simulated | Wall | ms/round | Peak RSS "
+        "| Rounds | Gates |",
+        "|---|---|---|---|---|---|---|---|",
     ]
     for key, row in payload["configs"].items():
         if row.get("kind") == "registry":
             sim = "registry build"
-            rounds = "—"
+            rounds = mspr = "—"
         else:
             d = row["sim_days"]
             sim = f"{d} day{'s' if d != 1 else ''}" \
                   + (" (sparse)" if row.get("util_mode") == "sparse" else "")
+            if row.get("backend", "numpy") != "numpy":
+                sim += f", `{row['backend']}`"
             rounds = str(row["rounds"])
+            mspr = f"{row['ms_per_round']:.0f}" \
+                if row.get("ms_per_round") else "—"
+            ratio = row.get("ms_per_round_vs_numpy")
+            if ratio:
+                mspr += f" ({ratio:.2f}× numpy)"
         rss = row.get("peak_rss_mb")
         rss = f"{rss/1024:.2f} GB" if rss == rss else "n/a"
         lines.append(
             f"| `{key}` | {row['n_clients']:,} | {sim} "
-            f"| {row['wall_s']:.1f} s | {rss} | {rounds} "
+            f"| {row['wall_s']:.1f} s | {mspr} | {rss} | {rounds} "
             f"| {'pass' if row.get('ok') else 'FAIL'} |")
     return "\n".join(lines)
 
