@@ -1,7 +1,7 @@
 # Developer entry points. Tier-1 verify == `make test`.
 PYTHON ?= python
 
-.PHONY: test test-quick bench-scalability bench-e2e docs-check
+.PHONY: test test-quick bench bench-scalability bench-e2e bench-service docs-check
 
 # full tier-1 suite (what CI and the driver run)
 test:
@@ -18,6 +18,14 @@ bench-scalability:
 # fleet-scale end-to-end simulations (10k/100k/1M) -> BENCH_e2e_simulation.json
 bench-e2e:
 	$(PYTHON) benchmarks/e2e_simulation.py
+
+# always-on service under churn (decisions/sec, p99) -> BENCH_service.json
+bench-service:
+	$(PYTHON) benchmarks/service_load.py
+
+# every gated benchmark, then refresh the README tables
+bench: bench-scalability bench-e2e bench-service
+	$(PYTHON) tools/bench_table.py --write
 
 # executable docs: run every fenced python snippet in docs/*.md + README.md
 # and validate intra-repo markdown links

@@ -1,0 +1,281 @@
+"""Always-on scheduling service under churn (docs/service.md).
+
+Unlike ``benchmarks/e2e_simulation.py`` — which runs the *batch* FedZero
+loop (one selection per round attempt, clock owned by the loop) — this
+drives the :mod:`repro.service` subsystem the way a deployment would:
+a live :class:`SchedulerService` over a registered fleet, a synthetic
+arrival/departure trace (``churn``·C departures + as many arrivals per
+virtual minute), and a mixed request stream of read-only ``quote()``
+pricings and committing ``admit()`` calls against the moving fleet.
+Every priced request — quoted or committed — is one *admission
+decision*; the gates are on sustained decision throughput and tail
+latency:
+
+* ``10k_service`` — 10k clients; the smoke row. Everything is
+  milliseconds at this size, so the budgets are the same as the 1M
+  row's (the point is that the harness and gates run in CI quickly);
+* ``1m_service`` — the headline row: **1M clients**, sparse-activity
+  util model, uncapped lazy greedy pricing, **1 %/step fleet churn**.
+  Per virtual minute the service rebuilds pricing state once (the
+  clock tick retires the previous step's engine), answers one
+  committing admission and a request-rate stream of quotes off the
+  admission cache's reuse ladder + result memo. Budgets:
+  ``decisions_per_sec >= 50`` sustained and ``p99_ms < 500`` — the
+  slow samples (the once-per-step from-scratch rebuild at ~2-3 s) must
+  stay under 1 % of the stream, which they do because every other
+  request is answered incrementally.
+
+The workload mix is recorded in each row (``admits_per_step`` /
+``quotes_per_step``) — the claim is explicitly "N decisions/sec at this
+mix", not "N from-scratch selections/sec": a from-scratch 1M-candidate
+Algorithm 1 walk is hundreds of milliseconds and the batch benchmark
+already measures it. What this benchmark pins is that the *service*
+layer amortizes that cost across the request stream without giving up
+bit-identical admissions (parity pinned by tests/test_service.py).
+
+Each configuration runs in its own subprocess (attributable peak RSS).
+Emits ``BENCH_service.json`` at the repo root; CI runs the benchmark on
+every push and ``--check`` verifies the committed JSON matches this
+script's schema/configs with passing gates.
+
+Usage:
+    python benchmarks/service_load.py [--quick] [--check [PATH]]
+    python benchmarks/service_load.py --single 1m_service    (internal)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_service.json")
+
+SCHEMA = 1
+CONFIGS = {
+    "10k_service": {"clients": 10_000, "steps": 30, "churn": 0.01,
+                    "admits_per_step": 2, "quotes_per_step": 50,
+                    "budget_decisions_per_sec": 50.0,
+                    "budget_p99_ms": 500.0, "budget_rss_mb": 1024.0},
+    "1m_service": {"clients": 1_000_000, "steps": 15, "churn": 0.01,
+                   "admits_per_step": 1, "quotes_per_step": 250,
+                   "budget_decisions_per_sec": 50.0,
+                   "budget_p99_ms": 500.0, "budget_rss_mb": 2048.0},
+}
+# the clock offset the measured window starts at: daytime in the
+# synthesized global scenario (t=0 is night — nothing is admissible)
+WARMUP_STEPS = 240
+
+
+def _peak_rss_mb() -> float:
+    """Process-lifetime peak RSS in MB; NaN where unsupported (Windows)."""
+    try:
+        import resource
+    except ImportError:
+        return float("nan")
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    # ru_maxrss is KiB on Linux but bytes on macOS
+    return peak / (1 << 20) if sys.platform == "darwin" else peak / 1024.0
+
+
+def run_service_load(clients: int, steps: int, churn: float,
+                     admits_per_step: int, quotes_per_step: int,
+                     n: int = 10, d_max: int = 30, seed: int = 0,
+                     solver: str = "greedy", util_mode: str = "sparse",
+                     backend: str = "numpy"):
+    from repro.core import (ExperimentConfig, FleetSection, RunSection,
+                            ScenarioSection, ServiceSection, StrategySection)
+    from repro.service import build_service
+    from repro.service.engine import run_synthetic
+
+    cfg = ExperimentConfig(
+        scenario=ScenarioSection(name="global", days=1, seed=seed,
+                                 util_mode=util_mode),
+        fleet=FleetSection(n_clients=clients, seed=seed),
+        strategy=StrategySection(name="fedzero", n=n, d_max=d_max,
+                                 seed=seed, options={"solver": solver}),
+        run=RunSection(backend=backend),
+        service=ServiceSection(seed=seed, record_log=False))
+
+    t0 = time.perf_counter()
+    svc = build_service(cfg, trainer=None)
+    t_setup = time.perf_counter() - t0
+
+    # advance to daytime and absorb the one-time cold costs (scenario
+    # chunk synthesis, first input gather) outside the measured window
+    t0 = time.perf_counter()
+    svc.advance(WARMUP_STEPS)
+    svc.admit()
+    t_warmup = time.perf_counter() - t0
+
+    svc.metrics.reset()
+    t0 = time.perf_counter()
+    snap = run_synthetic(svc, steps=steps, churn=churn,
+                         admits_per_step=admits_per_step,
+                         quotes_per_step=quotes_per_step, seed=seed + 1)
+    wall = time.perf_counter() - t0
+
+    return {
+        "n_clients": clients,
+        "steps": steps,
+        "churn": churn,
+        "admits_per_step": admits_per_step,
+        "quotes_per_step": quotes_per_step,
+        "n_per_round": n,
+        "d_max": d_max,
+        "solver": solver,
+        "util_mode": util_mode,
+        "backend": backend,
+        "setup_s": t_setup,
+        "warmup_s": t_warmup,
+        "wall_s": wall,
+        "peak_rss_mb": _peak_rss_mb(),
+        "decisions": snap["admit_requests"] + snap["quote_requests"],
+        "decisions_per_sec": snap["decisions_per_sec"],
+        "p50_ms": snap["p50_ms"],
+        "p99_ms": snap["p99_ms"],
+        "max_ms": snap["max_ms"],
+        "admitted": snap["admitted"],
+        "rejected": snap["rejected"],
+        "engine_builds": snap["engine_builds"],
+        "engine_reuses": snap["engine_reuses"],
+        "engine_memo_hits": snap["engine_memo_hits"],
+        "engine_deactivations": snap["engine_deactivations"],
+        "engine_compactions": snap["engine_compactions"],
+    }
+
+
+def _evaluate(key: str, row: dict) -> dict:
+    cfg = CONFIGS[key]
+    row["within_decision_rate"] = bool(
+        row["decisions_per_sec"] >= cfg["budget_decisions_per_sec"])
+    p99 = row["p99_ms"]
+    # NaN (no samples) must fail, not pass: compare inverted
+    row["within_p99_budget"] = bool(p99 < cfg["budget_p99_ms"])
+    rss = row["peak_rss_mb"]
+    # NaN = platform cannot measure RSS; only CI's Linux gate enforces
+    row["within_rss_budget"] = bool(rss < cfg["budget_rss_mb"]) \
+        if rss == rss else True
+    # a service that rejects every request would have a great p99
+    row["within_admission_floor"] = bool(row["admitted"] > 0)
+    row["ok"] = all(v for k, v in row.items() if k.startswith("within_"))
+    return row
+
+
+def _run_single(key: str) -> dict:
+    cfg = CONFIGS[key]
+    row = run_service_load(cfg["clients"], cfg["steps"], cfg["churn"],
+                           cfg["admits_per_step"], cfg["quotes_per_step"])
+    return _evaluate(key, row)
+
+
+def check_committed(path: str) -> int:
+    """Exit code 0 iff the committed JSON matches this script's schema and
+    configuration set with passing gates — the CI staleness gate."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[service --check] cannot read {path}: {e}")
+        return 1
+    if payload.get("schema") != SCHEMA:
+        print(f"[service --check] stale schema {payload.get('schema')} "
+              f"!= {SCHEMA}")
+        return 1
+    configs = payload.get("configs", {})
+    if set(configs) != set(CONFIGS):
+        print(f"[service --check] stale config set {sorted(configs)} != "
+              f"{sorted(CONFIGS)}")
+        return 1
+    for key, cfg in CONFIGS.items():
+        row = configs[key]
+        for field in ("clients", "steps", "churn", "admits_per_step",
+                      "quotes_per_step"):
+            # the JSON rows use "n_clients" where CONFIGS uses "clients"
+            got = row.get("n_clients" if field == "clients" else field)
+            if got != cfg[field]:
+                print(f"[service --check] {key}.{field}: {got} != "
+                      f"{cfg[field]}")
+                return 1
+        if not row.get("ok"):
+            print(f"[service --check] {key} recorded as failing its gates")
+            return 1
+        # re-derive the headline gates instead of trusting the flags
+        if not (isinstance(row.get("decisions_per_sec"), (int, float))
+                and row["decisions_per_sec"]
+                >= cfg["budget_decisions_per_sec"]):
+            print(f"[service --check] {key}.decisions_per_sec="
+                  f"{row.get('decisions_per_sec')!r} below "
+                  f"{cfg['budget_decisions_per_sec']}")
+            return 1
+        if not (isinstance(row.get("p99_ms"), (int, float))
+                and row["p99_ms"] < cfg["budget_p99_ms"]):
+            print(f"[service --check] {key}.p99_ms={row.get('p99_ms')!r} "
+                  f"not under {cfg['budget_p99_ms']}")
+            return 1
+    print(f"[service --check] {path} is fresh")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small in-process run for smoke-testing the harness")
+    ap.add_argument("--single", metavar="KEY",
+                    help="run one configuration and print its JSON row")
+    ap.add_argument("--check", nargs="?", const=OUT_PATH, metavar="PATH",
+                    help="validate a committed JSON against this script")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+
+    if args.check:
+        sys.exit(check_committed(args.check))
+
+    if args.single:
+        print(json.dumps(_run_single(args.single), default=float))
+        return
+
+    if args.quick:
+        row = run_service_load(2000, steps=10, churn=0.01,
+                               admits_per_step=2, quotes_per_step=20)
+        print(f"[service quick] decisions={row['decisions']} "
+              f"rate={row['decisions_per_sec']:.0f}/s "
+              f"p99={row['p99_ms']:.1f}ms admitted={row['admitted']}")
+        if not row["admitted"]:
+            sys.exit(1)
+        return
+
+    payload = {"schema": SCHEMA, "configs": {}}
+    failed = False
+    for key in CONFIGS:
+        # each configuration in a fresh subprocess: ru_maxrss measures it
+        # alone, and a blown heap in one run cannot mask another's
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__), "--single", key],
+            capture_output=True, text=True)
+        if proc.returncode != 0:
+            print(f"[service] {key} FAILED:\n{proc.stderr[-2000:]}")
+            failed = True
+            continue
+        row = json.loads(proc.stdout.strip().splitlines()[-1])
+        payload["configs"][key] = row
+        print(f"[service] {key}: C={row['n_clients']}  "
+              f"decisions={row['decisions']}  "
+              f"rate={row['decisions_per_sec']:.0f}/s  "
+              f"p50={row['p50_ms']:.1f}ms p99={row['p99_ms']:.1f}ms  "
+              f"rss={row['peak_rss_mb']:.0f}MB  ok={row['ok']}")
+        failed = failed or not row["ok"]
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    print(f"wrote {os.path.abspath(args.out)}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,12 +2,16 @@
 scenarios (paper §5.2, Figure 5) — one declarative sweep over strategies
 sharing a single lazily-synthesized ScenarioStore.
 
+Run from a checkout (either invocation works; _bootstrap covers the
+missing PYTHONPATH):
+
     PYTHONPATH=src python examples/fedzero_simulation.py [--days 2]
         [--strategies fedzero,random_1.3n,oort_1.3n] [--scenario global]
+    python examples/fedzero_simulation.py
 """
 import argparse
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import _bootstrap  # noqa: F401  (repo-checkout sys.path setup)
 
 from repro.core import (ExperimentConfig, FleetSection, RunSection,
                         ScenarioSection, StrategySection, TrainerSection,

@@ -1,10 +1,13 @@
 """FedZero quickstart: schedule a federated training on renewable excess
 energy — one declarative config, one call.
 
+Run from a checkout (either invocation works; _bootstrap covers the
+missing PYTHONPATH):
+
     PYTHONPATH=src python examples/quickstart.py
+    python examples/quickstart.py
 """
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import _bootstrap  # noqa: F401  (repo-checkout sys.path setup)
 
 from repro.core import (ExperimentConfig, FleetSection, RunSection,
                         ScenarioSection, StrategySection, TrainerSection,

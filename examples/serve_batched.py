@@ -1,16 +1,23 @@
-"""Batched serving demo on the assigned architectures: prefill a batch of
-ragged prompts, then greedy-decode with the KV cache (ring buffer for
-sliding-window archs, recurrent state for RWKV6/Hymba).
+"""Batched **LLM inference** demo (prefill + greedy decode) on the
+assigned model architectures — ragged prompts left-padded into a batch,
+KV cache as a ring buffer for sliding-window archs / recurrent state for
+RWKV6/Hymba. This is a *model-serving* example; it is **not** the
+FedZero scheduler service — the always-on scheduling driver is
+``examples/serve_scheduler.py`` (package: :mod:`repro.service`).
+
+Run from a checkout (either invocation works; _bootstrap covers the
+missing PYTHONPATH):
 
     PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-1.6b
-    PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x22b
+    python examples/serve_batched.py --arch mixtral-8x22b
 
 Uses the reduced configs so it runs on CPU; the same decode_step lowers at
 full scale in the multi-pod dry-run (decode_32k / long_500k shapes).
 """
 import argparse
-import sys, os, time
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import time
+
+import _bootstrap  # noqa: F401  (repo-checkout sys.path setup)
 
 import numpy as np
 import jax

@@ -2,8 +2,12 @@
 non-iid image data (Dirichlet α=0.5), scheduled by FedZero on solar excess
 energy, with FedProx local training — the paper's full loop.
 
+Run from a checkout (either invocation works; _bootstrap covers the
+missing PYTHONPATH):
+
     PYTHONPATH=src python examples/train_federated.py \
         [--rounds 20] [--clients 20] [--strategy fedzero]
+    python examples/train_federated.py
 
 Declarative config + granular builders: the experiment is an
 ``ExperimentConfig`` whose trainer section carries a JaxTrainer factory;
@@ -11,8 +15,7 @@ the registry is retuned to the real dataset's shard sizes between
 ``build_registry`` and ``build_experiment``.
 """
 import argparse
-import sys, os
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import _bootstrap  # noqa: F401  (repo-checkout sys.path setup)
 
 import numpy as np
 

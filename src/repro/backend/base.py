@@ -455,6 +455,55 @@ class ArrayBackend:
             "dom_sort": reach_dom_sort(seg["dom"]),
         }
 
+    def reach_state_subset(self, state, keep):
+        """Incremental reach-state update: the state of
+        :meth:`reach_state` restricted to the kept-candidate subset
+        ``keep`` ([K] bool over the state's candidate axis).
+
+        The expensive pieces of a from-scratch rebuild — the O(P·H²)
+        prefix tables and (upstream of this op) the scenario store's
+        segment-overlay synthesis — depend only on the forecast window,
+        not on which candidates survive, so a shrinking fleet at an
+        unchanged wall-clock step reuses them verbatim and pays only
+        O(segments) column compactions. Bit-parity contract: segments
+        are per-candidate properties gathered in ascending-candidate CSR
+        order, so compacting the survivors equals a fresh
+        :meth:`reach_state` over the subset inputs exactly (pinned by
+        tests/test_service.py); the ``dom_sort`` grouping is rebuilt by
+        a stable filter of the old order — identical to a fresh stable
+        argsort because compaction renumbers segments monotonically.
+        Caller contract: the survivors' per-candidate columns (``sigma``
+        in particular) must be unchanged since the state was built —
+        the service keys its cache on a sigma generation counter for
+        exactly this reason.
+        """
+        self._tick("reach_state_subset")
+        keep = np.asarray(keep, dtype=bool)
+        seg, kept = state["seg"], state["kept"]
+        segkeep = keep[seg["owner"]]
+        # old kept position -> compacted position (valid at kept rows)
+        newpos = np.cumsum(keep) - 1
+        nseg = {k: (newpos[v[segkeep]] if k == "owner" else v[segkeep])
+                for k, v in seg.items()}
+        nkept = {k: v[keep] for k, v in kept.items()}
+        # stable filter of the old domain-ascending order == fresh stable
+        # argsort of the compacted dom column (monotone renumbering)
+        order, _starts, _uniq = state["dom_sort"]
+        segpos = np.cumsum(segkeep) - 1
+        osel = order[segkeep[order]]
+        norder = segpos[osel]
+        counts = np.bincount(nseg["dom"])
+        nuniq = np.nonzero(counts)[0]
+        nstarts = np.zeros(nuniq.size + 1, dtype=np.int64)
+        np.cumsum(counts[nuniq], out=nstarts[1:])
+        return {
+            "tables": state["tables"],
+            "seg": nseg,
+            "kept": nkept,
+            "nu": state["nu"],
+            "dom_sort": (norder, nstarts, nuniq),
+        }
+
     def probe_segment_w(self, state, dd):
         """(w[N], a[N], b[N], j[N]) — the per-segment thresholds, step
         bounds clipped to the probed duration, and host breakpoint ranks

@@ -566,6 +566,30 @@ class JaxBackend(NumpyBackend):
                 }
         return state
 
+    def reach_state_subset(self, state, keep):
+        new = super().reach_state_subset(state, keep)
+        n = new["seg"]["a"].size
+        if n >= _DEVICE_MIN_ROWS:
+            npad = _bucket(n)
+            old = state.get("_dev")
+            with enable_x64():
+                dev = {
+                    "dom": jnp.asarray(_pad_rows(new["seg"]["dom"], npad)),
+                    "a": jnp.asarray(_pad_rows(new["seg"]["a"], npad)),
+                    "b": jnp.asarray(_pad_rows(new["seg"]["b"], npad)),
+                    "npad": npad,
+                }
+                if old is not None:
+                    # the prefix tables are subset-invariant: keep the
+                    # resident device buffers, upload only the (smaller)
+                    # compacted segment columns
+                    dev["cnt"], dev["csum"] = old["cnt"], old["csum"]
+                else:
+                    dev["cnt"] = jnp.asarray(new["tables"]["cnt"])
+                    dev["csum"] = jnp.asarray(new["tables"]["csum"])
+            new["_dev"] = dev
+        return new
+
     def probe_scores(self, state, dd, excess_col):
         dev = state.get("_dev")
         if dev is None:

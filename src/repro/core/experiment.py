@@ -142,11 +142,46 @@ class RunSection:
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
+class ServiceSection:
+    """Always-on scheduling service knobs (:mod:`repro.service`) — how
+    :func:`repro.service.build_service` turns this experiment into a
+    continuously-running scheduler instead of a batch loop. The batch
+    entrypoints (:func:`run_experiment` / :func:`run_sweep`) ignore this
+    section entirely.
+
+    ``n``/``d_max`` default to the strategy section's; ``executor``
+    picks the round executor (``"inprocess"`` runs rounds eagerly via
+    :func:`repro.core.simulation.execute_round` + the configured trainer
+    and completes them when the virtual clock passes the round end;
+    ``"none"`` leaves round reporting to the caller — the replay path).
+    ``incremental`` toggles the admission cache (engine reuse +
+    deactivation + backend ``reach_state_subset``); ``False`` prices
+    every admit from scratch — the batch reference the determinism
+    contract pins against. ``compact_frac`` is the dead-candidate
+    fraction past which a reused engine is compacted via the backend's
+    incremental reach-state subset op. ``exclude_training`` removes rows
+    of in-flight (unreported) rounds from admission. ``record_log``
+    keeps the :class:`~repro.core.types.ServiceEvent` request log for
+    replay."""
+
+    n: Optional[int] = None
+    d_max: Optional[int] = None
+    executor: str = "inprocess"
+    incremental: bool = True
+    compact_frac: float = 0.25
+    exclude_training: bool = True
+    record_log: bool = True
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class ExperimentConfig:
     """One fully-specified experiment: scenario × fleet × strategy ×
     trainer × run. Sections default sensibly, so
     ``ExperimentConfig(strategy=StrategySection(name="oort"))`` is a
-    complete experiment."""
+    complete experiment. The optional ``service`` section only matters
+    to :func:`repro.service.build_service` (the always-on scheduler);
+    batch runs ignore it."""
 
     scenario: ScenarioSection = dataclasses.field(
         default_factory=ScenarioSection)
@@ -156,6 +191,8 @@ class ExperimentConfig:
     trainer: TrainerSection = dataclasses.field(
         default_factory=TrainerSection)
     run: RunSection = dataclasses.field(default_factory=RunSection)
+    service: ServiceSection = dataclasses.field(
+        default_factory=ServiceSection)
 
     def with_strategy(self, name: str, **options) -> "ExperimentConfig":
         """Sweep helper: same experiment, different strategy. ``options``

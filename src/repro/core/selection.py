@@ -516,7 +516,8 @@ class _LazyGreedy:
     own budget copy, mirroring the sequential reference commit loop.
     """
 
-    def __init__(self, inp: LazySelectionInputs, n: int):
+    def __init__(self, inp: LazySelectionInputs, n: int,
+                 reach_state: Optional[dict] = None):
         reg = inp.registry
         self.inp = inp
         self.n = n
@@ -535,6 +536,17 @@ class _LazyGreedy:
         self._ub_memo: dict = {}       # dd -> (ub handle, n_viable)
         self._host_memo: dict = {}     # dd -> host f64 ub over kept
         self._order_memo: dict = {}    # (dd, evaluated) -> admit order
+        self._top_memo: dict = {}      # (dd, M) -> (top, bound)
+        self._warm_d = None            # last winning duration (service)
+        # proven-infeasible frontier: feasibility is monotone in d
+        # (paper §4.3), so a probe that comes back empty pins every
+        # duration <= dd empty *at the current dead set* — repeat
+        # requests between deactivations read "d*-1 is infeasible" off
+        # this instead of re-sweeping. It does NOT survive deactivate:
+        # greedy feasibility is not monotone under candidate removal
+        # (killing a budget-hogging winner can let smaller clients fit
+        # where they previously could not)
+        self._d_infeasible = 0
         self._exhausted_h = 0          # all viable(dd<=this) evaluated
         # evaluation store: doubling buffers, position -> buffer row;
         # rows are gathered only up to the horizon a probe needed
@@ -560,9 +572,61 @@ class _LazyGreedy:
                                    in ("h", "horizon"))
         except (TypeError, ValueError):
             self._spare_takes_h = False
+        # candidate deactivation (always-on service, repro/service): rows
+        # excluded *after* engine construction — admitted-and-now-busy or
+        # deregistered mid-step — score -inf wherever true scores are
+        # read, so the walk admits exactly what a fresh engine over the
+        # survivors would (positions renumber monotonically under
+        # removal, preserving the descending-position tie order; any
+        # bound a dead candidate still holds only stops a walk early,
+        # which expands M — conservative, never wrong). Evaluations,
+        # bound memos and reach state all survive, so a same-step admit
+        # after an exclusion costs O(excluded) + a walk replay.
+        self._dead: Optional[np.ndarray] = None
+        self._dead_gen = 0
+        self._n_dead = 0
         self._tables = None            # per-domain reach tables (overlay)
-        if inp.seg_overlay is not None and self._kept.size:
+        if reach_state is not None:
+            # pre-built evaluator state injected by the caller (the
+            # service's incremental admission cache: a backend
+            # reach_state_subset of a previous build) — the segment
+            # overlay gather is skipped entirely
+            self._tables = reach_state
+        elif inp.seg_overlay is not None and self._kept.size:
             self._init_reach(inp.seg_overlay)
+
+    def deactivate(self, pos: np.ndarray):
+        """Exclude candidate positions (indices into ``inp.sigma``) from
+        all future admissions on this engine. Positions already dead are
+        a no-op; dead positions keep their evaluations and bound-memo
+        entries (upper bounds stay valid — exclusion only removes
+        admissibility, never adds it)."""
+        pos = np.asarray(pos, dtype=np.int64)
+        if not pos.size:
+            return
+        if self._dead is None:
+            self._dead = np.zeros(self.sigma.size, dtype=bool)
+        fresh = pos[~self._dead[pos]]
+        if not fresh.size:
+            return
+        self._dead[fresh] = True
+        self._n_dead += int(fresh.size)
+        self._dead_gen += 1
+        # greedy feasibility can go either way under removal (the warm
+        # duration stays a valid *start*: the probes re-verify exactly)
+        self._d_infeasible = 0
+
+    @property
+    def n_live(self) -> int:
+        """Kept candidates still admissible (σ > 0 and not deactivated)."""
+        return self._kept.size - self._n_dead
+
+    def _mask_dead(self, score: np.ndarray, pos: np.ndarray) -> np.ndarray:
+        """-inf the scores of deactivated candidates (``pos`` indexes the
+        original candidate axis, like ``_eval_idx``)."""
+        if self._dead is not None:
+            score = np.where(self._dead[pos], -np.inf, score)
+        return score
 
     def _init_reach(self, ov: dict):
         """Gather the kept candidates' window segments into flat CSR
@@ -708,7 +772,15 @@ class _LazyGreedy:
         """Admit up to n clients at duration ``d`` — the lazy equivalent
         of ``_eligible`` + ``_solve_greedy`` over the same inputs."""
         dd = min(d, self.H)
-        if dd <= 0 or self._kept.size < self.n:
+        if dd <= self._d_infeasible:
+            return None
+        res = self._probe_at(dd, feasibility_only)
+        if res is None:
+            self._d_infeasible = max(self._d_infeasible, dd)
+        return res
+
+    def _probe_at(self, dd: int, feasibility_only: bool):
+        if dd <= 0 or self.n_live < self.n:
             return None
         cap = int(self.inp.candidate_cap)
         if cap <= 0 and dd <= self._exhausted_h:
@@ -733,7 +805,16 @@ class _LazyGreedy:
                     self._exhausted_h = max(self._exhausted_h, dd)
                     return self._probe_exhausted(dd, feasibility_only)
             else:
-                top, bound = self.bk.top_m(ub, M)
+                # the dd bounds never change over an engine's lifetime
+                # (deactivation removes admissibility, not bounds), so
+                # the top-M partition is memoized across same-step
+                # admissions — the service's repeat requests skip the
+                # O(kept) argpartition entirely
+                hit_top = self._top_memo.get((dd, M))
+                if hit_top is None:
+                    hit_top = self.bk.top_m(ub, M)
+                    self._top_memo[(dd, M)] = hit_top
+                top, bound = hit_top
             if M >= ceiling < n_viable:
                 # capped: admission is exact within the top-`ceiling`
                 # set; candidates beyond it are out of scope by contract
@@ -778,18 +859,32 @@ class _LazyGreedy:
             pos = np.nonzero((self._eval_idx >= 0)
                              & (self._eval_h >= dd))[0]
             eids = self._eval_idx[pos]
-            score, feas = self.bk.greedy_scores(
+            base, feas = self.bk.greedy_scores(
                 self.sigma[pos], self._reach_buf[eids, dd - 1],
                 self.m_min[pos], self.m_max[pos])
-            score = np.where(feas, score, -np.inf)
+            base = np.where(feas, base, -np.inf)
+            score = self._mask_dead(base, pos)
             fin = np.nonzero(score > -np.inf)[0]
-            hit = [pos, score, fin, None]
+            hit = [pos, base, score, fin, None, self._dead_gen]
             self._order_memo[key] = hit
-        pos, score, fin, order = hit
+        pos, base, score, fin, order, gen = hit
+        if gen != self._dead_gen:
+            # deaths since the memo was cut: re-mask off the unmasked
+            # base scores and *filter* the memoized order in place —
+            # removing elements from an exact (score desc, pos desc)
+            # prefix leaves exactly the fresh prefix over the survivors,
+            # so a same-step admission after a deactivation costs
+            # O(pool) masking instead of a fresh partition + lexsort
+            score = self._mask_dead(base, pos)
+            fin = np.nonzero(score > -np.inf)[0]
+            if order is not None:
+                order = order[score[order] > -np.inf]
+            hit[2], hit[3], hit[4], hit[5] = score, fin, order, \
+                self._dead_gen
         if order is None:
             order = self._order_prefix(pos, score, fin,
                                        max(8 * self.n, 512))
-            hit[3] = order
+            hit[4] = order
         res = self._admit(pos, None, dd, -np.inf, feasibility_only,
                           pre=(score, order))
         if res is not None or order.size >= fin.size:
@@ -797,9 +892,9 @@ class _LazyGreedy:
         # the prefix ran out with fewer than n admissions: replay the
         # walk over the complete order (deterministic — identical
         # admissions up to where the prefix ended)
-        hit[3] = self._order_prefix(pos, score, fin, fin.size)
+        hit[4] = self._order_prefix(pos, score, fin, fin.size)
         return self._admit(pos, None, dd, -np.inf, feasibility_only,
-                           pre=(score, hit[3]))
+                           pre=(score, hit[4]))
 
     def _order_prefix(self, pos: np.ndarray, score: np.ndarray,
                       fin: np.ndarray, k: int) -> np.ndarray:
@@ -865,7 +960,7 @@ class _LazyGreedy:
                                                 reach_dd,
                                                 self.m_min[cand],
                                                 self.m_max[cand])
-            score = np.where(feas, score, -np.inf)
+            score = self._mask_dead(np.where(feas, score, -np.inf), cand)
             # lexsort only the feasible rows: on infeasible probes most
             # of a large evaluated pool scores -inf, never admissible
             fin = np.nonzero(score > -np.inf)[0]
@@ -934,25 +1029,58 @@ class _LazyGreedy:
 
 
 def _select_clients_lazy(inp: LazySelectionInputs, n: int, d_max: int,
-                         solver: str, search: str) -> Optional[Selection]:
+                         solver: str, search: str,
+                         engine: Optional[_LazyGreedy] = None
+                         ) -> Optional[Selection]:
     if solver != "greedy":
         raise ValueError("lazy/sharded selection supports solver='greedy' "
                          "only — materialize SelectionInputs for the MIP")
-    eng = _LazyGreedy(inp, n)
+    # a caller-held engine (the always-on service) carries evaluations,
+    # bound memos and reach state across calls; every probe replays
+    # against its own budget copy, so reuse is bit-identical to a fresh
+    # engine over the same live candidates
+    eng = _LazyGreedy(inp, n) if engine is None else engine
+    if eng.n != n:
+        raise ValueError(f"reused engine was built for n={eng.n}, "
+                         f"request asks n={n}")
+    # chosen indices map through the engine's own candidate axis
+    inp = eng.inp
     if search == "linear":
         for d in range(1, d_max + 1):
             best = eng.probe(d)
             if best is not None:
                 return _to_selection(inp, best, d)
         return None
-    # feasibility is monotone in d (paper §4.3), so one probe at d_max
-    # settles the common idle-minute case without the binary search's
-    # O(log d_max) ascending — and individually expensive — infeasible
-    # probes; at d_max the certified bounds saturate hardest, so this
-    # probe is also the one most likely to resolve from bounds alone
-    if eng.probe(d_max, feasibility_only=True) is None:
-        return None
+    # feasibility is monotone in d (paper §4.3): the minimal feasible
+    # duration d* is unique, so any probe schedule that brackets it is
+    # exact. A reused engine remembers its last winning duration and
+    # starts there — consecutive service admissions rarely move d*, so
+    # the common case is two probes (d* feasible, d*-1 not) instead of
+    # the full O(log d_max) descent.
     lo_d, hi_d, found_d = 1, d_max - 1, d_max
+    w = eng._warm_d
+    warm_best = None
+    if w is not None and 1 <= w <= d_max:
+        warm_best = eng.probe(w)                     # full walk, kept
+    if warm_best is not None:
+        if w == 1 or eng.probe(w - 1, feasibility_only=True) is None:
+            # steady state: d* == w — one walk total, since the w-1
+            # infeasibility usually reads off the engine's proven-
+            # infeasible frontier
+            eng._warm_d = w
+            return _to_selection(inp, warm_best, w)
+        found_d, hi_d = w - 1, w - 2                 # d* <= w - 1
+    else:
+        # warm duration infeasible (or none held): d* > w. One probe at
+        # d_max settles the common idle-minute case without the binary
+        # search's ascending — and individually expensive — infeasible
+        # probes; at d_max the certified bounds saturate hardest, so
+        # this probe is also the one most likely to resolve from bounds
+        # alone
+        if eng.probe(d_max, feasibility_only=True) is None:
+            return None
+        if w is not None and w >= 1:
+            lo_d = min(w + 1, d_max)
     while lo_d <= hi_d:
         mid = (lo_d + hi_d) // 2
         if eng.probe(mid, feasibility_only=True) is not None:
@@ -960,6 +1088,7 @@ def _select_clients_lazy(inp: LazySelectionInputs, n: int, d_max: int,
             hi_d = mid - 1
         else:
             lo_d = mid + 1
+    eng._warm_d = found_d
     return _to_selection(inp, eng.probe(found_d), found_d)
 
 
@@ -981,7 +1110,10 @@ def find_clients_for_duration(inp: SelectionInputs, d: int, n: int,
 
 def select_clients(inp: SelectionInputs, n: int, d_max: int,
                    solver: str = "mip", search: str = "binary",
-                   time_limit: float = 60.0) -> Optional[Selection]:
+                   time_limit: float = 60.0,
+                   engine: Optional[_LazyGreedy] = None,
+                   cache: Optional[_ProbeCache] = None,
+                   model: Optional[_WarmMip] = None) -> Optional[Selection]:
     """Algorithm 1: smallest d ∈ [1, d_max] admitting a valid solution.
 
     ``search='binary'`` exploits the monotonicity of feasibility in d
@@ -994,15 +1126,28 @@ def select_clients(inp: SelectionInputs, n: int, d_max: int,
     A :class:`LazySelectionInputs` routes to the sharded lazy greedy
     (:class:`_LazyGreedy`) — identical selections, but candidate
     forecasts are gathered in blocks instead of materialized [K, H].
+
+    ``engine`` / ``cache`` / ``model`` let a caller that prices many
+    requests against the *same* inputs (the always-on service,
+    :mod:`repro.service`) reuse the per-round evaluation state across
+    calls instead of rebuilding it: a held :class:`_LazyGreedy` for lazy
+    inputs, a :class:`_ProbeCache` (+ :class:`_WarmMip`) for
+    materialized ones. All per-probe state is keyed by duration and
+    replayed against fresh budget copies, so reuse is bit-identical to
+    the from-scratch call — the service's determinism contract.
     """
     if isinstance(inp, LazySelectionInputs):
-        return _select_clients_lazy(inp, n, d_max, solver, search)
-    cache = _ProbeCache(inp)
-    model = None
+        return _select_clients_lazy(inp, n, d_max, solver, search,
+                                    engine=engine)
+    if cache is None:
+        cache = _ProbeCache(inp)
     if solver == "mip":
-        model = _WarmMip(inp, cache, n)
+        if model is None:
+            model = _WarmMip(inp, cache, n)
         if model.k < n:
             return None
+    else:
+        model = None
 
     def attempt(d, feasibility_only=False):
         return find_clients_for_duration(

@@ -33,6 +33,122 @@ from .strategies import BaseStrategy, EnvView
 from .types import ClientRegistry, RoundResult, Selection
 
 
+def execute_round(registry: ClientRegistry, scenario: ScenarioStore,
+                  dom_rows: np.ndarray, sel: Selection, now: int,
+                  d_max: int, *, constrained: bool = True,
+                  need_done: Optional[int] = None,
+                  contrib_limit: Optional[int] = None,
+                  round_idx: int = 0) -> RoundResult:
+    """Run one round's step loop as structure-of-arrays NumPy state.
+
+    A pure function of (registry, scenario, selection, start step): all
+    per-client round state (``computed``, ``energy_used``, ``done_min``,
+    ``finished_at``) lives in vectors indexed by position in
+    ``sel.rows``; spec fields and domain rows are gathered once per
+    round, so the per-minute loop does pure array ops (no identity
+    lookups of any kind). :class:`FLSimulation` delegates here, and the
+    always-on service's round executor (:mod:`repro.service`) calls it
+    directly — both produce identical :class:`RoundResult`\\ s for the
+    same arguments, which is what lets rounds execute decoupled from the
+    batch loop. Semantically identical to the dict-of-state
+    implementation it replaced (see tests/test_vectorized_parity.py).
+
+    ``constrained`` is ``strategy.needs_energy_constraints and not grid``
+    in the batch loop; ``need_done`` (default: everyone selected) is how
+    many finishers end the round early; ``contrib_limit`` (default:
+    ``need_done``) caps how many finishers count as contributors.
+    """
+    reg = registry
+    sc = scenario
+    grid = bool(getattr(sel, "grid", False))
+    rows = np.asarray(sel.rows, dtype=int)     # registry row per client
+    n_sel = rows.size
+    if need_done is None:
+        need_done = n_sel
+    if contrib_limit is None:
+        contrib_limit = need_done
+    dom = dom_rows[rows]                       # scenario domain row
+    delta = reg.delta_arr[rows]
+    capacity = reg.capacity_arr[rows]
+    m_min = reg.m_min_arr[rows]
+    m_max = reg.m_max_arr[rows]
+    computed = np.zeros(n_sel)
+    energy_used = np.zeros(n_sel)
+    done_min = np.zeros(n_sel, dtype=bool)
+    finished_at = np.full(n_sel, -1, dtype=int)
+    # per-domain member groups, in order of first appearance
+    groups = [(pi, np.nonzero(dom == pi)[0])
+              for pi in dict.fromkeys(dom.tolist())]
+    carbon_g = 0.0  # grid-fallback rounds only
+    # carbon accounting reads the whole round window in one gather
+    # (column j == carbon_at(now + j) exactly; per-step parity pinned
+    # by tests/test_grid_fallback.py)
+    carbon_win = sc.carbon_window(now, d_max) if grid else None
+    # the selected rows' whole round window in one gather: column j is
+    # exactly spare_at(now + j, rows), so the per-minute loop below
+    # does pure array reads (and a sparse store synthesizes only
+    # these n_sel rows, never a [C, ·] column)
+    spare_win = sc.spare_window(now, d_max, rows)
+    duration = d_max
+    for step in range(d_max):
+        t = now + step
+        if t >= sc.n_steps:
+            duration = step
+            break
+        spare_sel = spare_win[:, step]     # selected clients only: O(n)
+        excess = sc.excess_at(t)
+        active = computed < m_max
+        for pi, group in groups:
+            mem = group[active[group]]
+            if mem.size == 0:
+                continue
+            caps = spare_sel[mem] * capacity[mem]
+            if not constrained:
+                batches = capacity[mem]
+            else:
+                budget = float(excess[pi])  # W × 1 min = Wmin
+                grants = share_power(budget, delta[mem], computed[mem],
+                                     m_min[mem], m_max[mem], caps)
+                batches = np.minimum(grants / delta[mem], caps)
+            if grid:
+                # fallback round: spare-capacity compute on grid power
+                batches = caps
+            nb = np.minimum(batches, m_max[mem] - computed[mem])
+            computed[mem] += nb
+            step_e = nb * delta[mem]
+            energy_used[mem] += step_e
+            if grid:
+                ci = float(carbon_win[pi, step])
+                # Wmin -> kWh: /60/1000
+                carbon_g += float(step_e.sum()) / 60e3 * ci
+            newly = mem[~done_min[mem] & (computed[mem] >= m_min[mem])]
+            done_min[newly] = True
+            finished_at[newly] = step
+        if int(done_min.sum()) >= need_done:
+            duration = step + 1
+            break
+
+    done_pos = np.nonzero(done_min)[0]
+    # finish order, ties broken by registry row (matches the old
+    # name-sorted order wherever names sort like rows)
+    finish_order = done_pos[np.lexsort((rows[done_pos],
+                                        finished_at[done_pos]))]
+    contrib_idx = finish_order[:contrib_limit]
+    straggler_mask = np.ones(n_sel, dtype=bool)
+    straggler_mask[contrib_idx] = False
+    total_e = float(energy_used.sum())
+    return RoundResult(
+        round_idx=round_idx, start_step=now, duration=duration,
+        participants=rows, contributors=rows[contrib_idx],
+        contributor_idx=contrib_idx,
+        stragglers=rows[straggler_mask],
+        energy_used=total_e,
+        grid_energy=total_e if grid else 0.0,
+        carbon_g=carbon_g,
+        batches=computed,
+    )
+
+
 class FLSimulation:
     def __init__(self, registry: ClientRegistry, scenario: ScenarioStore,
                  strategy: BaseStrategy, trainer, d_max: int = 60,
@@ -64,104 +180,18 @@ class FLSimulation:
 
     # ------------------------------------------------------------------
     def _execute_round(self, sel: Selection) -> RoundResult:
-        """Run one round's step loop as structure-of-arrays NumPy state.
-
-        All per-client round state (``computed``, ``energy_used``,
-        ``done_min``, ``finished_at``) lives in vectors indexed by position
-        in ``sel.rows``; spec fields and domain rows are gathered once per
-        round, so the per-minute loop does pure array ops (no identity
-        lookups of any kind). Semantically identical to the dict-of-state
-        implementation it replaced (see tests/test_vectorized_parity.py).
-        """
-        reg = self.registry
-        sc = self.scenario
+        """One round via :func:`execute_round` with this run's strategy
+        policy (early-finish count, contributor cap, grid weakening)."""
         grid = bool(getattr(sel, "grid", False))
-        constrained = self.strategy.needs_energy_constraints and not grid
-        rows = np.asarray(sel.rows, dtype=int)     # registry row per client
-        n_sel = rows.size
-        dom = self._dom_rows[rows]                 # scenario domain row
-        delta = reg.delta_arr[rows]
-        capacity = reg.capacity_arr[rows]
-        m_min = reg.m_min_arr[rows]
-        m_max = reg.m_max_arr[rows]
-        computed = np.zeros(n_sel)
-        energy_used = np.zeros(n_sel)
-        done_min = np.zeros(n_sel, dtype=bool)
-        finished_at = np.full(n_sel, -1, dtype=int)
-        # per-domain member groups, in order of first appearance
-        groups = [(pi, np.nonzero(dom == pi)[0])
-                  for pi in dict.fromkeys(dom.tolist())]
-        carbon_g = 0.0  # grid-fallback rounds only
-        # carbon accounting reads the whole round window in one gather
-        # (column j == carbon_at(now + j) exactly; per-step parity pinned
-        # by tests/test_grid_fallback.py)
-        carbon_win = sc.carbon_window(self.now, self.d_max) if grid else None
         need_done = (self.strategy.n if self.strategy.over_select > 1.0
-                     else n_sel)
-        # the selected rows' whole round window in one gather: column j is
-        # exactly spare_at(now + j, rows), so the per-minute loop below
-        # does pure array reads (and a sparse store synthesizes only
-        # these n_sel rows, never a [C, ·] column)
-        spare_win = sc.spare_window(self.now, self.d_max, rows)
-        duration = self.d_max
-        for step in range(self.d_max):
-            t = self.now + step
-            if t >= sc.n_steps:
-                duration = step
-                break
-            spare_sel = spare_win[:, step]     # selected clients only: O(n)
-            excess = sc.excess_at(t)
-            active = computed < m_max
-            for pi, group in groups:
-                mem = group[active[group]]
-                if mem.size == 0:
-                    continue
-                caps = spare_sel[mem] * capacity[mem]
-                if not constrained:
-                    batches = capacity[mem]
-                else:
-                    budget = float(excess[pi])  # W × 1 min = Wmin
-                    grants = share_power(budget, delta[mem], computed[mem],
-                                         m_min[mem], m_max[mem], caps)
-                    batches = np.minimum(grants / delta[mem], caps)
-                if grid:
-                    # fallback round: spare-capacity compute on grid power
-                    batches = caps
-                nb = np.minimum(batches, m_max[mem] - computed[mem])
-                computed[mem] += nb
-                step_e = nb * delta[mem]
-                energy_used[mem] += step_e
-                if grid:
-                    ci = float(carbon_win[pi, step])
-                    # Wmin -> kWh: /60/1000
-                    carbon_g += float(step_e.sum()) / 60e3 * ci
-                newly = mem[~done_min[mem] & (computed[mem] >= m_min[mem])]
-                done_min[newly] = True
-                finished_at[newly] = step
-            if int(done_min.sum()) >= need_done:
-                duration = step + 1
-                break
-
-        done_pos = np.nonzero(done_min)[0]
-        # finish order, ties broken by registry row (matches the old
-        # name-sorted order wherever names sort like rows)
-        finish_order = done_pos[np.lexsort((rows[done_pos],
-                                            finished_at[done_pos]))]
-        limit = max(self.strategy.n, need_done)
-        contrib_idx = finish_order[:limit]
-        straggler_mask = np.ones(n_sel, dtype=bool)
-        straggler_mask[contrib_idx] = False
-        total_e = float(energy_used.sum())
-        return RoundResult(
-            round_idx=self.round_idx, start_step=self.now, duration=duration,
-            participants=rows, contributors=rows[contrib_idx],
-            contributor_idx=contrib_idx,
-            stragglers=rows[straggler_mask],
-            energy_used=total_e,
-            grid_energy=total_e if grid else 0.0,
-            carbon_g=carbon_g,
-            batches=computed,
-        )
+                     else len(np.asarray(sel.rows)))
+        return execute_round(
+            self.registry, self.scenario, self._dom_rows, sel, self.now,
+            self.d_max,
+            constrained=self.strategy.needs_energy_constraints and not grid,
+            need_done=need_done,
+            contrib_limit=max(self.strategy.n, need_done),
+            round_idx=self.round_idx)
 
     # ------------------------------------------------------------------
     def run(self, until_step: Optional[int] = None, max_rounds: Optional[int] = None,

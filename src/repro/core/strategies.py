@@ -319,23 +319,7 @@ class FedZeroStrategy(BaseStrategy):
         cand = np.nonzero((sigma > 0) & dom_ok[env.dom_rows])[0]
         sel = None
         if cand.size >= self.n:
-            use_sharded = self.sharded if self.sharded is not None else (
-                self.solver == "greedy"
-                and getattr(env.scenario, "util_mode", "dense") == "sparse")
-            if use_sharded:
-                inp = self._sharded_inputs(env, cand, sigma, excess_fc)
-            else:
-                cap = self.registry.capacity_arr[cand]
-                spare_fc = env.spare_fc(cand)
-                if spare_fc is not None:
-                    m_spare = spare_fc * cap[:, None]
-                else:
-                    m_spare = np.broadcast_to(
-                        cap[:, None], (cand.size, excess_fc.shape[1])).copy()
-                inp = SelectionInputs(
-                    registry=self.registry, m_spare=m_spare,
-                    r_excess=excess_fc, sigma=sigma[cand], rows=cand,
-                    dom=env.dom_rows[cand], backend=self.backend)
+            inp = self._selection_inputs(env, cand, sigma, excess_fc)
             sel = select_clients(inp, self.n, self.d_max, solver=self.solver,
                                  search=self.search)
         if sel is not None:
@@ -349,52 +333,93 @@ class FedZeroStrategy(BaseStrategy):
             return sel
         return None
 
-    def _sharded_inputs(self, env: EnvView, cand: np.ndarray,
-                        sigma: np.ndarray,
-                        excess_fc: np.ndarray) -> LazySelectionInputs:
-        """Lazy inputs: the solver pulls candidate forecast blocks through
-        ``spare_fc`` (a per-row sparse gather) on demand."""
-        registry = self.registry
-        cap_all = registry.capacity_arr
-        horizon = excess_fc.shape[1]
-
-        def spare_of(pos: np.ndarray, h: Optional[int] = None) -> np.ndarray:
-            rows = cand[pos]
-            spare_fc = env.spare_fc(rows, horizon=h)
-            cap = cap_all[rows]
-            if spare_fc is None:  # no-load-forecast ablation
-                return np.repeat(cap[:, None], h or horizon, axis=1)
-            return spare_fc * cap[:, None]
-
-        # exact-uncapped reach evaluator: fetch the candidates' certified
-        # spare-segment overlay from the store (None for dense stores and
-        # the no-load ablation — under no-load the capacity grant is
-        # already exact, so the walk stays exact without an overlay)
-        overlay = noise_ub = None
-        if self.exact_uncapped is not False:
-            get_ov = getattr(env.scenario, "spare_ub_overlay", None)
-            ov = get_ov(env.now, horizon, cand) if get_ov else None
-            if ov is not None:
-                noise_ub = ov["noise_mult_ub"]
-                overlay = ov
-        if self.exact_uncapped and overlay is None \
-                and getattr(env.scenario, "error", None) != "no_load":
-            raise ValueError(
-                "exact_uncapped=True needs a scenario store exposing "
-                "spare_ub_overlay (sparse util mode)")
-
-        return LazySelectionInputs(
-            registry=registry, spare_of=spare_of, m_spare_ub=cap_all[cand],
-            r_excess=excess_fc, sigma=sigma[cand], rows=cand,
-            dom=env.dom_rows[cand], candidate_cap=self.candidate_cap,
-            backend=self.backend, seg_overlay=overlay,
-            noise_mult_ub=noise_ub)
+    def _selection_inputs(self, env: EnvView, cand: np.ndarray,
+                          sigma: np.ndarray, excess_fc: np.ndarray):
+        """This strategy's solver inputs over ``cand`` — delegates to the
+        module-level :func:`fedzero_selection_inputs` so the always-on
+        service (:mod:`repro.service`) prices admissions through the
+        byte-identical construction."""
+        return fedzero_selection_inputs(
+            env, cand, sigma, excess_fc, registry=self.registry,
+            backend=self.backend, solver=self.solver, sharded=self.sharded,
+            candidate_cap=self.candidate_cap,
+            exact_uncapped=self.exact_uncapped)
 
     def record_round(self, contributors, selected, sample_losses):
         super().record_round(contributors, selected, sample_losses)
         contributors = np.asarray(contributors, dtype=int)
         enter = self.rng.random(contributors.size) < self.exclusion_factor
         self.blocklist.record_participation(contributors[enter])
+
+
+def fedzero_selection_inputs(env: EnvView, cand: np.ndarray,
+                             sigma: np.ndarray, excess_fc: np.ndarray, *,
+                             registry: ClientRegistry, backend=None,
+                             solver: str = "greedy",
+                             sharded: Optional[bool] = None,
+                             candidate_cap: int = 0,
+                             exact_uncapped: Optional[bool] = None):
+    """FedZero's per-round solver inputs over candidate rows ``cand``.
+
+    The single construction path shared by :class:`FedZeroStrategy` and
+    the always-on service's admission layer
+    (:mod:`repro.service.admission`): given the same environment view,
+    candidate set and σ, both produce byte-identical inputs — the
+    foundation of the service's batch-parity contract. ``sharded=None``
+    auto-picks the lazy path for the greedy solver over a sparse-util
+    store (the million-client configuration); the materialized branch
+    gathers the [K, H] spare slab up front.
+    """
+    use_sharded = sharded if sharded is not None else (
+        solver == "greedy"
+        and getattr(env.scenario, "util_mode", "dense") == "sparse")
+    cap_all = registry.capacity_arr
+    horizon = excess_fc.shape[1]
+    if not use_sharded:
+        cap = cap_all[cand]
+        spare_fc = env.spare_fc(cand)
+        if spare_fc is not None:
+            m_spare = spare_fc * cap[:, None]
+        else:
+            m_spare = np.broadcast_to(
+                cap[:, None], (cand.size, horizon)).copy()
+        return SelectionInputs(
+            registry=registry, m_spare=m_spare, r_excess=excess_fc,
+            sigma=sigma[cand], rows=cand, dom=env.dom_rows[cand],
+            backend=backend)
+
+    # lazy inputs: the solver pulls candidate forecast blocks through
+    # ``spare_fc`` (a per-row sparse gather) on demand
+    def spare_of(pos: np.ndarray, h: Optional[int] = None) -> np.ndarray:
+        rows = cand[pos]
+        spare_fc = env.spare_fc(rows, horizon=h)
+        cap = cap_all[rows]
+        if spare_fc is None:  # no-load-forecast ablation
+            return np.repeat(cap[:, None], h or horizon, axis=1)
+        return spare_fc * cap[:, None]
+
+    # exact-uncapped reach evaluator: fetch the candidates' certified
+    # spare-segment overlay from the store (None for dense stores and
+    # the no-load ablation — under no-load the capacity grant is
+    # already exact, so the walk stays exact without an overlay)
+    overlay = noise_ub = None
+    if exact_uncapped is not False:
+        get_ov = getattr(env.scenario, "spare_ub_overlay", None)
+        ov = get_ov(env.now, horizon, cand) if get_ov else None
+        if ov is not None:
+            noise_ub = ov["noise_mult_ub"]
+            overlay = ov
+    if exact_uncapped and overlay is None \
+            and getattr(env.scenario, "error", None) != "no_load":
+        raise ValueError(
+            "exact_uncapped=True needs a scenario store exposing "
+            "spare_ub_overlay (sparse util mode)")
+
+    return LazySelectionInputs(
+        registry=registry, spare_of=spare_of, m_spare_ub=cap_all[cand],
+        r_excess=excess_fc, sigma=sigma[cand], rows=cand,
+        dom=env.dom_rows[cand], candidate_cap=candidate_cap,
+        backend=backend, seg_overlay=overlay, noise_mult_ub=noise_ub)
 
 
 def make_strategy(name, registry: ClientRegistry, **kw) -> BaseStrategy:

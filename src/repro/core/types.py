@@ -87,6 +87,34 @@ class RoundResult:
     eval_metric: float = float("nan")
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class ServiceEvent:
+    """One record of the always-on scheduler's request log
+    (:mod:`repro.service`). The log is the service's determinism
+    contract: replaying the same event sequence against a fresh service
+    instance — or against the from-scratch batch engine — must produce
+    bit-identical admissions (see docs/service.md).
+
+    ``kind`` is one of ``advance`` / ``register`` / ``deregister`` /
+    ``admit`` / ``report``; ``step`` the virtual-clock time at which the
+    event was processed. ``rows`` carries the registry rows of a
+    register/deregister burst; ``n``/``d_max`` the admit request
+    parameters (``n`` doubles as the step count of an ``advance``);
+    ``round_id`` the round an admit opened (−1 for an infeasible admit)
+    or a report closed. ``payload`` carries a report's training outcome —
+    ``contributors`` / ``participants`` row arrays and the per-contributor
+    ``sample_losses`` list — so replay never re-runs a trainer.
+    """
+
+    kind: str
+    step: int
+    rows: Optional[np.ndarray] = None
+    n: int = 0
+    d_max: int = 0
+    round_id: int = -1
+    payload: Optional[Dict] = None
+
+
 class ClientRegistry:
     """Owns the canonical name↔row maps and the SoA spec columns.
 

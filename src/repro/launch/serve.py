@@ -1,4 +1,7 @@
-"""Batched serving driver: prefill + decode loop with continuous batching.
+"""Batched **LLM inference** driver: prefill + decode loop with
+continuous batching. Despite the module name this serves *language
+models*, not scheduling decisions — the always-on FedZero scheduler
+service lives in :mod:`repro.service` (``python -m repro.service``).
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
         --batch 4 --prompt-len 32 --gen 16

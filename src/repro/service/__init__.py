@@ -1,0 +1,27 @@
+"""Always-on scheduling service: FedZero admission at request rate over
+a live fleet (docs/service.md).
+
+The batch loop (:class:`~repro.core.simulation.FLSimulation`) asks
+"which clients, for the next round?" once per round; this package keeps
+the scheduler *resident* — clients register and deregister while
+training is in flight, admission requests are priced on demand against
+the current fleet view, and every request lands in a replayable event
+log whose admissions are bit-identical to pricing each request from
+scratch with the batch engine.
+
+Entry points::
+
+    from repro.service import build_service, run_synthetic
+    svc = build_service(cfg)          # cfg: core.ExperimentConfig
+    rid, sel = svc.admit()            # price one round now
+    svc.advance(5)                    # tick the virtual clock
+
+    python -m repro.service --synthetic-churn   # runnable demo
+"""
+from .admission import AdmissionCache
+from .engine import (InProcessExecutor, SchedulerService, build_service,
+                     run_synthetic)
+from .metrics import ServiceMetrics
+
+__all__ = ["AdmissionCache", "InProcessExecutor", "SchedulerService",
+           "ServiceMetrics", "build_service", "run_synthetic"]

@@ -1,0 +1,100 @@
+"""Observability for the always-on scheduler (:mod:`repro.service`).
+
+One :class:`ServiceMetrics` instance rides along a
+:class:`~repro.service.engine.SchedulerService` and counts every request
+the service handles, times every admission decision, and mirrors the
+admission cache's reuse behaviour (builds / engine reuses /
+deactivations / compactions). ``snapshot()`` flattens everything into a
+plain JSON-able dict — the schema documented in docs/service.md and
+consumed by benchmarks/service_load.py and ``python -m repro.service``.
+
+Latencies are recorded in seconds via a bounded reservoir (the newest
+``max_samples`` decisions); quantiles are computed lazily at snapshot
+time, so the per-decision overhead is one ``perf_counter`` pair and a
+list append.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class ServiceMetrics:
+    """Counters + admission-latency quantiles for one service instance."""
+
+    def __init__(self, max_samples: int = 100_000):
+        self.max_samples = max_samples
+        self.reset()
+
+    def reset(self):
+        self._t0 = time.perf_counter()
+        self.counters: Dict[str, int] = {
+            "admit_requests": 0,      # admit() calls priced
+            "admitted": 0,            # ... that returned a selection
+            "rejected": 0,            # ... that returned None (infeasible)
+            "quote_requests": 0,      # read-only quote() pricings
+            "register_calls": 0,
+            "register_rows": 0,       # rows actually (re)activated
+            "deregister_calls": 0,
+            "deregister_rows": 0,     # rows actually deactivated
+            "advance_steps": 0,       # virtual-clock steps processed
+            "reports": 0,             # rounds closed (executor or caller)
+            "rounds_dispatched": 0,   # rounds handed to the executor
+            # admission-cache behaviour (mirrors AdmissionCache counters)
+            "engine_builds": 0,       # from-scratch pricing state builds
+            "engine_reuses": 0,       # admits served off a held engine
+            "engine_deactivations": 0,  # incremental candidate exclusions
+            "engine_compactions": 0,  # reach_state_subset compactions
+            "engine_memo_hits": 0,    # repeat requests answered verbatim
+        }
+        self._lat: list = []          # admission latencies, seconds
+
+    # ------------------------------------------------------------------
+    def count(self, key: str, n: int = 1):
+        self.counters[key] = self.counters.get(key, 0) + int(n)
+
+    def record_admit(self, latency_s: float, admitted: bool):
+        self.count("admit_requests")
+        self.count("admitted" if admitted else "rejected")
+        self._record_latency(latency_s)
+
+    def record_quote(self, latency_s: float):
+        self.count("quote_requests")
+        self._record_latency(latency_s)
+
+    def _record_latency(self, latency_s: float):
+        self._lat.append(float(latency_s))
+        if len(self._lat) > self.max_samples:     # keep the newest half
+            self._lat = self._lat[-self.max_samples // 2:]
+
+    # ------------------------------------------------------------------
+    @property
+    def elapsed_s(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def latency_quantiles(self) -> Dict[str, float]:
+        if not self._lat:
+            return {"p50_ms": float("nan"), "p99_ms": float("nan"),
+                    "max_ms": float("nan")}
+        lat = np.asarray(self._lat)
+        return {"p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                "max_ms": float(lat.max() * 1e3)}
+
+    def snapshot(self, backend=None) -> Dict:
+        """Flat dict: counters, wall-clock rates, latency quantiles and
+        (when a backend is passed) its kernel-dispatch counters."""
+        elapsed = self.elapsed_s
+        # every priced request is a decision, committed or quoted
+        dec = self.counters["admit_requests"] + self.counters["quote_requests"]
+        out = dict(self.counters)
+        out["elapsed_s"] = elapsed
+        out["decisions_per_sec"] = dec / elapsed if elapsed > 0 else 0.0
+        out.update(self.latency_quantiles())
+        if backend is not None:
+            counts = getattr(backend, "dispatch_counts", None)
+            if counts is not None:
+                out["backend_dispatches"] = dict(counts)
+        return out

@@ -1,0 +1,378 @@
+"""Always-on scheduling service (:mod:`repro.service`): determinism,
+dynamic-fleet parity, and the incremental admission machinery.
+
+The contract under test (docs/service.md):
+
+  1. **Replay determinism** — a recorded request log replayed against a
+     fresh service instance reproduces every admission bit for bit; two
+     independent replays agree with each other and with the live run.
+  2. **Incremental == batch** — the default service prices admissions
+     off a held engine (deactivation, reach-state compaction); a service
+     built with ``incremental=False`` prices every request from scratch
+     through plain ``select_clients``. Replaying the incremental run's
+     log on the from-scratch instance must reproduce its admissions
+     exactly — the engine-reuse ladder is a pure optimization.
+  3. **Engine deactivation / reach-state subsetting** are themselves
+     exact: excluding candidates from a built ``_LazyGreedy`` admits
+     what a fresh engine over the survivors admits, and the backend's
+     ``reach_state_subset`` equals a from-scratch ``reach_state`` over
+     the surviving candidates' segments.
+
+The 1M-client sparse variant of the churn-parity test runs under
+``-m slow`` (the tier-1 run covers the same code at 10k clients).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.backend import available_backends, get_backend
+from repro.core import (ExperimentConfig, FleetSection, RunSection,
+                        ScenarioSection, ServiceSection, StrategySection,
+                        select_clients)
+from repro.core.selection import _LazyGreedy
+from repro.core.strategies import fedzero_selection_inputs
+from repro.service import build_service, run_synthetic
+
+
+def service_cfg(n_clients=400, util_mode="sparse", solver="greedy",
+                n=8, d_max=30, seed=0, **service_kw):
+    return ExperimentConfig(
+        scenario=ScenarioSection(days=1, seed=seed, util_mode=util_mode),
+        fleet=FleetSection(n_clients=n_clients, seed=seed),
+        strategy=StrategySection(n=n, d_max=d_max, seed=seed,
+                                 options={"solver": solver}),
+        run=RunSection(backend="numpy"),
+        service=ServiceSection(seed=seed, **service_kw))
+
+
+def drive(cfg, steps=25, churn=0.02, admits_per_step=3, seed=0):
+    svc = build_service(cfg)
+    run_synthetic(svc, steps=steps, churn=churn,
+                  admits_per_step=admits_per_step, seed=seed)
+    return svc
+
+
+def assert_same_admissions(history, replayed):
+    assert len(history) == len(replayed)
+    for i, (a, b) in enumerate(zip(history, replayed)):
+        if a is None:
+            assert b is None, f"admit {i}: live None, replay admitted"
+        else:
+            assert b is not None, f"admit {i}: live admitted, replay None"
+            np.testing.assert_array_equal(a, np.asarray(b.rows),
+                                          err_msg=f"admit {i}")
+
+
+# ---------------------------------------------------------------------------
+# 1. replay determinism
+
+
+@pytest.mark.parametrize("util_mode,solver", [("sparse", "greedy"),
+                                              ("dense", "greedy"),
+                                              ("dense", "mip")])
+def test_replay_reproduces_live_admissions(util_mode, solver):
+    cfg = service_cfg(n_clients=120 if solver == "mip" else 400,
+                      util_mode=util_mode, solver=solver)
+    svc = drive(cfg, steps=12)
+    assert svc.metrics.counters["admitted"] > 0
+    fresh = build_service(cfg, scenario=svc.scenario, registry=svc.registry,
+                          executor="none")
+    assert_same_admissions(svc.history, fresh.replay(svc.log))
+
+
+def test_two_replays_agree_with_each_other():
+    cfg = service_cfg()
+    svc = drive(cfg)
+    a = build_service(cfg, scenario=svc.scenario, registry=svc.registry,
+                      executor="none")
+    b = build_service(cfg, scenario=svc.scenario, registry=svc.registry,
+                      executor="none")
+    ra, rb = a.replay(svc.log), b.replay(svc.log)
+    assert_same_admissions(
+        [None if s is None else np.asarray(s.rows) for s in ra], rb)
+    # replayed bookkeeping converges to the live run's
+    np.testing.assert_array_equal(a.blocklist.blocked, svc.blocklist.blocked)
+    np.testing.assert_array_equal(a.utility.participation_arr,
+                                  svc.utility.participation_arr)
+    np.testing.assert_array_equal(a.active, svc.active)
+
+
+def test_replay_requires_executor_none():
+    cfg = service_cfg()
+    svc = drive(cfg, steps=4)
+    live = build_service(cfg, scenario=svc.scenario, registry=svc.registry)
+    with pytest.raises(ValueError, match="executor"):
+        live.replay(svc.log)
+
+
+# ---------------------------------------------------------------------------
+# 2. incremental pricing == from-scratch batch pricing
+
+
+@pytest.mark.parametrize("n_clients,util_mode",
+                         [(400, "sparse"), (400, "dense"), (10_000, "sparse")])
+def test_churn_parity_incremental_vs_scratch(n_clients, util_mode):
+    cfg = service_cfg(n_clients=n_clients, util_mode=util_mode)
+    steps = 10 if n_clients >= 10_000 else 25
+    svc = drive(cfg, steps=steps)
+    assert svc.metrics.counters["engine_reuses"] > 0 \
+        or util_mode == "dense"
+    scratch = build_service(cfg, scenario=svc.scenario,
+                            registry=svc.registry, executor="none",
+                            incremental=False)
+    assert_same_admissions(svc.history, scratch.replay(svc.log))
+    assert scratch.metrics.counters["engine_reuses"] == 0
+
+
+@pytest.mark.slow
+def test_churn_parity_1m_sparse():
+    cfg = service_cfg(n_clients=1_000_000, n=16, d_max=30)
+    svc = build_service(cfg)
+    svc.advance(200)      # into daylight (t=0 has no admissible excess)
+    run_synthetic(svc, steps=3, churn=0.001, admits_per_step=3, seed=1)
+    assert svc.metrics.counters["admitted"] > 0
+    scratch = build_service(cfg, scenario=svc.scenario,
+                            registry=svc.registry, executor="none",
+                            incremental=False)
+    assert_same_admissions(svc.history, scratch.replay(svc.log))
+
+
+def test_compaction_parity_and_trigger():
+    # compact_frac=0 compacts after every exclusion burst: the compacted
+    # engine (backend reach_state_subset) must stay bit-identical to
+    # from-scratch pricing
+    cfg = service_cfg(compact_frac=0.0)
+    svc = drive(cfg)
+    assert svc.metrics.counters["engine_compactions"] > 0
+    scratch = build_service(cfg, scenario=svc.scenario,
+                            registry=svc.registry, executor="none",
+                            incremental=False)
+    assert_same_admissions(svc.history, scratch.replay(svc.log))
+
+
+def test_quote_matches_admit_and_leaves_no_trace():
+    # quote() is a pure read: an immediately following admit() with the
+    # same arguments must return exactly the quoted selection, and no
+    # quote ever shows up in the log, history or busy state
+    cfg = service_cfg()
+    svc = build_service(cfg)
+    committed = 0
+    for _ in range(20):
+        pre_log, pre_hist = len(svc.log), len(svc.history)
+        pre_busy = svc.busy.copy()
+        q1 = svc.quote()
+        q2 = svc.quote()                 # repeat: the result-memo path
+        assert len(svc.log) == pre_log and len(svc.history) == pre_hist
+        np.testing.assert_array_equal(svc.busy, pre_busy)
+        out = svc.admit()
+        if q1 is None:
+            assert q2 is None and out is None
+        else:
+            np.testing.assert_array_equal(np.asarray(q1.rows),
+                                          np.asarray(q2.rows))
+            np.testing.assert_array_equal(np.asarray(q1.rows),
+                                          np.asarray(out[1].rows))
+            committed += 1
+        svc.advance(1)
+    assert committed > 0
+    assert svc.metrics.counters["quote_requests"] == 40
+    assert svc.metrics.counters["engine_memo_hits"] > 0
+
+
+def test_quotes_do_not_perturb_admissions():
+    # the same churn trace with and without interleaved quotes commits
+    # identical rounds, and the quoted run's log still replays clean
+    cfg = service_cfg()
+    plain = build_service(cfg)
+    run_synthetic(plain, steps=15, churn=0.02, admits_per_step=3, seed=0)
+    quoted = build_service(cfg)
+    run_synthetic(quoted, steps=15, churn=0.02, admits_per_step=3,
+                  quotes_per_step=5, seed=0)
+    assert quoted.metrics.counters["quote_requests"] == 75
+    assert len(plain.history) == len(quoted.history)
+    for i, (a, b) in enumerate(zip(plain.history, quoted.history)):
+        if a is None:
+            assert b is None, f"admit {i}"
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=f"admit {i}")
+    fresh = build_service(cfg, scenario=quoted.scenario,
+                          registry=quoted.registry, executor="none")
+    assert_same_admissions(quoted.history, fresh.replay(quoted.log))
+
+
+def test_admit_against_plain_select_clients():
+    # one admission, priced two ways: through the service (engine reuse
+    # warm) and through the batch engine's select_clients over inputs
+    # built from the identical fleet view
+    cfg = service_cfg()
+    svc = drive(cfg, steps=6)
+    d_max = svc.d_max
+    env = svc._env(d_max)
+    excess_fc = env.excess_fc()
+    cand, sigma = svc._candidates(env, excess_fc)
+    assert cand.size >= svc.n
+    inp = fedzero_selection_inputs(
+        env, cand, sigma, excess_fc, registry=svc.registry,
+        backend=svc.backend, solver="greedy")
+    ref = select_clients(inp, svc.n, d_max, solver="greedy")
+    got = svc.admit()
+    assert (ref is None) == (got is None)
+    if ref is not None:
+        np.testing.assert_array_equal(np.asarray(ref.rows),
+                                      np.asarray(got[1].rows))
+
+
+# ---------------------------------------------------------------------------
+# 3. the incremental machinery itself
+
+
+def lazy_inputs(cfg, svc, cand, sigma, excess_fc, d_max):
+    return fedzero_selection_inputs(
+        svc._env(d_max), cand, sigma, excess_fc, registry=svc.registry,
+        backend=svc.backend, solver="greedy")
+
+
+def test_deactivate_equals_fresh_engine_over_survivors():
+    cfg = service_cfg(n_clients=600)
+    svc = build_service(cfg)
+    svc.advance(3)
+    env = svc._env(svc.d_max)
+    excess_fc = env.excess_fc()
+    cand, sigma = svc._candidates(env, excess_fc)
+    assert cand.size > 4 * svc.n
+    rng = np.random.default_rng(3)
+    dead_pos = np.sort(rng.choice(cand.size, size=cand.size // 3,
+                                  replace=False))
+    inp = lazy_inputs(cfg, svc, cand, sigma, excess_fc, svc.d_max)
+    eng = _LazyGreedy(inp, svc.n)
+    sel_warm = select_clients(inp, svc.n, svc.d_max, solver="greedy",
+                              engine=eng)          # warm the memos first
+    eng.deactivate(dead_pos)
+    eng.deactivate(dead_pos)                       # idempotent
+    assert eng.n_live == cand.size - dead_pos.size
+    sel_deact = select_clients(inp, svc.n, svc.d_max, solver="greedy",
+                               engine=eng)
+    keep = np.ones(cand.size, dtype=bool)
+    keep[dead_pos] = False
+    inp_f = lazy_inputs(cfg, svc, cand[keep], sigma, excess_fc, svc.d_max)
+    sel_fresh = select_clients(inp_f, svc.n, svc.d_max, solver="greedy")
+    assert sel_warm is not None and sel_deact is not None
+    np.testing.assert_array_equal(np.asarray(sel_deact.rows),
+                                  np.asarray(sel_fresh.rows))
+    assert sel_deact.expected_duration == sel_fresh.expected_duration
+
+
+def test_engine_reuse_rejects_mismatched_n():
+    cfg = service_cfg()
+    svc = build_service(cfg)
+    env = svc._env(svc.d_max)
+    excess_fc = env.excess_fc()
+    cand, sigma = svc._candidates(env, excess_fc)
+    inp = lazy_inputs(cfg, svc, cand, sigma, excess_fc, svc.d_max)
+    eng = _LazyGreedy(inp, svc.n)
+    with pytest.raises(ValueError, match="n="):
+        select_clients(inp, svc.n + 1, svc.d_max, solver="greedy",
+                       engine=eng)
+
+
+@pytest.mark.parametrize("backend,K", [
+    ("numpy", 64),
+    pytest.param("jax", 64, marks=pytest.mark.skipif(
+        "jax" not in available_backends(), reason="jax not installed")),
+    # past _DEVICE_MIN_ROWS the jax subset op re-pads the device-resident
+    # segment columns while adopting the old prefix tables verbatim
+    pytest.param("jax", 5000, marks=pytest.mark.skipif(
+        "jax" not in available_backends(), reason="jax not installed")),
+])
+def test_reach_state_subset_matches_fresh_build(backend, K):
+    # backend-level parity: subsetting an adopted reach state must equal
+    # building it from scratch over the surviving candidates' segments
+    rng = np.random.default_rng(7)
+    bk = get_backend(backend)
+    P, H = 3, 24
+    lens = rng.integers(1, 4, size=K)
+    owner = np.repeat(np.arange(K), lens)
+    S = owner.size
+    a = rng.integers(0, H, size=S)
+    b = np.minimum(a + rng.integers(1, H, size=S), H)
+    kept_dom = rng.integers(0, P, size=K)
+    seg = {"a": a, "b": b, "x": rng.random(S), "owner": owner,
+           "dom": kept_dom[owner], "capd": 1.0 + rng.random(S)}
+    kept = {"delta": 1.0 + rng.random(K), "m_min": 1.0 + rng.random(K),
+            "m_max": 5.0 + rng.random(K), "sigma": rng.random(K) + 0.1,
+            "dom": kept_dom}
+    r_excess = rng.random((P, H)) * 100
+    nu = 1.0 + 0.1 * rng.random(H)
+    state = bk.reach_state(r_excess, seg=seg, kept=kept, noise_mult_ub=nu)
+    keep = rng.random(K) > 0.4
+    sub = bk.reach_state_subset(state, keep)
+    segkeep = keep[owner]
+    fresh = bk.reach_state(
+        r_excess,
+        seg={k: (np.cumsum(keep)[owner[segkeep]] - 1 if k == "owner"
+                 else v[segkeep]) for k, v in seg.items()},
+        kept={k: v[keep] for k, v in kept.items()}, noise_mult_ub=nu)
+    for dd in (1, H // 2, H):
+        got, n_got = bk.probe_scores(sub, dd, r_excess[:, dd - 1])
+        ref, n_ref = bk.probe_scores(fresh, dd, r_excess[:, dd - 1])
+        assert n_got == n_ref
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# 4. service bookkeeping & config plumbing
+
+
+def test_register_deregister_masks_and_log():
+    cfg = service_cfg(n_clients=50)
+    svc = build_service(cfg)
+    svc.deregister(np.array([1, 2, 3]))
+    assert not svc.active[[1, 2, 3]].any() and svc.active.sum() == 47
+    svc.register(np.array([2]))
+    assert svc.active[2]
+    kinds = [ev.kind for ev in svc.log]
+    assert kinds == ["deregister", "register"]
+    assert svc.metrics.counters["deregister_rows"] == 3
+    assert svc.metrics.counters["register_rows"] == 1
+
+
+def test_busy_rows_not_readmitted_and_freed_on_report():
+    cfg = service_cfg(n_clients=400)
+    svc = build_service(cfg)
+    res = svc.admit()
+    assert res is not None
+    rid, sel = res
+    assert svc.busy[sel.rows].all()
+    res2 = svc.admit()
+    if res2 is not None:
+        assert not np.intersect1d(sel.rows, res2[1].rows).size
+    # advancing past the round end auto-reports and frees the rows
+    svc.advance(svc.d_max + 1)
+    assert not svc.busy[sel.rows].any()
+    assert rid not in svc.admitted
+    assert svc.metrics.counters["reports"] >= 1
+
+
+def test_service_section_defaults_and_build():
+    cfg = ExperimentConfig()
+    assert cfg.service.incremental and cfg.service.executor == "inprocess"
+    cfg2 = service_cfg(n_clients=60, util_mode="dense")
+    cfg2 = dataclasses.replace(
+        cfg2, service=dataclasses.replace(cfg2.service, n=5, d_max=12))
+    svc = build_service(cfg2)
+    assert svc.n == 5 and svc.d_max == 12
+    with pytest.raises(ValueError, match="FedZero"):
+        build_service(dataclasses.replace(
+            cfg2, strategy=StrategySection(name="random")))
+
+
+def test_metrics_snapshot_schema():
+    cfg = service_cfg(n_clients=200)
+    svc = drive(cfg, steps=5)
+    snap = svc.metrics.snapshot(backend=svc.backend)
+    for key in ("admit_requests", "admitted", "rejected", "p50_ms", "p99_ms",
+                "decisions_per_sec", "engine_builds", "engine_reuses",
+                "backend_dispatches", "advance_steps", "reports"):
+        assert key in snap, key
+    assert snap["admit_requests"] == snap["admitted"] + snap["rejected"]

@@ -68,10 +68,32 @@ def scalability_table() -> str:
     return "\n".join(lines)
 
 
+def service_table() -> str:
+    payload = _load("BENCH_service.json")
+    lines = [
+        "| Config | Clients | Workload / step | Decisions/s | p50 | p99 "
+        "| Peak RSS | Gates |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for key, row in payload["configs"].items():
+        mix = (f"{row['churn']*100:.0f}% churn, {row['admits_per_step']} "
+               f"admit + {row['quotes_per_step']} quote")
+        rss = row.get("peak_rss_mb")
+        rss = f"{rss/1024:.2f} GB" if rss == rss else "n/a"
+        lines.append(
+            f"| `{key}` | {row['n_clients']:,} | {mix} "
+            f"| {row['decisions_per_sec']:.0f} | {row['p50_ms']:.1f} ms "
+            f"| {row['p99_ms']:.1f} ms | {rss} "
+            f"| {'pass' if row.get('ok') else 'FAIL'} |")
+    return "\n".join(lines)
+
+
 def render() -> str:
     return (f"End-to-end FedZero loop (`BENCH_e2e_simulation.json`):\n\n"
             f"{e2e_table()}\n\nOne `select_clients` call "
-            f"(`BENCH_scalability.json`):\n\n{scalability_table()}")
+            f"(`BENCH_scalability.json`):\n\n{scalability_table()}"
+            f"\n\nAlways-on scheduling service under churn "
+            f"(`BENCH_service.json`, docs/service.md):\n\n{service_table()}")
 
 
 def main():
