@@ -24,6 +24,14 @@ latency:
   slow samples (the once-per-step from-scratch rebuild at ~2-3 s) must
   stay under 1 % of the stream, which they do because every other
   request is answered incrementally.
+* ``1m_service_faults`` — the same 1M fleet driven through the
+  **multiprocess executor** (2 workers) under a deterministic
+  :class:`repro.service.FaultPlan`: ~1 %/round worker crashes (each
+  one kills and restarts a worker process mid-shard), client
+  mid-round dropouts, stragglers, and a lossy/delayed report channel.
+  The gate is the same decision-throughput/tail-latency budget as the
+  fault-free row: admission pricing must not degrade because round
+  execution is busy crashing and retrying behind it.
 
 The workload mix is recorded in each row (``admits_per_step`` /
 ``quotes_per_step``) — the claim is explicitly "N decisions/sec at this
@@ -56,16 +64,33 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_service.json")
 
-SCHEMA = 1
+SCHEMA = 2
+# ~1 %/round worker failure: each of the 2 workers tosses a 0.5 % coin
+# per shard attempt, so a round sees a crash with probability ~1 %.
+# The plan is a counter hash, so the crash count over the 15 measured
+# rounds is a deterministic function of the seed; seed 64 fires two
+# crashes (rounds 4 and 14) at the honest rate, which keeps the row's
+# restart/retry machinery exercised — the fault-floor gate relies on it
+FAULT_SPEC = ("crash=0.005,dropout=0.05,straggler=0.05,"
+              "delay=0.2,loss=0.05,seed=64")
 CONFIGS = {
     "10k_service": {"clients": 10_000, "steps": 30, "churn": 0.01,
                     "admits_per_step": 2, "quotes_per_step": 50,
+                    "executor": "inprocess", "workers": 0, "faults": "",
                     "budget_decisions_per_sec": 50.0,
                     "budget_p99_ms": 500.0, "budget_rss_mb": 1024.0},
     "1m_service": {"clients": 1_000_000, "steps": 15, "churn": 0.01,
                    "admits_per_step": 1, "quotes_per_step": 250,
+                   "executor": "inprocess", "workers": 0, "faults": "",
                    "budget_decisions_per_sec": 50.0,
                    "budget_p99_ms": 500.0, "budget_rss_mb": 2048.0},
+    "1m_service_faults": {"clients": 1_000_000, "steps": 15, "churn": 0.01,
+                          "admits_per_step": 1, "quotes_per_step": 250,
+                          "executor": "multiprocess", "workers": 2,
+                          "faults": FAULT_SPEC,
+                          "budget_decisions_per_sec": 50.0,
+                          "budget_p99_ms": 500.0,
+                          "budget_rss_mb": 4096.0},
 }
 # the clock offset the measured window starts at: daytime in the
 # synthesized global scenario (t=0 is night — nothing is admissible)
@@ -87,12 +112,14 @@ def run_service_load(clients: int, steps: int, churn: float,
                      admits_per_step: int, quotes_per_step: int,
                      n: int = 10, d_max: int = 30, seed: int = 0,
                      solver: str = "greedy", util_mode: str = "sparse",
-                     backend: str = "numpy"):
+                     backend: str = "numpy", executor: str = "inprocess",
+                     workers: int = 0, faults: str = ""):
     from repro.core import (ExperimentConfig, FleetSection, RunSection,
                             ScenarioSection, ServiceSection, StrategySection)
-    from repro.service import build_service
+    from repro.service import FaultPlan, build_service
     from repro.service.engine import run_synthetic
 
+    plan = FaultPlan.parse(faults) if faults else None
     cfg = ExperimentConfig(
         scenario=ScenarioSection(name="global", days=1, seed=seed,
                                  util_mode=util_mode),
@@ -100,25 +127,30 @@ def run_service_load(clients: int, steps: int, churn: float,
         strategy=StrategySection(name="fedzero", n=n, d_max=d_max,
                                  seed=seed, options={"solver": solver}),
         run=RunSection(backend=backend),
-        service=ServiceSection(seed=seed, record_log=False))
+        service=ServiceSection(seed=seed, record_log=False,
+                               executor=executor, workers=max(1, workers),
+                               faults=plan))
 
     t0 = time.perf_counter()
     svc = build_service(cfg, trainer=None)
     t_setup = time.perf_counter() - t0
 
-    # advance to daytime and absorb the one-time cold costs (scenario
-    # chunk synthesis, first input gather) outside the measured window
-    t0 = time.perf_counter()
-    svc.advance(WARMUP_STEPS)
-    svc.admit()
-    t_warmup = time.perf_counter() - t0
+    try:
+        # advance to daytime and absorb the one-time cold costs (scenario
+        # chunk synthesis, first input gather) outside the measured window
+        t0 = time.perf_counter()
+        svc.advance(WARMUP_STEPS)
+        svc.admit()
+        t_warmup = time.perf_counter() - t0
 
-    svc.metrics.reset()
-    t0 = time.perf_counter()
-    snap = run_synthetic(svc, steps=steps, churn=churn,
-                         admits_per_step=admits_per_step,
-                         quotes_per_step=quotes_per_step, seed=seed + 1)
-    wall = time.perf_counter() - t0
+        svc.metrics.reset()
+        t0 = time.perf_counter()
+        snap = run_synthetic(svc, steps=steps, churn=churn,
+                             admits_per_step=admits_per_step,
+                             quotes_per_step=quotes_per_step, seed=seed + 1)
+        wall = time.perf_counter() - t0
+    finally:
+        svc.close()
 
     return {
         "n_clients": clients,
@@ -131,6 +163,9 @@ def run_service_load(clients: int, steps: int, churn: float,
         "solver": solver,
         "util_mode": util_mode,
         "backend": backend,
+        "executor": executor,
+        "workers": workers,
+        "faults": faults,
         "setup_s": t_setup,
         "warmup_s": t_warmup,
         "wall_s": wall,
@@ -147,6 +182,14 @@ def run_service_load(clients: int, steps: int, churn: float,
         "engine_memo_hits": snap["engine_memo_hits"],
         "engine_deactivations": snap["engine_deactivations"],
         "engine_compactions": snap["engine_compactions"],
+        "worker_crashes": snap.get("worker_crashes", 0),
+        "worker_restarts": snap.get("worker_restarts", 0),
+        "shard_retries": snap.get("shard_retries", 0),
+        "client_dropouts": snap.get("client_dropouts", 0),
+        "stragglers_injected": snap.get("stragglers_injected", 0),
+        "reports_delayed": snap.get("reports_delayed", 0),
+        "reports_lost": snap.get("reports_lost", 0),
+        "rounds_degraded": snap.get("rounds_degraded", 0),
     }
 
 
@@ -163,6 +206,14 @@ def _evaluate(key: str, row: dict) -> dict:
         if rss == rss else True
     # a service that rejects every request would have a great p99
     row["within_admission_floor"] = bool(row["admitted"] > 0)
+    if cfg.get("faults"):
+        # a faulted row that injected nothing measured nothing: the plan
+        # is a counter hash, so the crash count is a deterministic
+        # function of FAULT_SPEC's seed (chosen so the 1%/round rate
+        # actually fires inside the measured window) — require the
+        # crash/restart machinery to have been exercised
+        row["within_fault_floor"] = bool(row["worker_crashes"] > 0
+                                         and row["worker_restarts"] > 0)
     row["ok"] = all(v for k, v in row.items() if k.startswith("within_"))
     return row
 
@@ -170,7 +221,9 @@ def _evaluate(key: str, row: dict) -> dict:
 def _run_single(key: str) -> dict:
     cfg = CONFIGS[key]
     row = run_service_load(cfg["clients"], cfg["steps"], cfg["churn"],
-                           cfg["admits_per_step"], cfg["quotes_per_step"])
+                           cfg["admits_per_step"], cfg["quotes_per_step"],
+                           executor=cfg["executor"], workers=cfg["workers"],
+                           faults=cfg["faults"])
     return _evaluate(key, row)
 
 
@@ -195,7 +248,7 @@ def check_committed(path: str) -> int:
     for key, cfg in CONFIGS.items():
         row = configs[key]
         for field in ("clients", "steps", "churn", "admits_per_step",
-                      "quotes_per_step"):
+                      "quotes_per_step", "executor", "workers", "faults"):
             # the JSON rows use "n_clients" where CONFIGS uses "clients"
             got = row.get("n_clients" if field == "clients" else field)
             if got != cfg[field]:
@@ -264,11 +317,15 @@ def main():
             continue
         row = json.loads(proc.stdout.strip().splitlines()[-1])
         payload["configs"][key] = row
+        faultline = (f"  crashes={row['worker_crashes']} "
+                     f"restarts={row['worker_restarts']} "
+                     f"degraded={row['rounds_degraded']}"
+                     if row.get("faults") else "")
         print(f"[service] {key}: C={row['n_clients']}  "
               f"decisions={row['decisions']}  "
               f"rate={row['decisions_per_sec']:.0f}/s  "
               f"p50={row['p50_ms']:.1f}ms p99={row['p99_ms']:.1f}ms  "
-              f"rss={row['peak_rss_mb']:.0f}MB  ok={row['ok']}")
+              f"rss={row['peak_rss_mb']:.0f}MB  ok={row['ok']}{faultline}")
         failed = failed or not row["ok"]
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1, default=float)

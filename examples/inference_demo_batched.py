@@ -1,0 +1,89 @@
+"""Batched **LLM inference** demo (prefill + greedy decode) on the
+assigned model architectures — ragged prompts left-padded into a batch,
+KV cache as a ring buffer for sliding-window archs / recurrent state for
+RWKV6/Hymba. This is a *model-serving* example; it is **not** the
+FedZero scheduler service — the always-on scheduling driver is
+``examples/serve_scheduler.py`` (package: :mod:`repro.service`).
+
+Formerly ``examples/serve_batched.py``; a deprecated shim remains at
+that path. Run from a checkout (either invocation works; _bootstrap
+covers the missing PYTHONPATH):
+
+    PYTHONPATH=src python examples/inference_demo_batched.py --arch rwkv6-1.6b
+    python examples/inference_demo_batched.py --arch mixtral-8x22b
+
+Uses the reduced configs so it runs on CPU; the same decode_step lowers at
+full scale in the multi-pod dry-run (decode_32k / long_500k shapes).
+"""
+import argparse
+import time
+
+import _bootstrap  # noqa: F401  (repo-checkout sys.path setup)
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_archs, get_config
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=all_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, P = args.batch, args.prompt_len
+    cache_len = P + args.gen
+
+    if cfg.encoder_layers:  # audio enc-dec: decode conditioned on frames
+        frames = jnp.asarray(rng.normal(0, 0.1, (B, P, cfg.d_model)),
+                             jnp.float32)
+        enc = model.encode(params, frames)
+        enc_kv = model.precompute_enc_kv(params, enc)
+        cache = model.init_cache(B, cache_len)
+        tok = jnp.zeros((B, 1), jnp.int32)
+        decode = jax.jit(model.decode_step)
+        t0 = time.time()
+        outs = []
+        for _ in range(args.gen):
+            logits, cache = decode(params, cache, tok, enc_kv)
+            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32).reshape(B, 1)
+            outs.append(np.asarray(tok))
+    else:
+        prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, P)), jnp.int32)
+        kw = {}
+        if cfg.n_frontend_embeds:
+            kw["frontend_embeds"] = jnp.asarray(
+                rng.normal(0, 0.02, (B, cfg.n_frontend_embeds, cfg.d_model)),
+                jnp.float32)
+        t0 = time.time()
+        logits, cache = jax.jit(
+            lambda p, t, **k: model.prefill(p, t, cache_len, **k)
+        )(params, prompts, **kw)
+        print(f"prefill {B}×{P}: {time.time() - t0:.2f}s")
+        decode = jax.jit(model.decode_step)
+        tok = jnp.argmax(logits[:, -1], -1)[:, None]
+        outs = [np.asarray(tok)]
+        t0 = time.time()
+        for _ in range(args.gen - 1):
+            logits, cache = decode(params, cache, tok)
+            tok = jnp.argmax(logits[:, -1], -1)[:, None]
+            outs.append(np.asarray(tok))
+    dt = time.time() - t0
+    gen = np.concatenate(outs, axis=1)
+    print(f"decoded {gen.shape[1]} tokens × {B} seqs in {dt:.2f}s "
+          f"({gen.shape[1] * B / max(dt, 1e-9):.1f} tok/s, CPU, reduced cfg)")
+    for i in range(min(B, 2)):
+        print(f"  seq{i}: {gen[i][:12]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -153,8 +153,13 @@ class ServiceSection:
     picks the round executor (``"inprocess"`` runs rounds eagerly via
     :func:`repro.core.simulation.execute_round` + the configured trainer
     and completes them when the virtual clock passes the round end;
-    ``"none"`` leaves round reporting to the caller — the replay path).
-    ``incremental`` toggles the admission cache (engine reuse +
+    ``"multiprocess"`` shards rounds by power domain across ``workers``
+    persistent worker processes — summary-identical to in-process when
+    fault-free; ``"none"`` leaves round reporting to the caller — the
+    replay path). ``faults`` optionally carries a
+    :class:`repro.service.faults.FaultPlan` for deterministic fault
+    injection (typed loosely here to keep core free of service
+    imports). ``incremental`` toggles the admission cache (engine reuse +
     deactivation + backend ``reach_state_subset``); ``False`` prices
     every admit from scratch — the batch reference the determinism
     contract pins against. ``compact_frac`` is the dead-candidate
@@ -167,6 +172,8 @@ class ServiceSection:
     n: Optional[int] = None
     d_max: Optional[int] = None
     executor: str = "inprocess"
+    workers: int = 2
+    faults: Optional[object] = None
     incremental: bool = True
     compact_frac: float = 0.25
     exclude_training: bool = True

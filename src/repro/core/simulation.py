@@ -38,7 +38,9 @@ def execute_round(registry: ClientRegistry, scenario: ScenarioStore,
                   d_max: int, *, constrained: bool = True,
                   need_done: Optional[int] = None,
                   contrib_limit: Optional[int] = None,
-                  round_idx: int = 0) -> RoundResult:
+                  round_idx: int = 0,
+                  drop_step: Optional[np.ndarray] = None,
+                  speed: Optional[np.ndarray] = None) -> RoundResult:
     """Run one round's step loop as structure-of-arrays NumPy state.
 
     A pure function of (registry, scenario, selection, start step): all
@@ -57,6 +59,14 @@ def execute_round(registry: ClientRegistry, scenario: ScenarioStore,
     in the batch loop; ``need_done`` (default: everyone selected) is how
     many finishers end the round early; ``contrib_limit`` (default:
     ``need_done``) caps how many finishers count as contributors.
+
+    ``drop_step`` / ``speed`` are the service's fault-injection hooks
+    (:mod:`repro.service.faults`), both aligned with ``sel.rows``:
+    a client with ``drop_step[i] >= 0`` computes nothing from that step
+    on (mid-round dropout — its partial work still counts toward energy,
+    like any straggler's), and ``speed`` scales each client's effective
+    compute rate (straggler injection). Both default to ``None``, which
+    leaves the loop bit-identical to the fault-free path.
     """
     reg = registry
     sc = scenario
@@ -70,6 +80,8 @@ def execute_round(registry: ClientRegistry, scenario: ScenarioStore,
     dom = dom_rows[rows]                       # scenario domain row
     delta = reg.delta_arr[rows]
     capacity = reg.capacity_arr[rows]
+    if speed is not None:
+        capacity = capacity * np.asarray(speed, dtype=float)
     m_min = reg.m_min_arr[rows]
     m_max = reg.m_max_arr[rows]
     computed = np.zeros(n_sel)
@@ -98,6 +110,8 @@ def execute_round(registry: ClientRegistry, scenario: ScenarioStore,
         spare_sel = spare_win[:, step]     # selected clients only: O(n)
         excess = sc.excess_at(t)
         active = computed < m_max
+        if drop_step is not None:
+            active &= (drop_step < 0) | (step < drop_step)
         for pi, group in groups:
             mem = group[active[group]]
             if mem.size == 0:
@@ -145,6 +159,159 @@ def execute_round(registry: ClientRegistry, scenario: ScenarioStore,
         energy_used=total_e,
         grid_energy=total_e if grid else 0.0,
         carbon_g=carbon_g,
+        batches=computed,
+    )
+
+
+def execute_round_shard(registry: ClientRegistry, scenario: ScenarioStore,
+                        dom_rows: np.ndarray, rows: np.ndarray, now: int,
+                        d_max: int, *, constrained: bool = True,
+                        drop_step: Optional[np.ndarray] = None,
+                        speed: Optional[np.ndarray] = None) -> Dict:
+    """One fleet shard's slice of a round, step-resolved.
+
+    Runs the same per-domain step loop as :func:`execute_round` for a
+    *subset* of a selection's rows — a shard must hold whole power
+    domains (``share_power`` couples clients only within a domain, so a
+    domain-complete shard computes bit-identical grants to the full
+    loop). Because the early-finish stop depends on clients in *other*
+    shards, the shard runs the full window and returns cumulative
+    per-step state; :func:`merge_round_shards` then reads off the exact
+    values at the merged round's true duration.
+
+    This is what the multiprocess executor ships to workers: thanks to
+    the deterministic ``(seed, row, step)`` synthesis contract, a worker
+    regenerates its own rows' traces locally (``spare_window`` /
+    ``excess_at`` on its private :class:`ScenarioStore`), so the task
+    message carries row indices — never trace data.
+
+    Returns ``{"rows", "computed_cum" [n, w], "energy_cum" [n, w],
+    "finished_at" [n], "window"}`` where ``w`` is the in-bounds round
+    window and column ``j`` holds state *after* step ``j``. Grid
+    fallback rounds are not supported here (the service schedules
+    excess-powered rounds only).
+    """
+    reg = registry
+    sc = scenario
+    rows = np.asarray(rows, dtype=int)
+    n = rows.size
+    dom = dom_rows[rows]
+    delta = reg.delta_arr[rows]
+    capacity = reg.capacity_arr[rows]
+    if speed is not None:
+        capacity = capacity * np.asarray(speed, dtype=float)
+    m_min = reg.m_min_arr[rows]
+    m_max = reg.m_max_arr[rows]
+    window = int(max(0, min(d_max, sc.n_steps - now)))
+    computed = np.zeros(n)
+    energy_used = np.zeros(n)
+    done_min = np.zeros(n, dtype=bool)
+    finished_at = np.full(n, -1, dtype=int)
+    computed_cum = np.zeros((n, window))
+    energy_cum = np.zeros((n, window))
+    groups = [(pi, np.nonzero(dom == pi)[0])
+              for pi in dict.fromkeys(dom.tolist())]
+    spare_win = sc.spare_window(now, d_max, rows)
+    for step in range(window):
+        t = now + step
+        spare_sel = spare_win[:, step]
+        excess = sc.excess_at(t)
+        active = computed < m_max
+        if drop_step is not None:
+            active &= (drop_step < 0) | (step < drop_step)
+        for pi, group in groups:
+            mem = group[active[group]]
+            if mem.size == 0:
+                continue
+            caps = spare_sel[mem] * capacity[mem]
+            if not constrained:
+                batches = capacity[mem]
+            else:
+                budget = float(excess[pi])
+                grants = share_power(budget, delta[mem], computed[mem],
+                                     m_min[mem], m_max[mem], caps)
+                batches = np.minimum(grants / delta[mem], caps)
+            nb = np.minimum(batches, m_max[mem] - computed[mem])
+            computed[mem] += nb
+            energy_used[mem] += nb * delta[mem]
+            newly = mem[~done_min[mem] & (computed[mem] >= m_min[mem])]
+            done_min[newly] = True
+            finished_at[newly] = step
+        computed_cum[:, step] = computed
+        energy_cum[:, step] = energy_used
+    return {"rows": rows, "computed_cum": computed_cum,
+            "energy_cum": energy_cum, "finished_at": finished_at,
+            "window": window}
+
+
+def merge_round_shards(sel: Selection, shards: List[Dict], now: int,
+                       d_max: int, *, n_steps: int,
+                       need_done: Optional[int] = None,
+                       contrib_limit: Optional[int] = None,
+                       round_idx: int = 0) -> RoundResult:
+    """Merge :func:`execute_round_shard` results into one
+    :class:`RoundResult` — including the **partial-round close path**.
+
+    With every shard present this reconstructs :func:`execute_round`'s
+    output bit-for-bit (pinned by tests/test_executor_mp.py): the true
+    duration is the ``need_done``-th smallest finish step + 1, and each
+    client's batches/energy are read from its shard's cumulative state
+    at exactly that step — no re-summation, so float accumulation order
+    matches the sequential loop.
+
+    Shards may be *missing*: a round whose worker died past the retry
+    budget closes partially — the dead shard's clients keep their
+    zeroed state (no batches, no energy, never finished), so they
+    surface as stragglers, never count toward the early-finish quorum,
+    and the round runs to the full window. The executor layers the
+    zero-utility σ/blocklist bookkeeping for those rows on top of this
+    (see :mod:`repro.service.executors`).
+    """
+    rows = np.asarray(sel.rows, dtype=int)
+    n_sel = rows.size
+    if need_done is None:
+        need_done = n_sel
+    if contrib_limit is None:
+        contrib_limit = need_done
+    window = int(max(0, min(d_max, n_steps - now)))
+    computed_cum = np.zeros((n_sel, window))
+    energy_cum = np.zeros((n_sel, window))
+    finished_at = np.full(n_sel, -1, dtype=int)
+    pos_of = {int(r): i for i, r in enumerate(rows)}
+    for sh in shards:
+        if sh["window"] != window:
+            raise ValueError("shard window mismatch: "
+                             f"{sh['window']} != {window}")
+        p = np.array([pos_of[int(r)] for r in sh["rows"]], dtype=int)
+        computed_cum[p] = sh["computed_cum"]
+        energy_cum[p] = sh["energy_cum"]
+        finished_at[p] = sh["finished_at"]
+    fin = finished_at[finished_at >= 0]
+    if need_done > 0 and fin.size >= need_done:
+        # the step the early-finish stop would have fired on
+        duration = int(np.partition(fin, need_done - 1)[need_done - 1]) + 1
+    else:
+        duration = window
+    if duration > 0:
+        computed = computed_cum[:, duration - 1].copy()
+        energy_used = energy_cum[:, duration - 1].copy()
+    else:
+        computed = np.zeros(n_sel)
+        energy_used = np.zeros(n_sel)
+    done_min = (finished_at >= 0) & (finished_at < duration)
+    done_pos = np.nonzero(done_min)[0]
+    finish_order = done_pos[np.lexsort((rows[done_pos],
+                                        finished_at[done_pos]))]
+    contrib_idx = finish_order[:contrib_limit]
+    straggler_mask = np.ones(n_sel, dtype=bool)
+    straggler_mask[contrib_idx] = False
+    total_e = float(energy_used.sum())
+    return RoundResult(
+        round_idx=round_idx, start_step=now, duration=duration,
+        participants=rows, contributors=rows[contrib_idx],
+        contributor_idx=contrib_idx,
+        stragglers=rows[straggler_mask],
+        energy_used=total_e, grid_energy=0.0, carbon_g=0.0,
         batches=computed,
     )
 

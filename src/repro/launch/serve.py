@@ -1,77 +1,23 @@
-"""Batched **LLM inference** driver: prefill + decode loop with
-continuous batching. Despite the module name this serves *language
-models*, not scheduling decisions — the always-on FedZero scheduler
-service lives in :mod:`repro.service` (``python -m repro.service``).
+"""Deprecated alias for :mod:`repro.launch.inference_demo`.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
-        --batch 4 --prompt-len 32 --gen 16
-
-Exercises the same prefill/decode step functions the dry-run lowers for
-the decode shapes. Requests arrive with ragged prompt lengths (left-padded
-into the batch); generation is greedy.
+This module was the batched **LLM inference** demo all along — a name
+that invited confusion with the FedZero scheduler service (which lives
+in :mod:`repro.service`, driver ``python -m repro.service``). The demo
+now lives at :mod:`repro.launch.inference_demo`; this shim keeps old
+imports and ``python -m repro.launch.serve`` invocations working, with
+a :class:`DeprecationWarning`.
 """
 from __future__ import annotations
 
-import argparse
-import time
+import warnings
 
-import numpy as np
+from .inference_demo import main  # noqa: F401  (re-export)
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config
-from repro.models import build_model
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch, reduced=args.reduced)
-    if cfg.encoder_layers > 0:
-        raise SystemExit("use a decoder-only arch for this demo")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
-    cache_len = args.prompt_len + args.gen
-
-    prefill = jax.jit(lambda p, t: model.prefill(p, t, cache_len))
-    decode = jax.jit(model.decode_step)
-
-    t0 = time.time()
-    fe = None
-    if cfg.n_frontend_embeds:
-        fe = jnp.asarray(rng.normal(0, 0.02,
-                         (args.batch, cfg.n_frontend_embeds, cfg.d_model)),
-                         cfg.dtype)
-        logits, cache = jax.jit(
-            lambda p, t, f: model.prefill(p, t, cache_len, frontend_embeds=f)
-        )(params, jnp.asarray(prompts), fe)
-    else:
-        logits, cache = prefill(params, jnp.asarray(prompts))
-    print(f"prefill {args.batch}×{args.prompt_len} in {time.time()-t0:.2f}s")
-
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    generated = [np.asarray(tok)]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        logits, cache = decode(params, cache, tok)
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        generated.append(np.asarray(tok))
-    dt = time.time() - t0
-    out = np.concatenate(generated, axis=1)
-    print(f"decoded {args.gen-1} steps × {args.batch} seqs in {dt:.2f}s "
-          f"({(args.gen-1)*args.batch/max(dt,1e-9):.1f} tok/s)")
-    print("sample:", out[0][:16])
-
+warnings.warn(
+    "repro.launch.serve is deprecated: the batched LLM-inference demo "
+    "moved to repro.launch.inference_demo (the FedZero scheduler "
+    "service is `python -m repro.service`)",
+    DeprecationWarning, stacklevel=2)
 
 if __name__ == "__main__":
     main()

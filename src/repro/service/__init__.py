@@ -19,9 +19,11 @@ Entry points::
     python -m repro.service --synthetic-churn   # runnable demo
 """
 from .admission import AdmissionCache
-from .engine import (InProcessExecutor, SchedulerService, build_service,
-                     run_synthetic)
+from .engine import SchedulerService, build_service, run_synthetic
+from .executors import InProcessExecutor, MultiprocessExecutor
+from .faults import FaultPlan, RetryPolicy
 from .metrics import ServiceMetrics
 
-__all__ = ["AdmissionCache", "InProcessExecutor", "SchedulerService",
+__all__ = ["AdmissionCache", "FaultPlan", "InProcessExecutor",
+           "MultiprocessExecutor", "RetryPolicy", "SchedulerService",
            "ServiceMetrics", "build_service", "run_synthetic"]

@@ -19,6 +19,7 @@ from repro.core import (ExperimentConfig, FleetSection, RunSection,
                         ScenarioSection, ServiceSection, StrategySection)
 
 from .engine import build_service, run_synthetic
+from .faults import FaultPlan
 
 
 def main(argv=None):
@@ -46,12 +47,24 @@ def main(argv=None):
                     default="sparse")
     ap.add_argument("--solver", choices=("greedy", "mip"), default="greedy")
     ap.add_argument("--backend", default="numpy")
+    ap.add_argument("--executor", choices=("inprocess", "multiprocess"),
+                    default="inprocess",
+                    help="round executor: in-process, or sharded across "
+                    "worker processes (workers regenerate their trace "
+                    "rows locally)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="worker processes for --executor multiprocess")
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="deterministic fault plan, e.g. "
+                    "'crash=0.01,dropout=0.05,delay=0.1,loss=0.01,seed=3' "
+                    "(see repro.service.faults.FaultPlan.parse)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-replay-check", action="store_true",
                     help="skip the replay bit-parity self-check")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
 
+    plan = FaultPlan.parse(args.faults) if args.faults else None
     cfg = ExperimentConfig(
         scenario=ScenarioSection(days=1, seed=args.seed,
                                  util_mode=args.util_mode),
@@ -59,12 +72,16 @@ def main(argv=None):
         strategy=StrategySection(n=args.n, d_max=args.d_max, seed=args.seed,
                                  options={"solver": args.solver}),
         run=RunSection(backend=args.backend),
-        service=ServiceSection(seed=args.seed))
+        service=ServiceSection(seed=args.seed, executor=args.executor,
+                               workers=args.workers, faults=plan))
     svc = build_service(cfg)
-    snap = run_synthetic(svc, steps=args.steps, churn=args.churn,
-                         admits_per_step=args.admits_per_step,
-                         quotes_per_step=args.quotes_per_step,
-                         seed=args.seed, verbose=not args.json)
+    try:
+        snap = run_synthetic(svc, steps=args.steps, churn=args.churn,
+                             admits_per_step=args.admits_per_step,
+                             quotes_per_step=args.quotes_per_step,
+                             seed=args.seed, verbose=not args.json)
+    finally:
+        svc.close()
 
     snap["replay_ok"] = None
     if not args.no_replay_check:
@@ -89,6 +106,14 @@ def main(argv=None):
               f"p50={snap['p50_ms']:.1f}ms p99={snap['p99_ms']:.1f}ms, "
               f"admitted={snap['admitted']} rejected={snap['rejected']}, "
               f"replay_ok={snap['replay_ok']}")
+        if plan is not None:
+            print(f"faults: crashes={snap['worker_crashes']} "
+                  f"restarts={snap['worker_restarts']} "
+                  f"retries={snap['shard_retries']} "
+                  f"dropouts={snap['client_dropouts']} "
+                  f"lost={snap['reports_lost']} "
+                  f"degraded={snap['rounds_degraded']} "
+                  f"report_p99={snap['report_p99_steps']:.0f} steps")
     return snap
 
 

@@ -25,12 +25,17 @@ their payload, so replay consumes the log without a trainer; the
 service's two RNG streams (blocklist release, exclusion-factor entry)
 are consumed at event-processing order, which the log preserves.
 
-Round execution is pluggable: the in-process executor runs
-:func:`repro.core.simulation.execute_round` + the trainer at dispatch
-time and surfaces the report when the clock passes the round end, so
-training overlaps admission on the virtual timeline exactly as the
-batch loop would have sequenced it; ``executor="none"`` leaves
-reporting to the caller (remote fleets, replay).
+Round execution is pluggable (:mod:`repro.service.executors`): the
+in-process executor runs :func:`repro.core.simulation.execute_round` +
+the trainer at dispatch time and surfaces the report when the clock
+passes the round end, so training overlaps admission on the virtual
+timeline exactly as the batch loop would have sequenced it; the
+multiprocess executor shards rounds by power domain across worker
+processes (summary-identical when fault-free); ``executor="none"``
+leaves reporting to the caller (remote fleets, replay). Executors take
+an optional :class:`~repro.service.faults.FaultPlan` for deterministic
+fault injection — faulted runs log the degraded outcomes like any
+other, so the replay contract above is unchanged.
 """
 from __future__ import annotations
 
@@ -43,45 +48,13 @@ from repro.backend import get_backend
 from repro.core.experiment import (ExperimentConfig, build_registry,
                                    build_scenario, build_trainer)
 from repro.core.fairness import Blocklist
-from repro.core.simulation import execute_round
 from repro.core.strategies import EnvView
 from repro.core.types import ClientRegistry, Selection, ServiceEvent
 from repro.core.utility import UtilityTracker
 
 from .admission import AdmissionCache
+from .executors import InProcessExecutor, MultiprocessExecutor
 from .metrics import ServiceMetrics
-
-
-class InProcessExecutor:
-    """Runs admitted rounds eagerly on the service's own scenario +
-    trainer; completions surface when the virtual clock passes the round
-    end (:meth:`SchedulerService.poll`)."""
-
-    def __init__(self, service: "SchedulerService"):
-        self.svc = service
-
-    def dispatch(self, round_id: int, sel: Selection, d_max: int) -> int:
-        """Execute the round now; return its end step. ``d_max`` is the
-        admitting request's cap — the round may run past the solver's
-        expected duration under realized conditions, exactly as in the
-        batch loop."""
-        svc = self.svc
-        rr = execute_round(svc.registry, svc.scenario, svc._dom_rows, sel,
-                           svc.now, d_max, round_idx=round_id)
-        sample_losses: List[np.ndarray] = []
-        if rr.contributors.size and svc.trainer is not None:
-            updates = []
-            for pos in rr.contributor_idx:
-                upd = svc.trainer.local_update(int(rr.participants[pos]),
-                                               float(rr.batches[pos]))
-                sample_losses.append(upd["sample_losses"])
-                updates.append(upd)
-            svc.trainer.aggregate(updates)
-        else:
-            sample_losses = [np.empty(0)] * int(rr.contributors.size)
-        end = svc.now + max(rr.duration, 1)
-        svc._pending[round_id] = (end, rr, sample_losses)
-        return end
 
 
 class SchedulerService:
@@ -98,10 +71,13 @@ class SchedulerService:
                  executor: str = "inprocess", incremental: bool = True,
                  compact_frac: float = 0.25, exclude_training: bool = True,
                  record_log: bool = True, seed: int = 0,
-                 initially_active: bool = True):
+                 initially_active: bool = True, workers: int = 2,
+                 faults=None, mp_context: Optional[str] = None,
+                 config: Optional[ExperimentConfig] = None):
         self.registry = registry
         self.scenario = scenario
         self.trainer = trainer
+        self.config = config
         self.n = int(n)
         self.d_max = int(d_max)
         self.exclusion_factor = exclusion_factor
@@ -139,17 +115,24 @@ class SchedulerService:
             sharded=sharded, candidate_cap=candidate_cap,
             exact_uncapped=exact_uncapped, incremental=incremental,
             compact_frac=compact_frac, metrics=self.metrics)
-        # round lifecycle
+        # round lifecycle — pending rounds live inside the executor
         self._next_round = 0
-        self._pending: Dict[int, tuple] = {}     # rid -> (end, rr, losses)
         self.admitted: Dict[int, Selection] = {}  # rid -> selection (open)
         # every admit decision's row array in request order (None =
         # infeasible) — what the replay parity check compares against
         self.history: List[Optional[np.ndarray]] = []
         self.log: List[ServiceEvent] = []
         if executor == "inprocess":
-            self.executor = InProcessExecutor(self)
+            self.executor = InProcessExecutor(self, faults=faults)
+        elif executor == "multiprocess":
+            self.executor = MultiprocessExecutor(self, config,
+                                                 workers=workers,
+                                                 faults=faults,
+                                                 mp_context=mp_context)
         elif executor == "none":
+            # replay / remote fleets drive report_round directly; a
+            # fault plan is meaningless here and silently ignored (so a
+            # faulted run's config builds its own replay twin unchanged)
             self.executor = None
         else:
             raise ValueError(f"unknown executor {executor!r}")
@@ -292,7 +275,6 @@ class SchedulerService:
         self.blocklist.record_participation(contributors[enter])
         self.busy[participants] = False
         self.admitted.pop(round_id, None)
-        self._pending.pop(round_id, None)
         self.cache.invalidate()
         self.metrics.count("reports")
         self._log(kind="report", round_id=round_id, n=int(duration),
@@ -303,13 +285,14 @@ class SchedulerService:
                            "duration": int(duration)})
 
     def poll(self):
-        """Close executor rounds whose end step the clock has passed."""
-        due = sorted(rid for rid, (end, _, _) in self._pending.items()
-                     if end <= self.now)
-        for rid in due:
-            _, rr, losses = self._pending[rid]
-            self.report_round(rid, rr.contributors, rr.participants,
-                              losses, duration=rr.duration)
+        """Apply executor reports that have come due at the current
+        clock (round end + any fault-injected delivery delay/retries)."""
+        if self.executor is None:
+            return
+        for rid, contributors, participants, losses, duration \
+                in self.executor.due(self.now):
+            self.report_round(rid, contributors, participants, losses,
+                              duration=duration)
 
     def advance(self, steps: int = 1):
         """Tick the virtual clock. Per step: one blocklist ω-update +
@@ -323,6 +306,14 @@ class SchedulerService:
             self.metrics.count("advance_steps")
             self._log(kind="advance", n=1)
             self.poll()
+
+    # ------------------------------------------------------------------
+    def close(self):
+        """Release executor resources (multiprocess worker pool). Safe
+        to call more than once; the service remains usable for replay-
+        style reads afterwards."""
+        if self.executor is not None:
+            self.executor.shutdown()
 
     # ------------------------------------------------------------------
     def replay(self, events: List[ServiceEvent]) -> List[Optional[Selection]]:
@@ -391,7 +382,8 @@ def build_service(cfg: ExperimentConfig, *, scenario=None, registry=None,
         executor=sv.executor, incremental=sv.incremental,
         compact_frac=sv.compact_frac,
         exclude_training=sv.exclude_training,
-        record_log=sv.record_log, seed=st.seed)
+        record_log=sv.record_log, seed=st.seed,
+        workers=sv.workers, faults=sv.faults, config=cfg)
     kw.update(overrides)
     return SchedulerService(registry, scenario, trainer, **kw)
 

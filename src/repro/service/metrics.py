@@ -42,6 +42,16 @@ class ServiceMetrics:
             "advance_steps": 0,       # virtual-clock steps processed
             "reports": 0,             # rounds closed (executor or caller)
             "rounds_dispatched": 0,   # rounds handed to the executor
+            # executor fault behaviour (repro.service.faults/executors)
+            "worker_crashes": 0,      # worker deaths detected mid-round
+            "worker_restarts": 0,     # replacement workers spawned
+            "shard_retries": 0,       # round shards resubmitted
+            "client_dropouts": 0,     # mid-round excess-zero dropouts
+            "stragglers_injected": 0,  # clients slowed by the fault plan
+            "reports_delayed": 0,     # reports arriving late
+            "reports_lost": 0,        # delivery attempts lost
+            "report_retries": 0,      # redelivery attempts scheduled
+            "rounds_degraded": 0,     # partial / zero-information closes
             # admission-cache behaviour (mirrors AdmissionCache counters)
             "engine_builds": 0,       # from-scratch pricing state builds
             "engine_reuses": 0,       # admits served off a held engine
@@ -50,10 +60,19 @@ class ServiceMetrics:
             "engine_memo_hits": 0,    # repeat requests answered verbatim
         }
         self._lat: list = []          # admission latencies, seconds
+        self._report_lat: list = []   # report latencies, virtual steps
 
     # ------------------------------------------------------------------
     def count(self, key: str, n: int = 1):
         self.counters[key] = self.counters.get(key, 0) + int(n)
+
+    def record_report_latency(self, steps: int):
+        """Virtual steps from a round's dispatch to its report landing —
+        round duration plus any fault-injected delay/retry backoff, the
+        distribution the timeout quantiles summarize."""
+        self._report_lat.append(int(steps))
+        if len(self._report_lat) > self.max_samples:
+            self._report_lat = self._report_lat[-self.max_samples // 2:]
 
     def record_admit(self, latency_s: float, admitted: bool):
         self.count("admit_requests")
@@ -83,6 +102,17 @@ class ServiceMetrics:
                 "p99_ms": float(np.percentile(lat, 99) * 1e3),
                 "max_ms": float(lat.max() * 1e3)}
 
+    def report_latency_quantiles(self) -> Dict[str, float]:
+        """Dispatch-to-report latency quantiles in virtual steps."""
+        if not self._report_lat:
+            return {"report_p50_steps": float("nan"),
+                    "report_p99_steps": float("nan"),
+                    "report_max_steps": float("nan")}
+        lat = np.asarray(self._report_lat, dtype=float)
+        return {"report_p50_steps": float(np.percentile(lat, 50)),
+                "report_p99_steps": float(np.percentile(lat, 99)),
+                "report_max_steps": float(lat.max())}
+
     def snapshot(self, backend=None) -> Dict:
         """Flat dict: counters, wall-clock rates, latency quantiles and
         (when a backend is passed) its kernel-dispatch counters."""
@@ -93,6 +123,7 @@ class ServiceMetrics:
         out["elapsed_s"] = elapsed
         out["decisions_per_sec"] = dec / elapsed if elapsed > 0 else 0.0
         out.update(self.latency_quantiles())
+        out.update(self.report_latency_quantiles())
         if backend is not None:
             counts = getattr(backend, "dispatch_counts", None)
             if counts is not None:

@@ -1,0 +1,227 @@
+"""Multiprocess round executor (:mod:`repro.service.executors`):
+end-to-end parity with :class:`InProcessExecutor` and resilience to
+worker death.
+
+The contract under test (docs/service.md):
+
+  1. **Shard-merge exactness** — per-domain shards of a round executed
+     via ``execute_round_shard`` + ``merge_round_shards`` reproduce
+     ``execute_round`` bit for bit (duration, contributors, batches,
+     energy), faults included.
+  2. **Summary parity** — a service driven through the multiprocess
+     executor with zero faults ends in exactly the state the in-process
+     executor produces: same admissions, same event log payloads, same
+     σ/blocklist/trainer state (tier-1 at 400 and 10k clients; the
+     1M-sparse variant runs under ``-m slow``).
+  3. **Worker death is survivable** — killing a worker process outright
+     (SIGKILL, not a plan-injected crash) restarts it and, within the
+     retry budget, leaves the final state identical to the in-process
+     reference.
+"""
+import os
+import signal
+
+import numpy as np
+import pytest
+
+from repro.core import (ExperimentConfig, FleetSection, RunSection,
+                        ScenarioSection, ServiceSection, StrategySection)
+from repro.core.experiment import build_registry, build_scenario
+from repro.core.simulation import (execute_round, execute_round_shard,
+                                   merge_round_shards)
+from repro.core.types import Selection
+from repro.service import build_service, run_synthetic
+
+
+def service_cfg(n_clients=400, util_mode="sparse", n=8, d_max=30, seed=0,
+                **service_kw):
+    return ExperimentConfig(
+        scenario=ScenarioSection(days=1, seed=seed, util_mode=util_mode),
+        fleet=FleetSection(n_clients=n_clients, seed=seed),
+        strategy=StrategySection(n=n, d_max=d_max, seed=seed,
+                                 options={"solver": "greedy"}),
+        run=RunSection(backend="numpy"),
+        service=ServiceSection(seed=seed, **service_kw))
+
+
+def drive(cfg, steps=12, churn=0.02, admits_per_step=3, seed=0, **overrides):
+    svc = build_service(cfg, **overrides)
+    try:
+        run_synthetic(svc, steps=steps, churn=churn,
+                      admits_per_step=admits_per_step, seed=seed)
+    finally:
+        svc.close()
+    return svc
+
+
+def assert_services_identical(a, b):
+    """Full end-of-run state equality: admissions, log, σ/blocklist,
+    fleet masks, trainer state."""
+    assert len(a.history) == len(b.history)
+    for i, (ra, rb) in enumerate(zip(a.history, b.history)):
+        if ra is None:
+            assert rb is None, f"admit {i}"
+        else:
+            np.testing.assert_array_equal(ra, rb, err_msg=f"admit {i}")
+    assert len(a.log) == len(b.log)
+    for ea, eb in zip(a.log, b.log):
+        assert (ea.kind, ea.step, ea.n, ea.d_max, ea.round_id) == \
+            (eb.kind, eb.step, eb.n, eb.d_max, eb.round_id)
+        if ea.kind == "report":
+            pa, pb = ea.payload, eb.payload
+            np.testing.assert_array_equal(pa["contributors"],
+                                          pb["contributors"])
+            np.testing.assert_array_equal(pa["participants"],
+                                          pb["participants"])
+            assert pa["duration"] == pb["duration"]
+            assert len(pa["sample_losses"]) == len(pb["sample_losses"])
+            for la, lb in zip(pa["sample_losses"], pb["sample_losses"]):
+                np.testing.assert_array_equal(la, lb)
+    np.testing.assert_array_equal(a.active, b.active)
+    np.testing.assert_array_equal(a.busy, b.busy)
+    np.testing.assert_array_equal(a.blocklist.blocked, b.blocklist.blocked)
+    np.testing.assert_array_equal(a.utility.participation_arr,
+                                  b.utility.participation_arr)
+    np.testing.assert_array_equal(a.utility.sigmas(), b.utility.sigmas())
+    assert a.trainer.progress == b.trainer.progress
+    np.testing.assert_array_equal(a.trainer.counts, b.trainer.counts)
+
+
+# ---------------------------------------------------------------------------
+# 1. shard-merge exactness (no processes involved)
+
+
+def test_merge_round_shards_matches_execute_round():
+    cfg = service_cfg(n_clients=400)
+    sc = build_scenario(cfg)
+    reg = build_registry(cfg, sc)
+    dom_rows = reg.domain_rows(sc.domain_names)
+    rng = np.random.default_rng(0)
+    for trial in range(30):
+        n = int(rng.integers(3, 14))
+        rows = rng.choice(len(reg), size=n, replace=False)
+        # mostly in-bounds windows; every 5th trial clips at n_steps
+        now = (int(rng.integers(0, sc.n_steps - 5)) if trial % 5
+               else int(sc.n_steps - rng.integers(1, 10)))
+        d_max = int(rng.integers(5, 40))
+        drop = speed = None
+        if trial % 3 == 1:   # fault-injected dropouts
+            drop = np.where(rng.random(n) < 0.4,
+                            rng.integers(0, 10, n), -1).astype(np.int64)
+        if trial % 3 == 2:   # fault-injected stragglers
+            speed = np.where(rng.random(n) < 0.4, 0.25, 1.0)
+        sel = Selection(rows=rows, expected_duration=d_max,
+                        expected_batches=np.zeros(n))
+        ref = execute_round(reg, sc, dom_rows, sel, now, d_max,
+                            round_idx=trial, drop_step=drop, speed=speed)
+        dom = dom_rows[rows]
+        groups = [np.nonzero(dom == pi)[0]
+                  for pi in dict.fromkeys(dom.tolist())]
+        nsh = max(1, min(3, len(groups)))
+        shard_pos = [np.concatenate(groups[i::nsh]) for i in range(nsh)]
+        shards = [execute_round_shard(
+            reg, sc, dom_rows, rows[p], now, d_max,
+            drop_step=None if drop is None else drop[p],
+            speed=None if speed is None else speed[p])
+            for p in shard_pos]
+        got = merge_round_shards(sel, shards, now, d_max,
+                                 n_steps=sc.n_steps, round_idx=trial)
+        assert got.duration == ref.duration, trial
+        np.testing.assert_array_equal(got.contributors, ref.contributors)
+        np.testing.assert_array_equal(got.contributor_idx,
+                                      ref.contributor_idx)
+        np.testing.assert_array_equal(got.stragglers, ref.stragglers)
+        np.testing.assert_array_equal(got.batches, ref.batches)
+        assert got.energy_used == ref.energy_used  # bit-exact float
+
+
+def test_merge_with_missing_shard_closes_partial():
+    """The partial-round close path: a missing (dead) shard's clients
+    never finish — the round runs the full window and they surface as
+    stragglers with zero batches/energy."""
+    cfg = service_cfg(n_clients=400)
+    sc = build_scenario(cfg)
+    reg = build_registry(cfg, sc)
+    dom_rows = reg.domain_rows(sc.domain_names)
+    rng = np.random.default_rng(1)
+    rows = rng.choice(len(reg), size=10, replace=False)
+    now, d_max = 300, 20
+    sel = Selection(rows=rows, expected_duration=d_max,
+                    expected_batches=np.zeros(10))
+    dom = dom_rows[rows]
+    groups = [np.nonzero(dom == pi)[0] for pi in dict.fromkeys(dom.tolist())]
+    assert len(groups) >= 2, "need >= 2 domains for a dead shard"
+    shards = [execute_round_shard(reg, sc, dom_rows, rows[p], now, d_max)
+              for p in groups[1:]]        # shard 0 died
+    got = merge_round_shards(sel, shards, now, d_max, n_steps=sc.n_steps)
+    dead_pos = groups[0]
+    window = min(d_max, sc.n_steps - now)
+    assert got.duration == window         # quorum never reached
+    assert not np.intersect1d(got.contributors, rows[dead_pos]).size
+    assert np.isin(rows[dead_pos], got.stragglers).all()
+    assert np.all(got.batches[dead_pos] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# 2. end-to-end summary parity, zero faults
+
+
+@pytest.mark.parametrize("n_clients,steps", [(400, 12), (10_000, 6)])
+def test_mp_matches_inprocess(n_clients, steps):
+    cfg = service_cfg(n_clients=n_clients)
+    ref = drive(cfg, steps=steps)
+    sc, reg = ref.scenario, ref.registry
+    mp_svc = drive(cfg, steps=steps, scenario=sc, registry=reg,
+                   executor="multiprocess", workers=2)
+    assert ref.metrics.counters["admitted"] > 0
+    assert mp_svc.metrics.counters["worker_crashes"] == 0
+    assert_services_identical(ref, mp_svc)
+
+
+@pytest.mark.slow
+def test_mp_matches_inprocess_1m_sparse():
+    cfg = service_cfg(n_clients=1_000_000, n=4, d_max=20)
+    ref = drive(cfg, steps=3, churn=0.0005, admits_per_step=2)
+    mp_svc = drive(cfg, steps=3, churn=0.0005, admits_per_step=2,
+                   scenario=ref.scenario, registry=ref.registry,
+                   executor="multiprocess", workers=2)
+    assert ref.metrics.counters["admitted"] > 0
+    assert_services_identical(ref, mp_svc)
+
+
+# ---------------------------------------------------------------------------
+# 3. worker death (real SIGKILL, not plan-injected)
+
+
+def test_mp_survives_worker_kill_mid_run():
+    cfg = service_cfg(n_clients=400)
+    # reference: in-process, driven with the same two-half request
+    # sequence (run_synthetic reseeds per call, so halves are comparable)
+    ref = build_service(cfg)
+    run_synthetic(ref, steps=5, churn=0.02, admits_per_step=3, seed=0)
+    run_synthetic(ref, steps=5, churn=0.02, admits_per_step=3, seed=0)
+    svc = build_service(cfg, scenario=ref.scenario, registry=ref.registry,
+                        executor="multiprocess", workers=2)
+    try:
+        run_synthetic(svc, steps=5, churn=0.02, admits_per_step=3, seed=0)
+        # kill a live worker outright between rounds; within the retry
+        # budget the final state must still match the unkilled reference
+        svc.executor._ensure_slots()
+        victim = svc.executor._slots[0]._proc
+        os.kill(victim.pid, signal.SIGKILL)
+        victim.join(timeout=10)
+        run_synthetic(svc, steps=5, churn=0.02, admits_per_step=3, seed=0)
+    finally:
+        svc.close()
+    assert svc.metrics.counters["worker_restarts"] >= 1
+    assert svc.metrics.counters["rounds_degraded"] == 0
+    assert_services_identical(ref, svc)
+
+
+def test_mp_requires_config():
+    cfg = service_cfg(n_clients=120)
+    svc = build_service(cfg)  # builds scenario/registry once
+    svc.close()
+    with pytest.raises(ValueError, match="ExperimentConfig"):
+        build_service(cfg, scenario=svc.scenario, registry=svc.registry,
+                      executor="multiprocess", config=None)

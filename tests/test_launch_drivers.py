@@ -48,9 +48,19 @@ def test_train_driver_loss_decreases(capsys):
     assert losses[-1] < losses[0] - 1.0, out
 
 
-def test_serve_driver_runs(capsys):
-    from repro.launch.serve import main
-    run_cli(main, ["serve", "--arch", "smollm-360m", "--reduced",
+def test_inference_demo_driver_runs(capsys):
+    from repro.launch.inference_demo import main
+    run_cli(main, ["inference_demo", "--arch", "smollm-360m", "--reduced",
                    "--batch", "2", "--prompt-len", "8", "--gen", "4"])
     out = capsys.readouterr().out
     assert "decoded" in out
+
+
+def test_serve_shim_warns_and_forwards():
+    # the old (misleading) name stays importable but deprecated
+    import importlib
+    import repro.launch.inference_demo as demo
+    with pytest.warns(DeprecationWarning, match="inference_demo"):
+        import repro.launch.serve as shim
+        importlib.reload(shim)
+    assert shim.main is demo.main

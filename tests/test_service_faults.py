@@ -1,0 +1,379 @@
+"""Deterministic fault injection (:mod:`repro.service.faults`) and the
+executors' retry / graceful-degradation machinery.
+
+The contract under test (docs/service.md):
+
+  1. **Plan purity** — every :class:`FaultPlan` decision is a counter
+     hash of ``(seed, kind, round, …)``: two plan instances with the
+     same seed agree on every draw; runs under the same plan produce
+     bit-identical event logs, and those logs replay like any other
+     (``executor="none"``, and ``incremental=False`` from-scratch
+     pricing).
+  2. **Retries are invisible when they succeed** — a run whose worker
+     crashes are all recovered within the retry budget ends in exactly
+     the state of a crash-free run.
+  3. **Degradation is principled** — a round whose worker died past the
+     retry budget closes with the dead shard's clients recorded exactly
+     as an explicit zero-utility ``report_round`` would have recorded
+     them (σ -> 0, participation counted, blocklist entry drawn).
+  4. The retry state machine itself, swept over (crash attempt, victim
+     worker, retry budget) — hypothesis-driven when available, seeded
+     fallback otherwise.
+"""
+import numpy as np
+import pytest
+
+try:  # the property sweep needs hypothesis; the seeded pins do not
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core.experiment import build_registry, build_scenario
+from repro.service import build_service, run_synthetic
+from repro.service.executors import WorkerDied, run_sharded_with_retries
+from repro.service.faults import FaultPlan, RetryPolicy
+
+from test_executor_mp import (assert_services_identical, drive,
+                              service_cfg)
+
+
+# ---------------------------------------------------------------------------
+# 1. plan purity
+
+
+def test_fault_plan_draws_are_pure_and_seed_sensitive():
+    a = FaultPlan(seed=3, worker_crash_rate=0.3, report_loss_rate=0.3,
+                  report_delay_rate=0.3)
+    b = FaultPlan(seed=3, worker_crash_rate=0.3, report_loss_rate=0.3,
+                  report_delay_rate=0.3)
+    c = FaultPlan(seed=4, worker_crash_rate=0.3, report_loss_rate=0.3,
+                  report_delay_rate=0.3)
+    grid = [(r, s, k) for r in range(40) for s in range(3)
+            for k in range(3)]
+    draws_a = [(a.worker_crash(r, s, k), a.report_lost(r, k),
+                a.report_delay(r)) for r, s, k in grid]
+    draws_b = [(b.worker_crash(r, s, k), b.report_lost(r, k),
+                b.report_delay(r)) for r, s, k in grid]
+    draws_c = [(c.worker_crash(r, s, k), c.report_lost(r, k),
+                c.report_delay(r)) for r, s, k in grid]
+    assert draws_a == draws_b                  # pure in (seed, keys)
+    assert draws_a != draws_c                  # seed actually matters
+    assert any(x[0] for x in draws_a)          # rates actually fire
+    assert not all(x[0] for x in draws_a)
+
+
+def test_fault_plan_parse():
+    p = FaultPlan.parse("crash=0.01,dropout=0.05,straggler=0.1,"
+                        "slowdown=0.5,delay=0.2,delay_steps=4,loss=0.02,"
+                        "seed=7,retries=3,backoff=2,timeout=20")
+    assert p.worker_crash_rate == 0.01 and p.dropout_rate == 0.05
+    assert p.straggler_rate == 0.1 and p.straggler_slowdown == 0.5
+    assert p.report_delay_rate == 0.2 and p.report_delay_steps == 4
+    assert p.report_loss_rate == 0.02 and p.seed == 7
+    assert p.retry == RetryPolicy(max_retries=3, backoff_steps=2,
+                                  timeout_steps=20)
+    assert p.any_faults
+    assert not FaultPlan().any_faults
+    with pytest.raises(ValueError, match="unknown fault spec key"):
+        FaultPlan.parse("crashes=0.5")
+
+
+def test_round_effects_drop_at_first_zero_excess():
+    cfg = service_cfg(n_clients=400)
+    sc = build_scenario(cfg)
+    reg = build_registry(cfg, sc)
+    dom_rows = reg.domain_rows(sc.domain_names)
+    # find a window where some domain's realized excess hits zero
+    plan = FaultPlan(seed=0, dropout_rate=1.0)
+    rng = np.random.default_rng(0)
+    hit = False
+    for now in range(0, sc.n_steps - 30, 37):
+        window = 30
+        exc = np.stack([sc.excess_at(now + s) for s in range(window)],
+                       axis=1)
+        rows = rng.choice(len(reg), size=12, replace=False)
+        drop, _ = plan.round_effects(sc, dom_rows, rows, now, window, 0)
+        assert drop is not None
+        for i, row in enumerate(rows):
+            zero = np.nonzero(exc[dom_rows[row]] <= 0.0)[0]
+            if zero.size:          # rate 1.0: must drop at first zero
+                assert drop[i] == zero[0]
+                hit = True
+            else:
+                assert drop[i] == -1
+    assert hit, "scenario never had zero excess — test is vacuous"
+
+
+# ---------------------------------------------------------------------------
+# 2. faulted runs are deterministic and replay bit-identically
+
+
+FAULTY = dict(seed=5, dropout_rate=0.5, straggler_rate=0.3,
+              report_delay_rate=0.4, report_delay_steps=2,
+              report_loss_rate=0.3)
+
+
+def test_same_plan_same_log_and_replay():
+    cfg = service_cfg(n_clients=400)
+    plan = FaultPlan(**FAULTY)
+    a = drive(cfg, steps=15, faults=plan)
+    b = drive(cfg, steps=15, scenario=a.scenario, registry=a.registry,
+              faults=plan)
+    assert a.metrics.counters["admitted"] > 0
+    # determinism requires the faults to have actually fired
+    fired = sum(a.metrics.counters[k] for k in
+                ("client_dropouts", "stragglers_injected",
+                 "reports_delayed", "reports_lost"))
+    assert fired > 0, "fault plan never fired — test is vacuous"
+    assert_services_identical(a, b)
+    # the recorded log replays with no plan at all (executor="none"),
+    # both incrementally and through from-scratch pricing
+    for increm in (True, False):
+        twin = build_service(cfg, scenario=a.scenario, registry=a.registry,
+                             executor="none", incremental=increm)
+        replayed = twin.replay(a.log)
+        assert len(replayed) == len(a.history)
+        for x, y in zip(a.history, replayed):
+            if x is None:
+                assert y is None
+            else:
+                np.testing.assert_array_equal(x, np.asarray(y.rows))
+        np.testing.assert_array_equal(twin.utility.sigmas(),
+                                      a.utility.sigmas())
+        np.testing.assert_array_equal(twin.blocklist.blocked,
+                                      a.blocklist.blocked)
+
+
+def test_report_loss_past_budget_closes_with_no_information():
+    """Every delivery attempt lost: the round degrades to a close that
+    frees the participants but records nothing (no σ, no blocklist)."""
+    cfg = service_cfg(n_clients=400)
+    plan = FaultPlan(seed=0, report_loss_rate=1.0,
+                     retry=RetryPolicy(max_retries=2, backoff_steps=1))
+    svc = drive(cfg, steps=12, churn=0.0, admits_per_step=1, faults=plan)
+    m = svc.metrics.counters
+    assert m["admitted"] > 0
+    assert m["rounds_degraded"] > 0
+    # each degraded round burned its full budget (3 lost deliveries, 2
+    # re-arms); rounds still mid-retry at run end may add more
+    assert m["reports_lost"] >= 3 * m["rounds_degraded"]
+    assert m["report_retries"] >= 2 * m["rounds_degraded"]
+    # zero-information: no round ever recorded statistics
+    assert np.all(svc.utility.participation_arr == 0)
+    assert not svc.blocklist.blocked.any()
+    for ev in svc.log:
+        if ev.kind == "report":
+            assert ev.payload["contributors"].size == 0
+    # ... and closed rounds' rows really freed up again
+    assert not svc.busy[np.concatenate(
+        [h for h in svc.history if h is not None])].all()
+
+
+# ---------------------------------------------------------------------------
+# 3. crash-retry invisibility and degraded-round parity
+
+
+def test_crash_then_retry_equals_no_crash():
+    cfg = service_cfg(n_clients=400)
+    ref = drive(cfg, steps=10)
+    # first attempt of the first few rounds crashes its worker; the
+    # default budget (2 retries) recovers every one
+    plan = FaultPlan(crash_schedule=tuple(
+        (rid, slot, 0) for rid in range(4) for slot in range(2)))
+    svc = drive(cfg, steps=10, scenario=ref.scenario, registry=ref.registry,
+                executor="multiprocess", workers=2, faults=plan)
+    m = svc.metrics.counters
+    assert m["worker_crashes"] >= 1
+    assert m["shard_retries"] >= 1
+    assert m["rounds_degraded"] == 0
+    assert_services_identical(ref, svc)
+
+
+def test_degraded_round_matches_explicit_zero_utility_report():
+    cfg = service_cfg(n_clients=400)
+    # slot 0 dies on every round's only attempt (budget 0): every
+    # admitted round closes partial, slot-1 shards surviving
+    plan = FaultPlan(crash_schedule=tuple((rid, 0, 0)
+                                          for rid in range(64)),
+                     retry=RetryPolicy(max_retries=0))
+    svc = build_service(cfg, executor="multiprocess", workers=2,
+                        faults=plan)
+    try:
+        run_synthetic(svc, steps=6, churn=0.0, admits_per_step=1, seed=0)
+        # degraded rounds run the full d_max window (the quorum is never
+        # reached) — push the clock past it so every report lands
+        svc.advance(40)
+    finally:
+        svc.close()
+    degraded = dict(svc.executor.degraded_rounds)
+    assert svc.metrics.counters["rounds_degraded"] > 0
+    assert degraded
+    all_dead = np.concatenate(list(degraded.values()))
+    assert np.all(svc.utility.sigmas()[all_dead] == 0.0)
+    assert np.all(svc.utility.participation_arr[all_dead] >= 1)
+
+    # twin: replay the same log, but close each degraded round by an
+    # explicit zero-utility report_round constructed in this test (dead
+    # rows appended with all-zero loss samples) — final σ/blocklist
+    # state must be identical, i.e. the executor's degraded payload IS
+    # the explicit zero-utility bookkeeping
+    twin = build_service(cfg, scenario=svc.scenario, registry=svc.registry,
+                         executor="none")
+    for ev in svc.log:
+        if ev.kind == "advance":
+            twin.advance(ev.n)
+        elif ev.kind == "register":
+            twin.register(ev.rows)
+        elif ev.kind == "deregister":
+            twin.deregister(ev.rows)
+        elif ev.kind == "admit":
+            twin.admit(ev.n, ev.d_max)
+        elif ev.kind == "report" and ev.round_id in degraded:
+            dead = np.sort(degraded[ev.round_id])
+            p = ev.payload
+            surv = p["contributors"][:p["contributors"].size - dead.size]
+            losses = (list(p["sample_losses"][:surv.size])
+                      + [np.zeros(1)] * dead.size)
+            twin.report_round(ev.round_id,
+                              np.concatenate([surv, dead]),
+                              p["participants"], losses,
+                              duration=p["duration"])
+        else:
+            p = ev.payload
+            twin.report_round(ev.round_id, p["contributors"],
+                              p["participants"], p["sample_losses"],
+                              duration=p["duration"])
+    np.testing.assert_array_equal(twin.utility.sigmas(),
+                                  svc.utility.sigmas())
+    np.testing.assert_array_equal(twin.utility.participation_arr,
+                                  svc.utility.participation_arr)
+    np.testing.assert_array_equal(twin.blocklist.blocked,
+                                  svc.blocklist.blocked)
+    for x, y in zip(twin.history, svc.history):
+        if x is None:
+            assert y is None
+        else:
+            np.testing.assert_array_equal(x, y)
+
+
+# ---------------------------------------------------------------------------
+# 4. the retry state machine, swept (no processes)
+
+
+class FakeSlot:
+    """In-memory worker slot: processes its queue lazily at collect();
+    a scheduled ``(shard, attempt)`` crash kills the slot and loses the
+    rest of its queue, exactly like a dead pipe."""
+
+    def __init__(self, sid, crashes=()):
+        self.sid = sid
+        self.crashes = set(crashes)
+        self.queue = []
+        self.dead = False
+        self.restarts = 0
+
+    def submit(self, task):
+        if not self.dead:
+            self.queue.append(dict(task))
+        # dead slot: the send lands in a pipe nobody reads
+
+    def collect(self):
+        if self.dead or not self.queue:
+            raise WorkerDied(self.sid)
+        t = self.queue.pop(0)
+        if (t["shard"], t["attempt"]) in self.crashes:
+            self.dead = True
+            self.queue.clear()
+            raise WorkerDied(self.sid)
+        return {"shard": t["shard"], "round_id": t.get("round_id", 0)}
+
+    def restart(self):
+        self.dead = False
+        self.queue = []
+        self.restarts += 1
+
+
+def check_single_victim(n_slots, victim, n_crashes, budget):
+    """One task per slot; the victim slot crashes on its task's first
+    ``n_crashes`` attempts. The task dies iff crashes exceed the
+    budget; everyone else is untouched."""
+    slots = [FakeSlot(s, crashes={(s, a) for a in range(n_crashes)}
+                      if s == victim else ())
+             for s in range(n_slots)]
+    tasks = [{"shard": i, "round_id": 9} for i in range(n_slots)]
+    assignment = [[i] for i in range(n_slots)]
+    restarts = []
+    results, dead = run_sharded_with_retries(
+        slots, assignment, tasks, max_retries=budget,
+        on_restart=lambda: restarts.append(1))
+    should_die = n_crashes > budget
+    assert (dead == [victim]) == should_die
+    assert (results[victim] is None) == should_die
+    expected_restarts = min(n_crashes, budget + 1)
+    assert slots[victim].restarts == expected_restarts
+    assert len(restarts) == expected_restarts
+    for i in range(n_slots):
+        if i != victim:
+            assert results[i] == {"shard": i, "round_id": 9}
+            assert slots[i].restarts == 0
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(n_slots=st.integers(1, 6), victim_seed=st.integers(0, 10_000),
+           n_crashes=st.integers(0, 5), budget=st.integers(0, 4))
+    def test_retry_machine_single_victim_property(n_slots, victim_seed,
+                                                  n_crashes, budget):
+        check_single_victim(n_slots, victim_seed % n_slots, n_crashes,
+                            budget)
+else:
+    def test_retry_machine_single_victim_property():
+        rng = np.random.default_rng(0)
+        for _ in range(200):     # seeded fallback sweep
+            n_slots = int(rng.integers(1, 7))
+            check_single_victim(n_slots, int(rng.integers(0, n_slots)),
+                                int(rng.integers(0, 6)),
+                                int(rng.integers(0, 5)))
+
+
+def test_retry_machine_coqueued_tasks_bump_together():
+    """Two tasks share the victim slot: a crash while processing the
+    first also charges the (lost) second task one attempt — and with
+    budget 0 both die; with budget 1 both recover."""
+    for budget, expect_dead in ((0, [0, 2]), (1, [])):
+        slots = [FakeSlot(0, crashes={(0, 0)}), FakeSlot(1)]
+        tasks = [{"shard": 0}, {"shard": 1}, {"shard": 2}]
+        assignment = [[0, 2], [1]]   # tasks 0 and 2 co-queued on slot 0
+        results, dead = run_sharded_with_retries(
+            slots, assignment, tasks, max_retries=budget)
+        assert dead == expect_dead
+        assert results[1] is not None
+        if not expect_dead:
+            assert all(r is not None for r in results)
+
+
+# ---------------------------------------------------------------------------
+# 5. fleet scale (slow): faulted 1M churn run replays bit-identically
+
+
+@pytest.mark.slow
+def test_faulted_1m_churn_replays_bit_identically():
+    cfg = service_cfg(n_clients=1_000_000, n=4, d_max=20)
+    plan = FaultPlan(seed=11, worker_crash_rate=0.2, dropout_rate=0.3,
+                     straggler_rate=0.2, report_delay_rate=0.3,
+                     report_loss_rate=0.2)
+    svc = drive(cfg, steps=3, churn=0.0005, admits_per_step=2,
+                executor="multiprocess", workers=2, faults=plan)
+    assert svc.metrics.counters["admitted"] > 0
+    for increm in (True, False):
+        twin = build_service(cfg, scenario=svc.scenario,
+                             registry=svc.registry, executor="none",
+                             incremental=increm)
+        replayed = twin.replay(svc.log)
+        assert len(replayed) == len(svc.history)
+        for x, y in zip(svc.history, replayed):
+            if x is None:
+                assert y is None
+            else:
+                np.testing.assert_array_equal(x, np.asarray(y.rows))

@@ -78,6 +78,9 @@ def service_table() -> str:
     for key, row in payload["configs"].items():
         mix = (f"{row['churn']*100:.0f}% churn, {row['admits_per_step']} "
                f"admit + {row['quotes_per_step']} quote")
+        if row.get("faults"):
+            mix += (f", {row.get('executor', '?')} x{row.get('workers', 0)}"
+                    f" + faults")
         rss = row.get("peak_rss_mb")
         rss = f"{rss/1024:.2f} GB" if rss == rss else "n/a"
         lines.append(

@@ -1,0 +1,73 @@
+"""CI gate: fail unless the test run actually collects hypothesis tests.
+
+The property suites import hypothesis behind a try/except and fall back
+to seeded sweeps when it is missing — correct for minimal environments,
+but it means a CI image that silently drops the dependency would run
+the fallbacks forever and nobody would notice. This tool collects the
+test tree (no execution) and counts items whose underlying function
+hypothesis has wrapped (the ``is_hypothesis_test`` attribute its
+``@given`` decorator sets), then fails below ``--min``.
+
+    PYTHONPATH=src python tools/check_hypothesis_collected.py --min 1 tests
+
+Exit codes: 0 ok, 1 hypothesis missing / too few property tests /
+collection error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from collections import Counter
+
+
+class _CollectionCounter:
+    """Pytest plugin: record nodeids of hypothesis-wrapped test items."""
+
+    def __init__(self):
+        self.hypothesis_items: list = []
+        self.total = 0
+
+    def pytest_collection_finish(self, session):
+        for item in session.items:
+            self.total += 1
+            fn = getattr(item, "obj", None)
+            if getattr(fn, "is_hypothesis_test", False):
+                self.hypothesis_items.append(item.nodeid)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", default=["tests"])
+    ap.add_argument("--min", type=int, default=1,
+                    help="minimum hypothesis-driven tests required")
+    args = ap.parse_args(argv)
+
+    try:
+        import hypothesis  # noqa: F401
+    except ImportError:
+        print("FAIL: hypothesis is not importable — the property suites "
+              "would run their seeded fallbacks only")
+        return 1
+    import pytest
+
+    counter = _CollectionCounter()
+    rc = pytest.main(["--collect-only", "-q", "-p", "no:cacheprovider",
+                      *args.paths], plugins=[counter])
+    if rc not in (0,):
+        print(f"FAIL: pytest collection exited {rc}")
+        return 1
+    by_module = Counter(nid.split("::")[0]
+                        for nid in counter.hypothesis_items)
+    for mod, n in sorted(by_module.items()):
+        print(f"{mod}: {n} hypothesis test(s)")
+    n_hyp = len(counter.hypothesis_items)
+    print(f"collected {counter.total} tests, {n_hyp} hypothesis-driven")
+    if n_hyp < args.min:
+        print(f"FAIL: {n_hyp} < --min {args.min} — hypothesis installed "
+              "but the property suites are not using it")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
